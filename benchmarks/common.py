@@ -1,0 +1,17 @@
+"""Shared benchmark utilities."""
+import json
+import os
+import time
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results",
+                           "benchmarks")
+
+
+def save_json(name, obj):
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    with open(os.path.join(RESULTS_DIR, name + ".json"), "w") as f:
+        json.dump(obj, f, indent=1)
+
+
+def csv_row(name, us_per_call, derived):
+    print(f"{name},{us_per_call:.2f},{derived}")

@@ -1,0 +1,34 @@
+"""Fig. 2: decode dominates end-to-end SLM inference on edge GPUs.
+
+The paper profiles LLaMA3.2-1B on Jetson Orin: 96.6% of time in decode
+(avg over I=64..1024, O<=512, batch 1).  We reproduce with a roofline
+model of the Orin GPU (prefill compute-bound at peak TOPS, decode
+bandwidth-bound at memory BW) — the same first-principles argument that
+motivates EdgeCIM."""
+import time
+
+import numpy as np
+
+from repro.configs.paper_slms import PAPER_SLMS
+
+# Jetson Orin (AGX) class: ~85 fp16 TFLOP/s effective tensor, 204.8 GB/s
+ORIN_FLOPS = 85e12
+ORIN_BW = 204.8e9
+ORIN_EFF = 0.6          # sustained fraction
+
+
+def run(csv=print):
+    t0 = time.perf_counter()
+    spec = PAPER_SLMS["llama3.2-1b"]
+    n = spec.active_params_per_token()
+    rows = []
+    for I in (64, 128, 256, 512, 1024):
+        for O in (64, 128, 256, 512):
+            t_prefill = 2 * n * I / (ORIN_FLOPS * ORIN_EFF)
+            t_decode = O * (n * 2.0) / (ORIN_BW * ORIN_EFF)   # fp16 weights
+            frac = t_decode / (t_decode + t_prefill)
+            rows.append({"I": I, "O": O, "decode_frac": frac})
+    avg = float(np.mean([r["decode_frac"] for r in rows]))
+    us = (time.perf_counter() - t0) * 1e6
+    csv(f"fig2_decode_fraction,{us:.2f},avg={avg:.3f};paper=0.966")
+    return {"rows": rows, "avg_decode_fraction": avg, "paper_claim": 0.966}

@@ -1,0 +1,36 @@
+"""Fig. 7: latency/energy trade-off across alpha (LLaMA3.2-3B INT8,
+128 prefill + 128 generated), 5 GA runs per alpha; red = run averages."""
+import time
+
+import numpy as np
+
+from repro.configs.paper_slms import PAPER_SLMS
+from repro.core import run_dse
+
+
+def run(csv=print, n_runs=5, pop=20, gens=50):
+    t0 = time.perf_counter()
+    spec = PAPER_SLMS["llama3.2-3b"]
+    out = {}
+    for alpha in (0.0, 0.25, 0.5, 0.75, 1.0):
+        lat, en = [], []
+        for seed in range(n_runs):
+            res = run_dse(spec, alpha=alpha, w_bits=8, a_bits=8, seed=seed,
+                          pop_size=pop, generations=gens)
+            lat.append(res.best_report.latency_s)
+            en.append(res.best_report.energy_j)
+        out[alpha] = {
+            "latency_mean": float(np.mean(lat)),
+            "latency_std": float(np.std(lat)),
+            "energy_mean": float(np.mean(en)),
+            "energy_std": float(np.std(en)),
+            "latency_runs": lat, "energy_runs": en,
+        }
+    us = (time.perf_counter() - t0) * 1e6
+    lat0 = out[0.0]["latency_mean"]
+    lat1 = out[1.0]["latency_mean"]
+    en0 = out[0.0]["energy_mean"]
+    en1 = out[1.0]["energy_mean"]
+    csv(f"fig7_alpha_sweep,{us:.2f},"
+        f"lat(a=0)/lat(a=1)={lat0/lat1:.2f};en(a=1)/en(a=0)={en1/en0:.2f}")
+    return out

@@ -1,0 +1,31 @@
+"""Fig. 8: decoding energy-latency product vs (prefill, generated) tokens
+for LLaMA3.2-3B INT8 at the alpha=0.5 optimal h*."""
+import time
+
+import numpy as np
+
+from repro.configs.paper_slms import PAPER_SLMS
+from repro.core import EdgeCIMSimulator, run_dse
+
+
+def run(csv=print):
+    t0 = time.perf_counter()
+    spec = PAPER_SLMS["llama3.2-3b"]
+    res = run_dse(spec, alpha=0.5, w_bits=8, a_bits=8, seed=0)
+    h = res.best
+    sim = EdgeCIMSimulator()
+    grid = {}
+    for pre in (64, 128, 256, 512, 1024):
+        for gen in (32, 64, 128, 256):
+            rep = sim.generate(spec, h, pre, gen, 8, 8)
+            grid[f"{pre}x{gen}"] = {"edp": rep.edp,
+                                    "latency_s": rep.latency_s,
+                                    "energy_j": rep.energy_j}
+    # trends: EDP grows fast in gen, slower in prefill (paper's finding)
+    gen_ratio = grid["128x256"]["edp"] / grid["128x64"]["edp"]
+    pre_ratio = grid["512x128"]["edp"] / grid["128x128"]["edp"]
+    us = (time.perf_counter() - t0) * 1e6
+    csv(f"fig8_token_scaling,{us:.2f},"
+        f"edp_gen_4x={gen_ratio:.1f};edp_prefill_4x={pre_ratio:.2f}")
+    return {"h_star": str(h), "grid": grid,
+            "gen_scaling_4x": gen_ratio, "prefill_scaling_4x": pre_ratio}

@@ -1,0 +1,38 @@
+"""Fig. 9: throughput, energy efficiency, and area across the paper's
+12-SLM suite for INT4 and INT8 at alpha=1 (per-model DSE, best of 3
+seeds, as the paper fixes alpha=1 'to prioritize latency')."""
+import time
+
+import numpy as np
+
+from repro.configs.paper_slms import PAPER_SLMS
+from repro.core import run_dse
+
+
+def run(csv=print, gens=50, pop=20, seeds=3):
+    t0 = time.perf_counter()
+    out = {}
+    for w_bits in (4, 8):
+        rows = {}
+        for name, spec in PAPER_SLMS.items():
+            best = None
+            for seed in range(seeds):
+                r = run_dse(spec, alpha=1.0, w_bits=w_bits, a_bits=8,
+                            seed=seed, pop_size=pop, generations=gens)
+                if best is None or r.best_cost < best.best_cost:
+                    best = r
+            rep = best.best_report
+            rows[name] = {"tokens_per_s": rep.tokens_per_s,
+                          "tokens_per_j": rep.tokens_per_j,
+                          "area_mm2": rep.area_mm2,
+                          "h_star": str(best.best)}
+        avg_tps = float(np.mean([r["tokens_per_s"] for r in rows.values()]))
+        avg_tpj = float(np.mean([r["tokens_per_j"] for r in rows.values()]))
+        out[f"int{w_bits}"] = {"models": rows, "avg_tokens_per_s": avg_tps,
+                               "avg_tokens_per_j": avg_tpj}
+    us = (time.perf_counter() - t0) * 1e6
+    a4 = out["int4"]
+    csv(f"fig9_slm_suite,{us:.2f},"
+        f"int4_avg={a4['avg_tokens_per_s']:.1f}tok/s(paper336.4);"
+        f"{a4['avg_tokens_per_j']:.1f}tok/J(paper173.0)")
+    return out

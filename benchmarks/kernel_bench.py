@@ -1,0 +1,56 @@
+"""Kernel microbench: cim_gemv / flash_decode / swiglu oracle paths.
+
+On CPU the Pallas kernels run in interpret mode (correctness only), so
+wall-times here measure the XLA reference path; the derived column
+reports the modeled TPU-v5e time for the same op (bytes / 819 GB/s —
+decode GEMV is bandwidth-bound, the paper's central observation)."""
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ref import ref_flash_decode, ref_qmatmul
+from repro.quant.qarray import quantize
+
+HBM_BW = 819e9
+
+
+def _time(f, *args, n=10):
+    f(*args).block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(n):
+        out = f(*args)
+    out.block_until_ready()
+    return (time.perf_counter() - t0) / n * 1e6
+
+
+def run(csv=print):
+    results = {}
+    for bits in (4, 8):
+        k, n = 4096, 4096
+        w = jax.random.normal(jax.random.PRNGKey(0), (k, n)) * 0.02
+        x = jax.random.normal(jax.random.PRNGKey(1), (1, k))
+        qt = quantize(w, bits=bits, group=128)
+        f = jax.jit(lambda x_, d, s: ref_qmatmul(
+            x_, type(qt)(d, s, qt.bits, qt.group, qt.axis, qt.orig_shape)))
+        us = _time(f, x, qt.data, qt.scales)
+        stream_bytes = qt.nbytes_packed()
+        tpu_us = stream_bytes / HBM_BW * 1e6
+        csv(f"cim_gemv_int{bits}_4096x4096,{us:.2f},"
+            f"v5e_bw_bound_us={tpu_us:.2f}")
+        results[f"int{bits}"] = {"cpu_us": us, "v5e_us": tpu_us}
+
+    b, g, qpk, hd, S = 8, 8, 4, 128, 8192
+    q = jax.random.normal(jax.random.PRNGKey(0), (b, g, qpk, hd))
+    kk = jax.random.normal(jax.random.PRNGKey(1), (b, S, g, hd),
+                           jnp.bfloat16)
+    v = jax.random.normal(jax.random.PRNGKey(2), (b, S, g, hd),
+                          jnp.bfloat16)
+    f = jax.jit(lambda q_, k_, v_: ref_flash_decode(q_, k_, v_,
+                                                    jnp.int32(S - 1)))
+    us = _time(f, q, kk, v)
+    kv_bytes = 2 * b * S * g * hd * 2
+    tpu_us = kv_bytes / HBM_BW * 1e6
+    csv(f"flash_decode_8k_kv,{us:.2f},v5e_bw_bound_us={tpu_us:.2f}")
+    results["flash_decode"] = {"cpu_us": us, "v5e_us": tpu_us}
+    return results

@@ -1,0 +1,43 @@
+"""Table I: normalized efficiency (TOPS/W/mm^2) vs prior CIM accelerators.
+
+EdgeCIM h* (Table I footnote): Cv=2 Ch=3 Tv_act=2 Th_act=4 T_total=8
+P^2=16.  Prior-work numbers are as published (TranCIM 3.06,
+iMTransformer 1.64)."""
+import time
+
+from repro.configs.paper_slms import PAPER_SLMS
+from repro.core import EdgeCIMSimulator, HWConfig
+
+PRIOR = {"trancim": 3.06, "imtransformer": 1.64, "edgecim_paper": 7.03}
+
+
+def run(csv=print):
+    t0 = time.perf_counter()
+    h = HWConfig(c_v=2, c_h=3, t_act_v=2, t_act_h=4, m_mult=1, pe_count=16)
+    sim = EdgeCIMSimulator()
+    rep = sim.generate(PAPER_SLMS["llama3.2-3b"], h, 128, 128, 4, 8)
+    ours_e2e = rep.tops_per_w_per_mm2()
+
+    # macro-referenced accounting (as CIM papers usually normalize):
+    # peak INT4 throughput at the [25] macro efficiency (89 TOPS/W INT8
+    # => ~178 TOPS/W INT4), peak power = peak_tops / macro TOPS/W,
+    # excluding DRAM (off-chip) like the prior-work numbers.
+    from repro.core import chip_area_mm2, peak_tops
+    tops4 = peak_tops(h, 4)
+    p_macro = tops4 / 178.0
+    area = chip_area_mm2(h)
+    ours_macro = tops4 / p_macro / area
+
+    us = (time.perf_counter() - t0) * 1e6
+    csv(f"table1_cim_comparison,{us:.2f},"
+        f"macro_norm={ours_macro:.2f};e2e_norm={ours_e2e:.2f};"
+        f"paper=7.03;trancim=3.06")
+    return {"edgecim_macro_normalized": ours_macro,
+            "edgecim_end_to_end": ours_e2e,
+            "peak_tops_int4": tops4, "area_mm2": area,
+            "avg_power_w_e2e": rep.energy_j / rep.latency_s,
+            "prior": PRIOR,
+            "note": ("prior-work TOPS/W/mm^2 figures are macro-level peak "
+                     "numbers excluding DRAM; our end-to-end number "
+                     "includes DRAM interface energy, hence lower. Both "
+                     "accountings reported; see EXPERIMENTS.md.")}

@@ -1,0 +1,41 @@
+"""Design-space exploration walkthrough: alpha sweep -> Pareto front.
+
+Reproduces the paper's Fig. 7 flow on any of the 12 benchmark SLMs:
+  PYTHONPATH=src python examples/dse_pareto.py --model qwen2.5-0.5b
+"""
+import argparse
+
+from repro.configs.paper_slms import PAPER_SLMS
+from repro.core import pareto_front, run_dse
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--model", default="llama3.2-3b",
+                    choices=sorted(PAPER_SLMS))
+    ap.add_argument("--w-bits", type=int, default=8, choices=[4, 8])
+    ap.add_argument("--runs", type=int, default=3)
+    args = ap.parse_args()
+    spec = PAPER_SLMS[args.model]
+
+    points = []
+    print(f"alpha sweep for {args.model} (INT{args.w_bits}):")
+    print(f"{'alpha':>6} {'latency_s':>12} {'energy_J':>10} "
+          f"{'tok/s':>8} {'area':>7}  h*")
+    for alpha in (0.0, 0.25, 0.5, 0.75, 1.0):
+        best = None
+        for seed in range(args.runs):
+            r = run_dse(spec, alpha=alpha, w_bits=args.w_bits, seed=seed)
+            if best is None or r.best_cost < best.best_cost:
+                best = r
+        rep = best.best_report
+        points.append((rep.latency_s, rep.energy_j, alpha, best.best))
+        print(f"{alpha:>6.2f} {rep.latency_s:>12.4f} {rep.energy_j:>10.4f} "
+              f"{rep.tokens_per_s:>8.1f} {rep.area_mm2:>7.1f}  {best.best}")
+
+    front = pareto_front([(p[0], p[1]) for p in points])
+    print("\nPareto-optimal alphas:", [points[i][2] for i in front])
+
+
+if __name__ == "__main__":
+    main()

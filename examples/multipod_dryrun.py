@@ -1,0 +1,31 @@
+"""Multi-pod dry-run walkthrough: lower one cell on the 512-chip mesh and
+print its roofline terms.  (The full 40-cell suite is
+scripts/run_dryrun_suite.sh; results land in results/dryrun/.)
+
+  PYTHONPATH=src python examples/multipod_dryrun.py --arch gemma3-4b \
+      --shape decode_32k --quant int4
+"""
+import argparse
+import subprocess
+import sys
+import os
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2.5-3b")
+    ap.add_argument("--shape", default="decode_32k")
+    ap.add_argument("--quant", default="int4")
+    ap.add_argument("--multi-pod", action="store_true")
+    args = ap.parse_args()
+    cmd = [sys.executable, "-m", "repro.launch.dryrun", "--arch", args.arch,
+           "--shape", args.shape, "--quant", args.quant]
+    if args.multi_pod:
+        cmd.append("--multi-pod")
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    raise SystemExit(subprocess.call(cmd, env=env))
+
+
+if __name__ == "__main__":
+    main()

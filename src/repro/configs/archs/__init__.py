@@ -1,0 +1,4 @@
+"""Per-arch config modules — importing this package registers all archs."""
+from . import (musicgen_medium, deepseek_v2_lite_16b, qwen3_moe_235b_a22b,
+               phi3_medium_14b, gemma2_27b, gemma3_4b, qwen2_5_3b,
+               pixtral_12b, xlstm_1_3b, zamba2_7b)  # noqa: F401

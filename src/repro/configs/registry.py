@@ -1,0 +1,94 @@
+"""Architecture registry (populated by the per-arch config modules)."""
+from __future__ import annotations
+
+from typing import Callable, Dict
+
+_REGISTRY: Dict[str, Callable] = {}
+_SMOKE: Dict[str, Callable] = {}
+_LONG_OK: Dict[str, bool] = {}
+
+SHAPE_IDS = ("train_4k", "prefill_32k", "decode_32k", "long_500k")
+
+# (seq_len, global_batch, kind) per assigned shape
+SHAPES = {
+    "train_4k": (4096, 256, "train"),
+    "prefill_32k": (32768, 32, "prefill"),
+    "decode_32k": (32768, 128, "decode"),
+    "long_500k": (524288, 1, "decode"),
+}
+
+
+def register(arch_id: str, full: Callable, smoke: Callable,
+             long_ok: bool = False) -> None:
+    _REGISTRY[arch_id] = full
+    _SMOKE[arch_id] = smoke
+    _LONG_OK[arch_id] = long_ok
+
+
+def supports_long(arch_id: str) -> bool:
+    _ensure_loaded()
+    return _LONG_OK[arch_id]
+
+
+def shapes_for(arch_id: str):
+    """Shape ids applicable to this arch (long_500k needs sub-quadratic
+    attention — skipped for pure full-attention archs, DESIGN.md SS4)."""
+    _ensure_loaded()
+    ids = ["train_4k", "prefill_32k", "decode_32k"]
+    if _LONG_OK[arch_id]:
+        ids.append("long_500k")
+    return tuple(ids)
+
+
+def _ensure_loaded() -> None:
+    # import all per-arch modules (they call register() at import time)
+    from . import archs  # noqa: F401
+
+
+def get_config(arch_id: str):
+    _ensure_loaded()
+    return _REGISTRY[arch_id]()
+
+
+def get_smoke_config(arch_id: str):
+    _ensure_loaded()
+    return _SMOKE[arch_id]()
+
+
+@property
+def _arch_ids():
+    _ensure_loaded()
+    return tuple(sorted(_REGISTRY))
+
+
+class _ArchIds:
+    """Lazy tuple-like view over registered arch ids."""
+
+    def __iter__(self):
+        _ensure_loaded()
+        return iter(sorted(_REGISTRY))
+
+    def __contains__(self, x):
+        _ensure_loaded()
+        return x in _REGISTRY
+
+    def __len__(self):
+        _ensure_loaded()
+        return len(_REGISTRY)
+
+    def __repr__(self):
+        _ensure_loaded()
+        return repr(tuple(sorted(_REGISTRY)))
+
+
+ARCH_IDS = _ArchIds()
+
+
+def input_specs(arch_id: str, shape_id: str, multi_pod: bool = False):
+    """ShapeDtypeStruct stand-ins for every model input of (arch, shape).
+
+    Defined in launch.dryrun's support module to keep jax imports out of the
+    registry; re-exported here for convenience.
+    """
+    from repro.launch.specs import input_specs as _impl
+    return _impl(arch_id, shape_id, multi_pod=multi_pod)

@@ -1,0 +1,4 @@
+"""Deterministic synthetic data pipeline."""
+from .synthetic import SyntheticLM, DataConfig
+
+__all__ = ["SyntheticLM", "DataConfig"]

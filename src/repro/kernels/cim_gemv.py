@@ -1,0 +1,103 @@
+"""`cim_gemv` — quantized weight-stationary GEMV/GEMM Pallas TPU kernel.
+
+The EdgeCIM DCIM macro, rethought for the TPU memory hierarchy
+(DESIGN.md SS2): instead of bit-serial SRAM arrays, packed INT4/INT8
+weight blocks stream HBM -> VMEM through the Pallas grid pipeline (the
+hardware double-buffering plays the paper's "active tiles prefetch while
+compute proceeds" role), are dequantized in-register against per-group
+scales, and hit the MXU as fp32 tiles.  The K-grid dimension is the
+paper's partition stream; accumulation lives in a VMEM fp32 scratch.
+
+Block shapes are MXU-aligned (multiples of 128 on the N dim; the K block
+a multiple of the quantization group so scales tile cleanly).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_N = 256
+DEFAULT_BLOCK_K = 512
+
+
+def _dequant_block_int4(w_ref, s_ref, group: int) -> jax.Array:
+    """(K/2, N) uint8 packed + (K/group, N) scales -> (K, N) f32."""
+    packed = w_ref[...]
+    lo = (packed & 0xF).astype(jnp.int8) - 8
+    hi = (packed >> 4).astype(jnp.int8) - 8
+    k2, n = packed.shape
+    q = jnp.stack([lo, hi], axis=1).reshape(2 * k2, n)       # (K, N) int8
+    scales = s_ref[...].astype(jnp.float32)                   # (K/g, N)
+    qg = q.reshape(scales.shape[0], group, n).astype(jnp.float32)
+    return (qg * scales[:, None, :]).reshape(2 * k2, n)
+
+
+def _dequant_block_int8(w_ref, s_ref, group: int) -> jax.Array:
+    q = w_ref[...]
+    k, n = q.shape
+    scales = s_ref[...].astype(jnp.float32)
+    qg = q.reshape(scales.shape[0], group, n).astype(jnp.float32)
+    return (qg * scales[:, None, :]).reshape(k, n)
+
+
+def _kernel(x_ref, w_ref, s_ref, o_ref, acc_ref, *, bits: int, group: int,
+            n_k: int):
+    k_idx = pl.program_id(1)
+
+    @pl.when(k_idx == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    if bits == 4:
+        w = _dequant_block_int4(w_ref, s_ref, group)
+    else:
+        w = _dequant_block_int8(w_ref, s_ref, group)
+    x = x_ref[...].astype(jnp.float32)
+    acc_ref[...] += jnp.dot(x, w, preferred_element_type=jnp.float32)
+
+    @pl.when(k_idx == n_k - 1)
+    def _done():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "group", "block_n",
+                                             "block_k", "interpret"))
+def cim_gemv(x: jax.Array, packed: jax.Array, scales: jax.Array,
+             bits: int = 4, group: int = 128,
+             block_n: int = DEFAULT_BLOCK_N, block_k: int = DEFAULT_BLOCK_K,
+             interpret: bool = False) -> jax.Array:
+    """x: (M, K) bf16/f32; packed: (K/2, N) uint8 [int4] or (K, N) int8;
+    scales: (K/group, N) bf16.  Returns (M, N) in x.dtype.
+
+    Grid = (N blocks "parallel", K blocks "arbitrary"): K innermost so the
+    fp32 accumulator carries across the weight-partition stream, exactly
+    the EdgeCIM accumulate-across-partitions schedule (Sec. III-C1).
+    """
+    m, K = x.shape
+    N = packed.shape[-1]
+    block_k = min(block_k, K)
+    block_n = min(block_n, N)
+    assert K % block_k == 0, (K, block_k)
+    assert N % block_n == 0, (N, block_n)
+    assert block_k % group == 0, (block_k, group)
+    n_k = K // block_k
+    grid = (N // block_n, n_k)
+    w_rows = block_k // 2 if bits == 4 else block_k
+
+    return pl.pallas_call(
+        functools.partial(_kernel, bits=bits, group=group, n_k=n_k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((m, block_k), lambda n, k: (0, k)),
+            pl.BlockSpec((w_rows, block_n), lambda n, k: (k, n)),
+            pl.BlockSpec((block_k // group, block_n), lambda n, k: (k, n)),
+        ],
+        out_specs=pl.BlockSpec((m, block_n), lambda n, k: (0, n)),
+        out_shape=jax.ShapeDtypeStruct((m, N), x.dtype),
+        scratch_shapes=[pltpu.VMEM((m, block_n), jnp.float32)],
+        interpret=interpret,
+    )(x, packed, scales)

@@ -1,0 +1,103 @@
+"""`flash_decode` — KV-block streamed decode attention Pallas kernel.
+
+EdgeCIM's attention stage (Sec. III-C2): K/V stream from DRAM in blocks of
+(b x d_h); block-level scores feed a block-wise softmax unit following
+FlashAttention.  On TPU: the KV-sequence grid dimension streams cache
+blocks HBM -> VMEM, an online-softmax state (m, l, acc) carried in VMEM
+scratch plays the paper's accumulators, and sliding-window layers
+(gemma-style locals) mask at block granularity.
+
+Layout: one grid step per (batch*kv_head, kv block); GQA query groups ride
+along in the q block (qpk x hd tile).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_S = 512
+NEG_INF = -1.0e30
+
+
+def _kernel(pos_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            block_s: int, n_s: int, scale: float, window: int,
+            attn_cap: float):
+    s_idx = pl.program_id(1)
+
+    @pl.when(s_idx == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    pos = pos_ref[0]
+    q = q_ref[0].astype(jnp.float32)                    # (qpk, hd)
+    k = k_ref[0].astype(jnp.float32)                    # (block_s, hd)
+    v = v_ref[0].astype(jnp.float32)
+
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+    if attn_cap:
+        s = attn_cap * jnp.tanh(s / attn_cap)
+    k_pos = s_idx * block_s + jax.lax.broadcasted_iota(
+        jnp.int32, (1, block_s), 1)
+    valid = k_pos <= pos
+    if window:
+        valid = valid & (pos - k_pos < window)
+    s = jnp.where(valid, s, NEG_INF)                    # (qpk, block_s)
+
+    m_prev = m_ref[...]                                 # (qpk, 1)
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new)
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jnp.dot(
+        p, v, preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(s_idx == n_s - 1)
+    def _done():
+        o_ref[0] = (acc_ref[...] /
+                    jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_s", "window",
+                                             "attn_cap", "interpret"))
+def flash_decode(q: jax.Array, k: jax.Array, v: jax.Array, pos: jax.Array,
+                 block_s: int = DEFAULT_BLOCK_S, window: int = 0,
+                 attn_cap: float = 0.0, interpret: bool = False
+                 ) -> jax.Array:
+    """q: (bg, qpk, hd); k, v: (bg, S, hd); pos: scalar int32.
+
+    bg = batch * kv_heads (flattened outer grid).  Returns (bg, qpk, hd).
+    """
+    bg, qpk, hd = q.shape
+    S = k.shape[1]
+    block_s = min(block_s, S)
+    assert S % block_s == 0
+    n_s = S // block_s
+    scale = 1.0 / (hd ** 0.5)
+    pos_arr = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (1,))
+
+    return pl.pallas_call(
+        functools.partial(_kernel, block_s=block_s, n_s=n_s, scale=scale,
+                          window=window, attn_cap=attn_cap),
+        grid=(bg, n_s),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, qpk, hd), lambda b, s: (b, 0, 0)),
+            pl.BlockSpec((1, block_s, hd), lambda b, s: (b, s, 0)),
+            pl.BlockSpec((1, block_s, hd), lambda b, s: (b, s, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, qpk, hd), lambda b, s: (b, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((bg, qpk, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((qpk, 1), jnp.float32),
+            pltpu.VMEM((qpk, 1), jnp.float32),
+            pltpu.VMEM((qpk, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(pos_arr, q, k, v)

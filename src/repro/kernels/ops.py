@@ -1,0 +1,87 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+On the CPU container (no TPU backend) the kernels execute in
+interpret=True mode; the same call sites compile to real Mosaic kernels on
+TPU.  `qmatmul` additionally falls back to the pure-jnp reference when
+shapes are not tile-aligned (ragged edges) so model code can call it
+unconditionally.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.quant.qarray import QTensor, maybe_dequantize
+
+from .cim_gemv import cim_gemv
+from .flash_decode import flash_decode
+from .ref import ref_flash_decode, ref_qmatmul, ref_swiglu_qgemv
+from .swiglu_gemv import swiglu_qgemv
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _tile_ok(qt: QTensor) -> bool:
+    K, N = qt.orig_shape[0], qt.orig_shape[-1]
+    return (qt.ndim == 2 and qt.axis == -2 and K % qt.group == 0
+            and N % 128 == 0 and K % 256 == 0)
+
+
+def qmatmul(x: jax.Array, w: Any) -> jax.Array:
+    """x @ W for dense or QTensor weights, kernel-accelerated when aligned."""
+    if not isinstance(w, QTensor):
+        return x @ w
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    if _tile_ok(w) and x2.shape[0] <= 1024:
+        out = cim_gemv(x2, w.data, w.scales, bits=w.bits, group=w.group,
+                       interpret=_interpret())
+    else:
+        out = ref_qmatmul(x2, w)
+    return out.reshape(*lead, w.orig_shape[-1])
+
+
+def qmatmul_xla(x: jax.Array, w: Any) -> jax.Array:
+    """Dequant-then-matmul on the XLA path (used for pjit lowering: keeps
+    HLO free of pallas custom-calls while preserving the quantized bytes)."""
+    if not isinstance(w, QTensor):
+        return x @ w
+    return ref_qmatmul(x, w)
+
+
+def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                     pos: jax.Array, window: int = 0, attn_cap: float = 0.0,
+                     use_kernel: bool = True) -> jax.Array:
+    """q: (b,g,qpk,hd); k/v: (b,S,g,hd) -> (b,g,qpk,hd)."""
+    b, g, qpk, hd = q.shape
+    S = k.shape[1]
+    if not use_kernel or S % 512 != 0:
+        return ref_flash_decode(q, k, v, pos, window, attn_cap)
+    qf = q.reshape(b * g, qpk, hd)
+    kf = k.swapaxes(1, 2).reshape(b * g, S, hd)
+    vf = v.swapaxes(1, 2).reshape(b * g, S, hd)
+    out = flash_decode(qf, kf, vf, pos, window=window, attn_cap=attn_cap,
+                       interpret=_interpret())
+    return out.reshape(b, g, qpk, hd)
+
+
+def swiglu(x: jax.Array, w_gate: Any, w_up: Any) -> jax.Array:
+    """Fused quantized SwiGLU when aligned; reference otherwise."""
+    if (isinstance(w_gate, QTensor) and isinstance(w_up, QTensor)
+            and _tile_ok(w_gate) and _tile_ok(w_up)):
+        lead = x.shape[:-1]
+        x2 = x.reshape(-1, x.shape[-1])
+        out = swiglu_qgemv(x2, w_gate.data, w_gate.scales, w_up.data,
+                           w_up.scales, bits=w_gate.bits, group=w_gate.group,
+                           interpret=_interpret())
+        return out.reshape(*lead, w_gate.orig_shape[-1])
+    g = x @ maybe_dequantize(w_gate) if not isinstance(w_gate, jax.Array) \
+        else x @ w_gate
+    u = x @ maybe_dequantize(w_up) if not isinstance(w_up, jax.Array) \
+        else x @ w_up
+    gf = g.astype(jnp.float32)
+    return (gf * jax.nn.sigmoid(gf) * u.astype(jnp.float32)).astype(x.dtype)

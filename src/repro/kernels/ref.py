@@ -1,0 +1,49 @@
+"""Pure-jnp oracles for every Pallas kernel (and the lowering path used by
+the dry-run on the CPU backend — identical math, identical shardability)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.quant.qarray import QTensor, dequantize, maybe_dequantize
+
+
+def ref_qmatmul(x: jax.Array, w, out_dtype=None) -> jax.Array:
+    """x @ W with W dense or QTensor (dequant-then-matmul oracle)."""
+    wd = maybe_dequantize(w, jnp.bfloat16 if out_dtype is None else out_dtype)
+    return jnp.dot(x, wd.astype(x.dtype),
+                   preferred_element_type=jnp.float32).astype(
+        out_dtype or x.dtype)
+
+
+def ref_flash_decode(q: jax.Array, k: jax.Array, v: jax.Array,
+                     pos: jax.Array, window: int = 0,
+                     attn_cap: float = 0.0) -> jax.Array:
+    """Single-token decode attention oracle.
+
+    q: (b, g, qpk, hd); k, v: (b, S, g, hd); pos scalar; returns
+    (b, g, qpk, hd).
+    """
+    hd = q.shape[-1]
+    S = k.shape[1]
+    scores = jnp.einsum("bgph,bkgh->bgpk", q, k,
+                        preferred_element_type=jnp.float32)
+    scores = scores / jnp.sqrt(jnp.float32(hd))
+    if attn_cap:
+        scores = attn_cap * jnp.tanh(scores / attn_cap)
+    k_pos = jnp.arange(S)
+    mask = k_pos <= pos
+    if window:
+        mask = mask & (pos - k_pos < window)
+    scores = jnp.where(mask[None, None, None, :], scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bgpk,bkgh->bgph", w.astype(v.dtype), v)
+
+
+def ref_swiglu_qgemv(x: jax.Array, w_gate, w_up) -> jax.Array:
+    """Fused gate/up GEMV + SiLU*mul oracle. x: (m, d) -> (m, f)."""
+    g = ref_qmatmul(x, w_gate, out_dtype=jnp.float32)
+    u = ref_qmatmul(x, w_up, out_dtype=jnp.float32)
+    return (g * jax.nn.sigmoid(g) * u).astype(x.dtype)

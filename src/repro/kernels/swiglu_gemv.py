@@ -1,0 +1,74 @@
+"""`swiglu_gemv` — fused gate/up quantized GEMV + SiLU*mul epilogue.
+
+EdgeCIM's FFN stage maps the up and gate matrices onto the PEs *in
+parallel* and fuses activation + elementwise-multiply on dedicated units
+(Sec. III-C4).  TPU image: both quantized weight blocks ride the same
+K-stream; the SiLU*mul epilogue runs on the VPU at the last K step, so the
+intermediate gate/up activations never round-trip to HBM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .cim_gemv import (_dequant_block_int4, _dequant_block_int8,
+                       DEFAULT_BLOCK_K, DEFAULT_BLOCK_N)
+
+
+def _kernel(x_ref, wg_ref, sg_ref, wu_ref, su_ref, o_ref, accg_ref,
+            accu_ref, *, bits: int, group: int, n_k: int):
+    k_idx = pl.program_id(1)
+
+    @pl.when(k_idx == 0)
+    def _init():
+        accg_ref[...] = jnp.zeros_like(accg_ref)
+        accu_ref[...] = jnp.zeros_like(accu_ref)
+
+    deq = _dequant_block_int4 if bits == 4 else _dequant_block_int8
+    x = x_ref[...].astype(jnp.float32)
+    accg_ref[...] += jnp.dot(x, deq(wg_ref, sg_ref, group),
+                             preferred_element_type=jnp.float32)
+    accu_ref[...] += jnp.dot(x, deq(wu_ref, su_ref, group),
+                             preferred_element_type=jnp.float32)
+
+    @pl.when(k_idx == n_k - 1)
+    def _done():
+        g = accg_ref[...]
+        o_ref[...] = (g * jax.nn.sigmoid(g) * accu_ref[...]
+                      ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "group", "block_n",
+                                             "block_k", "interpret"))
+def swiglu_qgemv(x: jax.Array, wg_packed: jax.Array, wg_scales: jax.Array,
+                 wu_packed: jax.Array, wu_scales: jax.Array, bits: int = 4,
+                 group: int = 128, block_n: int = DEFAULT_BLOCK_N,
+                 block_k: int = DEFAULT_BLOCK_K, interpret: bool = False
+                 ) -> jax.Array:
+    """x: (M, K); gate/up packed like cim_gemv. Returns (M, F)."""
+    m, K = x.shape
+    F = wg_packed.shape[-1]
+    block_k = min(block_k, K)
+    block_n = min(block_n, F)
+    assert K % block_k == 0 and F % block_n == 0
+    assert block_k % group == 0
+    n_k = K // block_k
+    w_rows = block_k // 2 if bits == 4 else block_k
+
+    wspec = pl.BlockSpec((w_rows, block_n), lambda n, k: (k, n))
+    sspec = pl.BlockSpec((block_k // group, block_n), lambda n, k: (k, n))
+    return pl.pallas_call(
+        functools.partial(_kernel, bits=bits, group=group, n_k=n_k),
+        grid=(F // block_n, n_k),
+        in_specs=[pl.BlockSpec((m, block_k), lambda n, k: (0, k)),
+                  wspec, sspec, wspec, sspec],
+        out_specs=pl.BlockSpec((m, block_n), lambda n, k: (0, n)),
+        out_shape=jax.ShapeDtypeStruct((m, F), x.dtype),
+        scratch_shapes=[pltpu.VMEM((m, block_n), jnp.float32),
+                        pltpu.VMEM((m, block_n), jnp.float32)],
+        interpret=interpret,
+    )(x, wg_packed, wg_scales, wu_packed, wu_scales)

@@ -1,0 +1,227 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512")
+# ^ MUST precede every other import (jax locks device count on first init).
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell:  jax.jit(step, in_shardings=...).lower(*structs).compile()
+then record memory_analysis (fits-per-chip proof), cost_analysis (FLOPs /
+bytes for the roofline), and the collective bytes parsed from the
+optimized HLO.  Success for the 16x16 single-pod mesh AND the 2x16x16
+multi-pod mesh is the deliverable; results feed EXPERIMENTS.md.
+
+Usage:
+  python -m repro.launch.dryrun --arch gemma3-4b --shape train_4k
+  python -m repro.launch.dryrun --arch gemma3-4b --shape decode_32k \
+      --multi-pod --quant int4 --out results/
+  python -m repro.launch.dryrun --all        # every cell, both meshes
+"""
+import argparse
+import json
+import sys
+import time
+import traceback
+
+
+def run_cell(arch: str, shape_id: str, multi_pod: bool, quant: str,
+             out_dir: str = "results/dryrun", verbose: bool = True,
+             serve_sharding: bool = False, tag: str = "") -> dict:
+    import jax
+    from repro.configs.registry import SHAPES
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch.specs import build_cell
+    from repro.roofline.analysis import (Roofline, model_flops_for,
+                                         parse_collectives)
+
+    mesh_name = "multi" if multi_pod else "single"
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = mesh.devices.size
+    cell = build_cell(arch, shape_id, mesh, quant=quant,
+                      serve_sharding=serve_sharding)
+
+    with mesh:
+        jitted = jax.jit(cell.fn, in_shardings=cell.in_shardings,
+                         donate_argnums=cell.donate)
+        lowered = jitted.lower(*cell.args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        hlo = compiled.as_text()
+
+    coll = parse_collectives(hlo)
+    flops = float(cost.get("flops", 0.0))
+    hbytes = float(cost.get("bytes accessed", 0.0))
+    mem_d = None
+    if mem is not None:
+        mem_d = {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", 0),
+            "output_bytes": getattr(mem, "output_size_in_bytes", 0),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", 0),
+            "alias_bytes": getattr(mem, "alias_size_in_bytes", 0),
+            "code_bytes": getattr(mem, "generated_code_size_in_bytes", 0),
+        }
+        mem_d["peak_bytes"] = (mem_d["argument_bytes"]
+                               + mem_d["output_bytes"]
+                               + mem_d["temp_bytes"]
+                               - mem_d["alias_bytes"])
+
+    rf = Roofline(
+        arch=arch, shape_id=shape_id, kind=cell.kind, mesh=mesh_name,
+        quant=quant, flops=flops, hlo_bytes=hbytes,
+        collective_bytes=coll.total_bytes,
+        model_flops=model_flops_for(arch, shape_id, n_dev),
+        collective_detail=dict(coll.bytes_by_kind),
+        memory_per_device=mem_d)
+    rec = rf.to_dict()
+    rec.update({"t_lower_s": t_lower, "t_compile_s": t_compile,
+                "n_devices": n_dev, "status": "ok",
+                "collective_counts": dict(coll.count_by_kind),
+                "hlo_bytes_len": len(hlo)})
+
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        fn = f"{arch}__{shape_id}__{mesh_name}__{quant}{tag}.json"
+        with open(os.path.join(out_dir, fn), "w") as f:
+            json.dump(rec, f, indent=1)
+    if verbose:
+        print(f"[OK] {arch} {shape_id} {mesh_name} {quant}: "
+              f"compute {rf.t_compute*1e3:.2f}ms  mem {rf.t_memory*1e3:.2f}ms"
+              f"  coll {rf.t_collective*1e3:.2f}ms  dom={rf.dominant}  "
+              f"useful={rf.useful_flops_ratio:.2f}  "
+              f"peakHBM={mem_d['peak_bytes']/2**30:.2f}GiB  "
+              f"(lower {t_lower:.0f}s compile {t_compile:.0f}s)")
+        print("  memory_analysis:", mem_d)
+        print("  cost_analysis: flops=%.3e bytes=%.3e" % (flops, hbytes))
+        print("  collectives:", {k: f"{v/2**20:.1f}MiB"
+                                 for k, v in coll.bytes_by_kind.items()})
+    return rec
+
+
+def run_probe(arch: str, shape_id: str, quant: str,
+              out_dir: str = "results/probe", verbose: bool = True,
+              serve_sharding: bool = False, tag: str = "",
+              cfg_override=None) -> dict:
+    """Trip-count-correct roofline terms via two-point unrolled layer
+    extrapolation (launch/probe.py) — single-pod mesh."""
+    import jax
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch.probe import (extrapolate, probe_variants,
+                                    time_scan_corrections)
+    from repro.launch.specs import build_cell
+    from repro.roofline.analysis import (Roofline, model_flops_for,
+                                         parse_collectives)
+    from repro.configs.registry import get_config
+
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=False)
+    n_dev = mesh.devices.size
+    cfg_full = cfg_override if cfg_override is not None else get_config(arch)
+    (cfg1, u1), (cfg2, u2), u_full = probe_variants(cfg_full)
+
+    def measure(cfg_v):
+        cell = build_cell(arch, shape_id, mesh, quant=quant, cfg=cfg_v,
+                          serve_sharding=serve_sharding)
+        with mesh:
+            jitted = jax.jit(cell.fn, in_shardings=cell.in_shardings,
+                             donate_argnums=cell.donate)
+            compiled = jitted.lower(*cell.args).compile()
+            cost = compiled.cost_analysis()
+            coll = parse_collectives(compiled.as_text())
+        return {"flops": float(cost.get("flops", 0.0)),
+                "hlo_bytes": float(cost.get("bytes accessed", 0.0)),
+                "collective_bytes": coll.total_bytes,
+                "_detail": dict(coll.bytes_by_kind)}, cell.kind
+
+    m1, kind = measure(cfg1)
+    m2, _ = measure(cfg2)
+    tot = extrapolate(m1, m2, u1, u2, u_full)
+    detail = {k: (m1["_detail"].get(k, 0.0)
+                  + (m2["_detail"].get(k, 0.0) - m1["_detail"].get(k, 0.0))
+                  / (u2 - u1) * (u_full - u1))
+              for k in set(m1["_detail"]) | set(m2["_detail"])}
+    corr = time_scan_corrections(cfg_full, shape_id, n_dev)
+    tot["flops"] += corr["flops"]
+    tot["hlo_bytes"] += corr["bytes"]
+
+    rf = Roofline(arch=arch, shape_id=shape_id, kind=kind, mesh="single",
+                  quant=quant, flops=tot["flops"],
+                  hlo_bytes=tot["hlo_bytes"],
+                  collective_bytes=tot["collective_bytes"],
+                  model_flops=model_flops_for(arch, shape_id, n_dev),
+                  collective_detail=detail)
+    rec = rf.to_dict()
+    rec.update({"status": "ok", "probe": True, "units": [u1, u2, u_full],
+                "time_scan_correction": corr, "t_total_s": time.time() - t0})
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        fn = f"{arch}__{shape_id}__probe__{quant}{tag}.json"
+        with open(os.path.join(out_dir, fn), "w") as f:
+            json.dump(rec, f, indent=1)
+    if verbose:
+        print(f"[PROBE] {arch} {shape_id} {quant}: "
+              f"compute {rf.t_compute*1e3:.2f}ms mem {rf.t_memory*1e3:.2f}ms "
+              f"coll {rf.t_collective*1e3:.2f}ms dom={rf.dominant} "
+              f"useful={rf.useful_flops_ratio:.3f} "
+              f"rf={rf.roofline_fraction:.3f} ({time.time()-t0:.0f}s)")
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--quant", default="bf16",
+                    choices=["bf16", "int8", "int4"])
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--probe", action="store_true",
+                    help="roofline probe (unrolled 2-point extrapolation)")
+    ap.add_argument("--serve-sharding", action="store_true",
+                    help="no-FSDP decode rules (SSPerf)")
+    ap.add_argument("--tag", default="", help="suffix for result filename")
+    args = ap.parse_args()
+
+    if not args.all:
+        assert args.arch and args.shape
+        if args.probe:
+            run_probe(args.arch, args.shape, args.quant,
+                      args.out.replace("dryrun", "probe"),
+                      serve_sharding=args.serve_sharding, tag=args.tag)
+        else:
+            run_cell(args.arch, args.shape, args.multi_pod, args.quant,
+                     args.out, serve_sharding=args.serve_sharding,
+                     tag=args.tag)
+        return
+
+    from repro.configs.registry import shapes_for
+    from repro.configs import ARCH_IDS
+    failures = []
+    for arch in ARCH_IDS:
+        for shape_id in shapes_for(arch):
+            for multi in (False, True):
+                quants = ("bf16",) if SHAPES_KIND(shape_id) != "decode" \
+                    else ("bf16", "int4")
+                for q in quants:
+                    try:
+                        run_cell(arch, shape_id, multi, q, args.out)
+                    except Exception as e:  # noqa
+                        traceback.print_exc()
+                        failures.append((arch, shape_id, multi, q, str(e)))
+    if failures:
+        print("FAILURES:", failures)
+        sys.exit(1)
+
+
+def SHAPES_KIND(shape_id: str) -> str:
+    from repro.configs.registry import SHAPES
+    return SHAPES[shape_id][2]
+
+
+if __name__ == "__main__":
+    main()

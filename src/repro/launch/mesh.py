@@ -1,0 +1,20 @@
+"""Production mesh construction.
+
+Defined as FUNCTIONS (not module constants) so importing never touches
+jax device state — the dry-run sets XLA_FLAGS before any jax init.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips/pod; multi_pod adds a 2-pod leading axis (512)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """Single-device mesh for smoke tests / examples."""
+    return jax.make_mesh((1, 1), ("data", "model"))

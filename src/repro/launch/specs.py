@@ -1,0 +1,214 @@
+"""Dry-run cell construction: ShapeDtypeStruct inputs, step functions,
+and shardings for every (architecture x input-shape x mesh x precision).
+
+No allocation happens here: params, optimizer state, KV caches, and
+batches are all ShapeDtypeStructs (a 235B-param cell lowers on a laptop).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.registry import SHAPES, get_config, supports_long
+from repro.dist.axes import (MeshRules, MULTI_POD_RULES, SINGLE_POD_RULES,
+                             rules_for_mesh)
+from repro.dist.shard import (qtree_shardings, tree_shardings,
+                              use_mesh_rules)
+from repro.models import DecoderLM
+from repro.models.common import ParamSpec, spec_structs, tree_map_specs
+from repro.quant.ptq import quantize_structs
+from repro.train.adamw import AdamW, AdamWState, cosine_schedule
+
+# long-context rules: batch=1 cannot shard -> KV sequence spreads over
+# both mesh axes (split-K over the whole pod)
+LONG_SINGLE_RULES = MeshRules({
+    "batch": None, "fsdp": "data", "tp": "model", "expert": "model",
+    "kv_seq": ("model", "data"), "seq": None, "layers": None,
+})
+LONG_MULTI_RULES = MeshRules({
+    "batch": None, "fsdp": "data", "tp": "model", "expert": "model",
+    "kv_seq": ("pod", "model", "data"), "seq": None, "layers": None,
+})
+
+# serve-mode rules (§Perf iteration): decode is read-only over weights, so
+# FSDP sharding only adds a per-step all-gather; weights shard over the
+# model axis and replicate over data (batch) — the classic train-vs-serve
+# sharding split.  KV stays split-K over `model`.
+SERVE_SINGLE_RULES = MeshRules({
+    "batch": ("data",), "fsdp": None, "tp": "model", "expert": "model",
+    "kv_seq": "model", "seq": "data", "layers": None,
+})
+SERVE_MULTI_RULES = MeshRules({
+    "batch": ("pod", "data"), "fsdp": None, "tp": "model",
+    "expert": "model", "kv_seq": "model", "seq": "data", "layers": None,
+})
+SERVE_LONG_SINGLE_RULES = MeshRules({
+    "batch": None, "fsdp": None, "tp": "model", "expert": "model",
+    "kv_seq": ("model", "data"), "seq": None, "layers": None,
+})
+SERVE_LONG_MULTI_RULES = MeshRules({
+    "batch": None, "fsdp": None, "tp": "model", "expert": "model",
+    "kv_seq": ("pod", "model", "data"), "seq": None, "layers": None,
+})
+
+# reduced shapes for the subprocess integration tests (same code path,
+# tiny dims, 8 host devices)
+SMOKE_SHAPES = {
+    "train_4k": (64, 8, "train"),
+    "prefill_32k": (64, 4, "prefill"),
+    "decode_32k": (64, 8, "decode"),
+    "long_500k": (128, 1, "decode"),
+}
+
+
+def rules_for(mesh: Mesh, shape_id: str,
+              serve_sharding: bool = False) -> MeshRules:
+    multi = "pod" in mesh.axis_names
+    if serve_sharding:
+        if shape_id == "long_500k":
+            return SERVE_LONG_MULTI_RULES if multi else                 SERVE_LONG_SINGLE_RULES
+        return SERVE_MULTI_RULES if multi else SERVE_SINGLE_RULES
+    if shape_id == "long_500k":
+        return LONG_MULTI_RULES if multi else LONG_SINGLE_RULES
+    return MULTI_POD_RULES if multi else SINGLE_POD_RULES
+
+
+# ----------------------------------------------------------------------------
+# model input structs
+# ----------------------------------------------------------------------------
+def input_specs(arch_id: str, shape_id: str, multi_pod: bool = False,
+                shapes: Optional[dict] = None, cfg: Optional[Any] = None
+                ) -> Dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    cfg = cfg if cfg is not None else get_config(arch_id)
+    seq, batch, kind = (shapes or SHAPES)[shape_id]
+    s = 1 if kind == "decode" else seq
+    specs: Dict[str, jax.ShapeDtypeStruct] = {}
+    if cfg.embed_inputs:
+        specs["tokens"] = jax.ShapeDtypeStruct((batch, s), jnp.int32)
+    else:
+        specs["embeddings"] = jax.ShapeDtypeStruct((batch, s, cfg.d_model),
+                                                   jnp.bfloat16)
+    if kind == "train":
+        specs["labels"] = jax.ShapeDtypeStruct((batch, s), jnp.int32)
+    return specs
+
+
+def input_shardings(arch_id: str, shape_id: str, mesh: Mesh,
+                    rules: MeshRules) -> Dict[str, NamedSharding]:
+    cfg = get_config(arch_id)
+    _, _, kind = SHAPES[shape_id]
+    b = rules.get("batch")
+    out: Dict[str, NamedSharding] = {}
+    if cfg.embed_inputs:
+        out["tokens"] = NamedSharding(mesh, P(b, None))
+    else:
+        out["embeddings"] = NamedSharding(mesh, P(b, None, None))
+    if kind == "train":
+        out["labels"] = NamedSharding(mesh, P(b, None))
+    return out
+
+
+# ----------------------------------------------------------------------------
+# cell = (step fn, arg structs, shardings)
+# ----------------------------------------------------------------------------
+@dataclass
+class Cell:
+    arch: str
+    shape_id: str
+    kind: str
+    fn: Callable
+    args: Tuple[Any, ...]
+    in_shardings: Tuple[Any, ...]
+    donate: Tuple[int, ...]
+    model: DecoderLM
+
+
+def _opt_structs(specs):
+    mu = tree_map_specs(
+        lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32), specs)
+    nu = tree_map_specs(
+        lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32), specs)
+    return AdamWState(step=jax.ShapeDtypeStruct((), jnp.int32), mu=mu, nu=nu)
+
+
+def _opt_shardings(specs, mesh, rules):
+    sh = tree_shardings(specs, mesh, rules)
+    return AdamWState(step=NamedSharding(mesh, P()),
+                      mu=sh, nu=jax.tree_util.tree_map(lambda x: x, sh))
+
+
+def build_cell(arch_id: str, shape_id: str, mesh: Mesh,
+               quant: str = "bf16", cfg: Optional[Any] = None,
+               shapes: Optional[dict] = None,
+               serve_sharding: bool = False) -> Cell:
+    """quant: bf16 | int8 | int4 (decode shapes only — the paper's serve
+    precision axis).  `cfg` overrides the registry config (probes pass
+    reduced-layer unrolled variants); `shapes` overrides SHAPES (smoke);
+    `serve_sharding` uses the no-FSDP decode rules (§Perf)."""
+    cfg = cfg if cfg is not None else get_config(arch_id)
+    seq, batch, kind = (shapes or SHAPES)[shape_id]
+    rules = rules_for(mesh, shape_id, serve_sharding)
+    model = DecoderLM(cfg)
+    specs = model.param_specs()
+    param_sh = tree_shardings(specs, mesh, rules)
+    inp = input_specs(arch_id, shape_id, "pod" in mesh.axis_names,
+                      shapes=shapes, cfg=cfg)
+    inp_sh = input_shardings(arch_id, shape_id, mesh, rules)
+
+    if kind == "train":
+        params = spec_structs(specs)
+        opt = AdamW(lr=cosine_schedule(3e-4, 100, 10000))
+        opt_state = _opt_structs(specs)
+        opt_sh = _opt_shardings(specs, mesh, rules)
+
+        def train_step(p, s, batch_):
+            with use_mesh_rules(mesh, rules):
+                loss, grads = jax.value_and_grad(model.loss)(p, batch_)
+                p2, s2 = opt.update(grads, s, p)
+                return p2, s2, loss
+
+        return Cell(arch_id, shape_id, kind, train_step,
+                    (params, opt_state, inp),
+                    (param_sh, opt_sh, inp_sh), donate=(0, 1), model=model)
+
+    if kind == "prefill":
+        params = spec_structs(specs)
+
+        if cfg.family in ("dense", "moe"):
+            def prefill_step(p, batch_):
+                with use_mesh_rules(mesh, rules):
+                    return model.prefill(p, batch_)
+        else:
+            def prefill_step(p, batch_):
+                with use_mesh_rules(mesh, rules):
+                    return model.forward(p, batch_)[:, -1:, :]
+
+        return Cell(arch_id, shape_id, kind, prefill_step, (params, inp),
+                    (param_sh, inp_sh), donate=(), model=model)
+
+    # ---- decode -----------------------------------------------------------
+    if quant in ("int4", "int8"):
+        bits = 4 if quant == "int4" else 8
+        params = quantize_structs(specs, bits=bits, group=128)
+        param_sh = qtree_shardings(specs, params, mesh, rules)
+    else:
+        params = spec_structs(specs)
+    cache_specs = model.cache_specs(batch, seq)
+    cache = spec_structs(cache_specs)
+    cache_sh = tree_shardings(cache_specs, mesh, rules)
+    pos = jax.ShapeDtypeStruct((), jnp.int32)
+
+    def serve_step(p, c, batch_, pos_):
+        with use_mesh_rules(mesh, rules):
+            return model.decode_step(p, c, batch_, pos_)
+
+    return Cell(arch_id, shape_id, kind, serve_step,
+                (params, cache, inp, pos),
+                (param_sh, cache_sh, inp_sh, NamedSharding(mesh, P())),
+                donate=(1,), model=model)

@@ -1,0 +1,51 @@
+"""Training launcher (CLI driver for the e2e train story).
+
+  PYTHONPATH=src python -m repro.launch.train --arch qwen2.5-3b --smoke \
+      --steps 100 --ckpt-dir /tmp/ck --resume
+Full-scale (real pod) runs use the same entry point without --smoke; on
+this CPU container only reduced configs are trainable.
+"""
+import argparse
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2.5-3b")
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced same-family config (CPU-trainable)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--seq-len", type=int, default=64)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--preempt-flag", default=None)
+    args = ap.parse_args()
+
+    from repro.configs import get_config, get_smoke_config
+    from repro.data import DataConfig, SyntheticLM
+    from repro.models import DecoderLM
+    from repro.train import AdamW, TrainConfig, Trainer, cosine_schedule
+
+    cfg = (get_smoke_config(args.arch) if args.smoke
+           else get_config(args.arch)).replace(dtype="float32", remat=False)
+    model = DecoderLM(cfg)
+    print(f"[train] {cfg.name}: {model.n_params()/1e6:.1f}M params")
+    data = SyntheticLM(DataConfig(vocab=cfg.vocab, seq_len=args.seq_len,
+                                  global_batch=args.global_batch))
+    opt = AdamW(lr=cosine_schedule(args.lr, 10, args.steps))
+    tr = Trainer(model, opt, data,
+                 TrainConfig(steps=args.steps, log_every=10, ckpt_every=50,
+                             ckpt_dir=args.ckpt_dir,
+                             preempt_flag=args.preempt_flag,
+                             microbatches=args.microbatches),
+                 event_hook=lambda e: print(f"  {e.kind} @{e.step} "
+                                            f"{e.payload}"))
+    out = tr.run(resume=args.resume)
+    print(f"[train] done @step {out['step']}  loss {out['losses'][-1]:.3f} "
+          f"(floor {data.bigram_entropy():.3f})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,12 @@
+"""Composable JAX model substrate (all assigned architecture families)."""
+from .config import (MLAConfig, MoEConfig, ModelConfig, SSMConfig,
+                     ZambaConfig)
+from .common import (ParamSpec, init_params, param_count, spec_structs,
+                     spec_axes, stack_specs, cross_entropy_loss)
+from .model import DecoderLM
+
+__all__ = [
+    "MLAConfig", "MoEConfig", "ModelConfig", "SSMConfig", "ZambaConfig",
+    "ParamSpec", "init_params", "param_count", "spec_structs", "spec_axes",
+    "stack_specs", "cross_entropy_loss", "DecoderLM",
+]

@@ -1,0 +1,214 @@
+"""Block assembly for every architecture family + scanned stacks.
+
+Families (DESIGN.md SS4):
+  dense / moe : [pre-norm attn, pre-norm FFN] x L, optional gemma-style
+                post-block norms, local/global flags scanned per layer.
+  xlstm       : groups of (slstm_every-1) mLSTM blocks + 1 sLSTM block.
+  zamba       : groups of `shared_every` Mamba2 blocks + one invocation of
+                a SHARED attention+MLP block with per-site LoRA deltas,
+                plus trailing Mamba2 layers.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .attention import attention_specs, attn_decode, attn_forward
+from .common import FSDP, NONE, TP, ParamSpec, layer_norm, rms_norm
+from .config import ModelConfig
+from .ffn import dense_ffn, dense_ffn_specs, ffn_forward, ffn_specs
+from .ssm import (mamba2_decode, mamba2_forward, mamba2_specs, mlstm_decode,
+                  mlstm_forward, mlstm_specs, slstm_decode, slstm_forward,
+                  slstm_specs)
+
+Params = Dict[str, Any]
+
+
+# ----------------------------------------------------------------------------
+# norms
+# ----------------------------------------------------------------------------
+def norm_specs(cfg: ModelConfig) -> Dict[str, ParamSpec]:
+    d = cfg.d_model
+    init = "zeros" if cfg.rms_scale_plus_one else "ones"
+    sp = {"scale": ParamSpec((d,), axes=(NONE,), init=init)}
+    if cfg.norm_kind == "layer":
+        sp["bias"] = ParamSpec((d,), axes=(NONE,), init="zeros")
+    return sp
+
+
+def apply_norm(p: Params, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    if cfg.norm_kind == "layer":
+        return layer_norm(x, p["scale"], p["bias"], cfg.norm_eps)
+    return rms_norm(x, p["scale"], cfg.norm_eps,
+                    scale_plus_one=cfg.rms_scale_plus_one)
+
+
+# ----------------------------------------------------------------------------
+# transformer block (dense / moe)
+# ----------------------------------------------------------------------------
+def transformer_block_specs(cfg: ModelConfig, dense_ffn_override: int = 0
+                            ) -> Dict[str, Any]:
+    sp: Dict[str, Any] = {
+        "ln_attn": norm_specs(cfg),
+        "attn": attention_specs(cfg),
+        "ln_ffn": norm_specs(cfg),
+        "ffn": (dense_ffn_specs(cfg, dense_ffn_override)
+                if dense_ffn_override else ffn_specs(cfg)),
+    }
+    if cfg.post_block_norm:
+        sp["post_attn"] = norm_specs(cfg)
+        sp["post_ffn"] = norm_specs(cfg)
+    return sp
+
+
+def transformer_block(p: Params, cfg: ModelConfig, x: jax.Array,
+                      positions: jax.Array, is_local,
+                      dense_override: bool = False
+                      ) -> Tuple[jax.Array, Dict]:
+    h = apply_norm(p["ln_attn"], cfg, x)
+    a, kv = attn_forward(p["attn"], cfg, h, positions, is_local)
+    if cfg.post_block_norm:
+        a = apply_norm(p["post_attn"], cfg, a)
+    x = x + a
+    h = apply_norm(p["ln_ffn"], cfg, x)
+    f = dense_ffn(p["ffn"], cfg, h) if dense_override \
+        else ffn_forward(p["ffn"], cfg, h)
+    if cfg.post_block_norm:
+        f = apply_norm(p["post_ffn"], cfg, f)
+    return x + f, kv
+
+
+def transformer_block_decode(p: Params, cfg: ModelConfig, x: jax.Array,
+                             cache: Dict, pos, is_local,
+                             dense_override: bool = False
+                             ) -> Tuple[jax.Array, Dict]:
+    h = apply_norm(p["ln_attn"], cfg, x)
+    a, cache = attn_decode(p["attn"], cfg, h, cache, pos, is_local)
+    if cfg.post_block_norm:
+        a = apply_norm(p["post_attn"], cfg, a)
+    x = x + a
+    h = apply_norm(p["ln_ffn"], cfg, x)
+    f = dense_ffn(p["ffn"], cfg, h) if dense_override \
+        else ffn_forward(p["ffn"], cfg, h)
+    if cfg.post_block_norm:
+        f = apply_norm(p["post_ffn"], cfg, f)
+    return x + f, cache
+
+
+# ----------------------------------------------------------------------------
+# xLSTM blocks
+# ----------------------------------------------------------------------------
+def mlstm_block_specs(cfg: ModelConfig) -> Dict[str, Any]:
+    return {"ln": norm_specs(cfg), "cell": mlstm_specs(cfg)}
+
+
+def slstm_block_specs(cfg: ModelConfig) -> Dict[str, Any]:
+    return {"ln": norm_specs(cfg), "cell": slstm_specs(cfg)}
+
+
+def mlstm_block(p, cfg, x):
+    return x + mlstm_forward(p["cell"], cfg, apply_norm(p["ln"], cfg, x))
+
+
+def slstm_block(p, cfg, x):
+    return x + slstm_forward(p["cell"], cfg, apply_norm(p["ln"], cfg, x))
+
+
+def mlstm_block_decode(p, cfg, x, cache):
+    out, cache = mlstm_decode(p["cell"], cfg, apply_norm(p["ln"], cfg, x),
+                              cache)
+    return x + out, cache
+
+
+def slstm_block_decode(p, cfg, x, cache):
+    out, cache = slstm_decode(p["cell"], cfg, apply_norm(p["ln"], cfg, x),
+                              cache)
+    return x + out, cache
+
+
+# ----------------------------------------------------------------------------
+# mamba block + zamba shared attention block
+# ----------------------------------------------------------------------------
+def mamba_block_specs(cfg: ModelConfig) -> Dict[str, Any]:
+    return {"ln": norm_specs(cfg), "cell": mamba2_specs(cfg)}
+
+
+def mamba_block(p, cfg, x):
+    return x + mamba2_forward(p["cell"], cfg, apply_norm(p["ln"], cfg, x))
+
+
+def mamba_block_decode(p, cfg, x, cache):
+    out, cache = mamba2_decode(p["cell"], cfg, apply_norm(p["ln"], cfg, x),
+                               cache)
+    return x + out, cache
+
+
+def zamba_shared_specs(cfg: ModelConfig) -> Dict[str, Any]:
+    """The SHARED attention+MLP block (one copy for the whole model)."""
+    z = cfg.zamba
+    shared_cfg = cfg.replace(d_ff=z.shared_d_ff, moe=None)
+    return {
+        "ln_attn": norm_specs(cfg),
+        "attn": attention_specs(shared_cfg),
+        "ln_ffn": norm_specs(cfg),
+        "ffn": dense_ffn_specs(shared_cfg),
+    }
+
+
+def zamba_lora_specs(cfg: ModelConfig) -> Dict[str, Any]:
+    """Per-invocation LoRA deltas on q/k/v + output gate projection."""
+    z = cfg.zamba
+    d, hd = cfg.d_model, cfg.hd()
+    r = z.lora_rank
+    sp = {}
+    for nm, out_dim in (("q", cfg.n_heads * hd), ("k", cfg.n_kv_heads * hd),
+                        ("v", cfg.n_kv_heads * hd)):
+        sp[f"lora_a_{nm}"] = ParamSpec((d, r), axes=(FSDP, NONE))
+        sp[f"lora_b_{nm}"] = ParamSpec((r, out_dim), axes=(NONE, TP),
+                                       init="zeros")
+    sp["out_proj"] = ParamSpec((d, d), axes=(FSDP, NONE))
+    return sp
+
+
+def _zamba_attn_params(shared: Params, lora: Params) -> Params:
+    """Materialize per-site attention weights = shared + LoRA delta."""
+    from repro.quant.qarray import maybe_dequantize as _deq
+    p = dict(shared["attn"])
+    for nm, key in (("q", "wq"), ("k", "wk"), ("v", "wv")):
+        delta = lora[f"lora_a_{nm}"] @ lora[f"lora_b_{nm}"]
+        base = _deq(p[key])
+        p[key] = base + delta.astype(base.dtype)
+    return p
+
+
+def zamba_shared_block(shared: Params, lora: Params, cfg: ModelConfig,
+                       x: jax.Array, positions: jax.Array
+                       ) -> Tuple[jax.Array, Dict]:
+    z = cfg.zamba
+    shared_cfg = cfg.replace(d_ff=z.shared_d_ff, moe=None)
+    attn_p = _zamba_attn_params(shared, lora)
+    h = apply_norm(shared["ln_attn"], cfg, x)
+    a, kv = attn_forward(attn_p, shared_cfg, h, positions, jnp.bool_(False))
+    from repro.kernels.ops import qmatmul_xla as _qmm
+    x = x + _qmm(a, lora["out_proj"])
+    h = apply_norm(shared["ln_ffn"], cfg, x)
+    f = dense_ffn(shared["ffn"], shared_cfg, h)
+    return x + f, kv
+
+
+def zamba_shared_block_decode(shared: Params, lora: Params, cfg: ModelConfig,
+                              x: jax.Array, cache: Dict, pos
+                              ) -> Tuple[jax.Array, Dict]:
+    z = cfg.zamba
+    shared_cfg = cfg.replace(d_ff=z.shared_d_ff, moe=None)
+    attn_p = _zamba_attn_params(shared, lora)
+    h = apply_norm(shared["ln_attn"], cfg, x)
+    a, cache = attn_decode(attn_p, shared_cfg, h, cache, pos,
+                           jnp.bool_(False))
+    from repro.kernels.ops import qmatmul_xla as _qmm
+    x = x + _qmm(a, lora["out_proj"])
+    h = apply_norm(shared["ln_ffn"], cfg, x)
+    f = dense_ffn(shared["ffn"], shared_cfg, h)
+    return x + f, cache

@@ -1,0 +1,203 @@
+"""Model substrate: parameter specs w/ logical sharding axes, norms, RoPE.
+
+Parameters are declared as `ParamSpec` pytrees (shape + dtype + logical
+axes + init).  This lets the same definition serve three consumers:
+  * `init_params`      — materialize real arrays (smoke tests, examples)
+  * `spec_structs`     — jax.ShapeDtypeStruct stand-ins (multi-pod dry-run:
+                         a 235B model is lowered without allocating a byte)
+  * `logical_sharding` — NamedSharding per leaf from mesh rules (dist/axes)
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Pytree = Any
+
+# logical axis names (mapped to mesh axes in dist/axes.py)
+BATCH = "batch"      # activation batch            -> (pod, data)
+FSDP = "fsdp"        # param fully-sharded dim     -> data
+TP = "tp"            # tensor-parallel dim          -> model
+EXPERT = "expert"    # MoE expert dim               -> model
+KV_SEQ = "kv_seq"    # decode KV sequence (split-K) -> model
+SEQ = "seq"          # long-context activation seq  -> data
+LAYERS = "layers"    # stacked-scan layer dim       -> replicated
+NONE = None
+
+
+@dataclass(frozen=True)
+class ParamSpec:
+    shape: Tuple[int, ...]
+    dtype: Any = jnp.bfloat16
+    axes: Tuple[Optional[str], ...] = ()
+    init: str = "normal"          # normal | zeros | ones | embed
+    scale: Optional[float] = None  # None => 1/sqrt(fan_in)
+
+    def __post_init__(self):
+        assert len(self.axes) == len(self.shape), (self.shape, self.axes)
+
+    def fan_in(self) -> int:
+        if len(self.shape) <= 1:
+            return self.shape[0] if self.shape else 1
+        return int(np.prod(self.shape[:-1]))
+
+    def struct(self) -> jax.ShapeDtypeStruct:
+        return jax.ShapeDtypeStruct(self.shape, self.dtype)
+
+    def materialize(self, key: jax.Array) -> jax.Array:
+        if self.init == "zeros":
+            return jnp.zeros(self.shape, self.dtype)
+        if self.init == "ones":
+            return jnp.ones(self.shape, self.dtype)
+        if self.init == "embed":
+            std = self.scale if self.scale is not None else 1.0
+            return (jax.random.normal(key, self.shape, jnp.float32) * std
+                    ).astype(self.dtype)
+        std = self.scale if self.scale is not None else 1.0 / math.sqrt(
+            max(self.fan_in(), 1))
+        return (jax.random.normal(key, self.shape, jnp.float32) * std
+                ).astype(self.dtype)
+
+    def stacked(self, n: int) -> "ParamSpec":
+        """Prepend a scanned-layers dim."""
+        return dataclasses.replace(self, shape=(n, *self.shape),
+                                   axes=(NONE, *self.axes))
+
+
+def is_spec(x: Any) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def tree_map_specs(fn: Callable[[ParamSpec], Any], tree: Pytree) -> Pytree:
+    return jax.tree_util.tree_map(fn, tree, is_leaf=is_spec)
+
+
+def stack_specs(tree: Pytree, n: int) -> Pytree:
+    return tree_map_specs(lambda s: s.stacked(n), tree)
+
+
+def spec_structs(tree: Pytree) -> Pytree:
+    return tree_map_specs(lambda s: s.struct(), tree)
+
+
+def spec_axes(tree: Pytree) -> Pytree:
+    return tree_map_specs(lambda s: s.axes, tree)
+
+
+def init_params(tree: Pytree, key: jax.Array,
+                dtype_override: Any = None) -> Pytree:
+    leaves, treedef = jax.tree_util.tree_flatten(tree, is_leaf=is_spec)
+    keys = jax.random.split(key, len(leaves))
+    out = []
+    for k, s in zip(keys, leaves):
+        arr = s.materialize(k)
+        if dtype_override is not None and jnp.issubdtype(arr.dtype, jnp.floating):
+            arr = arr.astype(dtype_override)
+        out.append(arr)
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def param_count(tree: Pytree) -> int:
+    leaves = jax.tree_util.tree_leaves(tree, is_leaf=is_spec)
+    return sum(int(np.prod(s.shape)) for s in leaves)
+
+
+# ----------------------------------------------------------------------------
+# numerics blocks
+# ----------------------------------------------------------------------------
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6,
+             scale_plus_one: bool = False) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    w = scale.astype(jnp.float32)
+    if scale_plus_one:          # gemma convention: weight stored as (w - 1)
+        w = w + 1.0
+    return (y * w).astype(x.dtype)
+
+
+def layer_norm(x: jax.Array, scale: jax.Array, bias: jax.Array,
+               eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32)
+            + bias.astype(jnp.float32)).astype(x.dtype)
+
+
+def softcap(x: jax.Array, cap: float) -> jax.Array:
+    return cap * jnp.tanh(x / cap)
+
+
+def rope_tables(positions: jax.Array, dim: int, theta: float = 10000.0
+                ) -> Tuple[jax.Array, jax.Array]:
+    """cos/sin tables for rotary embedding. positions: (...,) int32."""
+    assert dim % 2 == 0
+    freqs = 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+    angles = positions.astype(jnp.float32)[..., None] * freqs  # (..., dim/2)
+    return jnp.cos(angles), jnp.sin(angles)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x: (..., seq, heads, head_dim); cos/sin: (..., seq, head_dim/2).
+
+    Split-halves convention (llama/gemma style).
+    """
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    c = cos[..., None, :]
+    s = sin[..., None, :]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    return jnp.concatenate([xf1 * c - xf2 * s, xf2 * c + xf1 * s],
+                           axis=-1).astype(x.dtype)
+
+
+def swish(x: jax.Array) -> jax.Array:
+    return x * jax.nn.sigmoid(x)
+
+
+ACTIVATIONS: Dict[str, Callable[[jax.Array], jax.Array]] = {
+    "silu": swish,
+    "gelu": jax.nn.gelu,
+    "gelu_tanh": lambda x: jax.nn.gelu(x, approximate=True),
+    "relu": jax.nn.relu,
+}
+
+
+def cross_entropy_loss(logits: jax.Array, labels: jax.Array,
+                       ignore_id: int = -100) -> jax.Array:
+    """Mean CE over non-ignored positions. logits (b,s,v), labels (b,s)."""
+    lf = logits.astype(jnp.float32)
+    logz = jax.scipy.special.logsumexp(lf, axis=-1)
+    gold = jnp.take_along_axis(
+        lf, jnp.maximum(labels, 0)[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    mask = (labels != ignore_id).astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def scan_layers(body, carry, xs, unroll: bool = False, length=None):
+    """lax.scan, or a python loop producing identical results when
+    `unroll` (used by roofline probes: XLA cost analysis counts a
+    while-loop body once, an unrolled graph counts every layer)."""
+    if not unroll:
+        return jax.lax.scan(body, carry, xs, length=length)
+    if length is None:
+        length = jax.tree_util.tree_leaves(xs)[0].shape[0]
+    ys = []
+    for i in range(length):
+        x_i = jax.tree_util.tree_map(lambda a: a[i], xs)
+        carry, y = body(carry, x_i)
+        ys.append(y)
+    if ys and all(y is not None for y in ys):
+        ys = jax.tree_util.tree_map(lambda *a: jnp.stack(a), *ys)
+    else:
+        ys = None
+    return carry, ys

@@ -1,0 +1,133 @@
+"""Unified model configuration covering all assigned architecture families."""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class MLAConfig:
+    kv_lora_rank: int = 512
+    qk_nope_head_dim: int = 128
+    qk_rope_head_dim: int = 64
+    v_head_dim: int = 128
+    q_lora_rank: int = 0          # 0 = no query compression (V2-Lite)
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int = 64           # routed experts
+    top_k: int = 6
+    n_shared_experts: int = 2
+    d_ff_expert: int = 1408
+    capacity_factor: float = 1.25
+    router_dtype: str = "float32"
+    dispatch: str = "gather"      # gather | onehot (ablation / perf study)
+    first_dense_layers: int = 0   # deepseek: layer 0 is dense FFN
+    first_dense_d_ff: int = 0
+
+
+@dataclass(frozen=True)
+class SSMConfig:
+    # mamba2
+    d_state: int = 64
+    d_conv: int = 4
+    expand: int = 2
+    head_dim: int = 64            # mamba2 head dim (d_inner / n_heads)
+    chunk: int = 256
+    # xlstm
+    mlstm_heads: int = 4
+    slstm_every: int = 8          # 7:1 mLSTM:sLSTM -> one sLSTM per 8 layers
+    time_chunk: int = 64          # remat granularity of the time scan
+                                  # (SSPerf cell a: bwd saves chunk
+                                  # boundaries, not every step)
+    proj_factor_mlstm: float = 2.0
+    proj_factor_slstm: float = 4.0 / 3.0
+    conv_width: int = 4
+
+
+@dataclass(frozen=True)
+class ZambaConfig:
+    shared_every: int = 6         # shared attn+MLP invoked every 6 mamba layers
+    lora_rank: int = 64
+    shared_d_ff: int = 14336
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                   # dense | moe | xlstm | zamba
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: Optional[int] = None
+
+    # attention flavor
+    attn_kind: str = "gqa"        # gqa | mla
+    qkv_bias: bool = False
+    qk_norm: bool = False
+    attn_softcap: float = 0.0     # gemma2: 50.0
+    final_softcap: float = 0.0    # gemma2: 30.0
+    local_window: int = 0         # sliding-window size for local layers
+    local_pattern: int = 0        # N => pattern of N layers has 1 global
+                                  # (gemma2: 2 -> 1:1; gemma3: 6 -> 5:1)
+    rope_theta: float = 10000.0
+    rope_theta_local: float = 0.0  # gemma3 uses 10k local / 1M global
+
+    # ffn flavor
+    ffn_act: str = "silu"          # silu | gelu_tanh | gelu
+    ffn_gated: bool = True
+
+    # norm flavor
+    norm_kind: str = "rms"         # rms | layer
+    post_block_norm: bool = False  # gemma2/3: extra norms after attn/ffn
+    rms_scale_plus_one: bool = False  # gemma (1+w) convention
+    norm_eps: float = 1e-6
+
+    # embedding / head
+    tie_embeddings: bool = True
+    embed_scale: bool = False      # gemma: x *= sqrt(d_model)
+    embed_inputs: bool = True      # False => frontend stub provides embeddings
+    logit_dtype: str = "float32"
+
+    mla: Optional[MLAConfig] = None
+    moe: Optional[MoEConfig] = None
+    ssm: Optional[SSMConfig] = None
+    zamba: Optional[ZambaConfig] = None
+
+    # training numerics
+    dtype: str = "bfloat16"
+    remat: bool = True
+    # unroll scans into straight-line HLO (roofline probes: XLA cost
+    # analysis counts a while-loop body ONCE, so probes unroll)
+    unroll: bool = False
+    # Mamba2 SSD chunk scans stay scanned even in probes (unrolling 16+
+    # heavy einsum bodies explodes SPMD-partitioner time); their cost is
+    # closed-form corrected in launch/probe.py instead
+    unroll_ssm_chunks: bool = False
+
+    # --------------------------------------------------------------
+    def hd(self) -> int:
+        return self.head_dim if self.head_dim else self.d_model // self.n_heads
+
+    def activation_dtype(self):
+        return jnp.bfloat16 if self.dtype == "bfloat16" else jnp.float32
+
+    def q_per_kv(self) -> int:
+        return self.n_heads // self.n_kv_heads
+
+    def is_local_layer(self, i: int) -> bool:
+        """gemma-style alternation: in each `local_pattern` block, the LAST
+        layer is global, the rest local."""
+        if not self.local_window or not self.local_pattern:
+            return False
+        return (i % self.local_pattern) != (self.local_pattern - 1)
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)

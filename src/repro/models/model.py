@@ -1,0 +1,430 @@
+"""Unified decoder-only LM across all assigned architecture families.
+
+API:
+    model = DecoderLM(cfg)
+    specs  = model.param_specs()              # ParamSpec pytree
+    params = init_params(specs, key)          # materialize (smoke/examples)
+    loss   = model.loss(params, batch)        # training loss
+    logits, cache = model.prefill(params, inputs)
+    logits, cache = model.decode_step(params, cache, inputs, pos)
+    cache_specs   = model.cache_specs(batch, max_seq)  # ParamSpec pytree
+
+All paths are pure jnp/lax — lowerable under pjit on any mesh; sharding
+comes from ParamSpec logical axes + dist.constrain boundary hints.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.dist.shard import constrain
+from repro.kernels.ops import qmatmul_xla as qmm
+from repro.quant.qarray import QTensor, dequant_rows, maybe_dequantize as deq
+
+from .attention import empty_cache_spec
+from .blocks import (mamba_block, mamba_block_decode, mamba_block_specs,
+                     mlstm_block, mlstm_block_decode, mlstm_block_specs,
+                     norm_specs, apply_norm, slstm_block, slstm_block_decode,
+                     slstm_block_specs, transformer_block,
+                     transformer_block_decode, transformer_block_specs,
+                     zamba_lora_specs, zamba_shared_block,
+                     zamba_shared_block_decode, zamba_shared_specs)
+from .common import (BATCH, FSDP, KV_SEQ, NONE, TP, ParamSpec,
+                     cross_entropy_loss, init_params, param_count,
+                     scan_layers, softcap, stack_specs)
+from .config import ModelConfig
+from .ssm import mamba2_cache_spec, mlstm_cache_spec, slstm_cache_spec
+
+Params = Dict[str, Any]
+
+
+def _cache_param_specs(struct_tree, batch_axes_map) -> Any:
+    """ShapeDtypeStruct tree + per-leaf-name axes -> ParamSpec tree."""
+    return jax.tree_util.tree_map(
+        lambda s, ax: ParamSpec(tuple(s.shape), s.dtype, ax, init="zeros"),
+        struct_tree, batch_axes_map)
+
+
+class DecoderLM:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+
+    # ==================================================================
+    # parameter specs
+    # ==================================================================
+    def param_specs(self) -> Params:
+        cfg = self.cfg
+        sp: Params = {}
+        # (for frontend-stub archs the table still serves as the LM head)
+        sp["embed"] = ParamSpec((cfg.vocab, cfg.d_model), axes=(TP, FSDP),
+                                init="embed", scale=cfg.d_model ** -0.5)
+        if not cfg.tie_embeddings:
+            sp["head"] = ParamSpec((cfg.d_model, cfg.vocab), axes=(FSDP, TP))
+        sp["ln_final"] = norm_specs(cfg)
+
+        if cfg.family in ("dense", "moe"):
+            n_first = (cfg.moe.first_dense_layers
+                       if (cfg.moe and cfg.moe.first_dense_layers) else 0)
+            if n_first:
+                dense_ff = getattr(cfg.moe, "first_dense_d_ff", cfg.d_ff)
+                sp["first_blocks"] = stack_specs(
+                    transformer_block_specs(cfg, dense_ffn_override=dense_ff),
+                    n_first)
+            sp["blocks"] = stack_specs(transformer_block_specs(cfg),
+                                       cfg.n_layers - n_first)
+        elif cfg.family == "xlstm":
+            per = cfg.ssm.slstm_every
+            n_groups = cfg.n_layers // per
+            assert n_groups * per == cfg.n_layers
+            sp["mlstm"] = stack_specs(
+                stack_specs(mlstm_block_specs(cfg), per - 1), n_groups)
+            sp["slstm"] = stack_specs(slstm_block_specs(cfg), n_groups)
+        elif cfg.family == "zamba":
+            per = cfg.zamba.shared_every
+            n_groups = cfg.n_layers // per
+            n_tail = cfg.n_layers - n_groups * per
+            sp["mamba"] = stack_specs(
+                stack_specs(mamba_block_specs(cfg), per), n_groups)
+            if n_tail:
+                sp["mamba_tail"] = stack_specs(mamba_block_specs(cfg), n_tail)
+            sp["shared"] = zamba_shared_specs(cfg)
+            sp["lora"] = stack_specs(zamba_lora_specs(cfg), n_groups)
+        else:
+            raise ValueError(cfg.family)
+        return sp
+
+    def n_params(self) -> int:
+        return param_count(self.param_specs())
+
+    # ==================================================================
+    # embedding / head
+    # ==================================================================
+    def _embed(self, params: Params, inputs: Dict[str, jax.Array]
+               ) -> jax.Array:
+        cfg = self.cfg
+        if cfg.embed_inputs:
+            emb = params["embed"]
+            if isinstance(emb, QTensor):
+                h = dequant_rows(emb, inputs["tokens"],
+                                 cfg.activation_dtype())
+            else:
+                h = emb[inputs["tokens"]]
+        else:
+            h = inputs["embeddings"].astype(cfg.activation_dtype())
+        if cfg.embed_scale:
+            h = h * jnp.asarray(math.sqrt(cfg.d_model), h.dtype)
+        return h.astype(cfg.activation_dtype())
+
+    def _logits(self, params: Params, h: jax.Array) -> jax.Array:
+        cfg = self.cfg
+        h = apply_norm(params["ln_final"], cfg, h)
+        if cfg.tie_embeddings or "head" not in params:
+            logits = jnp.einsum("bsd,vd->bsv", h,
+                                deq(params["embed"]).astype(h.dtype),
+                                preferred_element_type=jnp.float32)
+        else:
+            logits = jnp.einsum("bsd,dv->bsv", h,
+                                deq(params["head"]).astype(h.dtype),
+                                preferred_element_type=jnp.float32)
+        if cfg.final_softcap:
+            logits = softcap(logits, cfg.final_softcap)
+        return constrain(logits, "batch", None, "tp")
+
+    def _local_flags(self, n: int) -> jnp.ndarray:
+        cfg = self.cfg
+        return jnp.array([cfg.is_local_layer(i) for i in range(n)],
+                         dtype=bool)
+
+    # ==================================================================
+    # full-sequence forward (training / prefill)
+    # ==================================================================
+    def forward(self, params: Params, inputs: Dict[str, jax.Array],
+                return_kv: bool = False):
+        cfg = self.cfg
+        h = self._embed(params, inputs)
+        b, s = h.shape[0], h.shape[1]
+        positions = jnp.arange(s, dtype=jnp.int32)
+        h = constrain(h, "batch", None, "tp")
+
+        if cfg.family in ("dense", "moe"):
+            h, kv = self._forward_transformer(params, h, positions, return_kv)
+        elif cfg.family == "xlstm":
+            h, kv = self._forward_xlstm(params, h), None
+        elif cfg.family == "zamba":
+            h, kv = self._forward_zamba(params, h, positions, return_kv)
+        logits = self._logits(params, h)
+        return (logits, kv) if return_kv else logits
+
+    def _maybe_remat(self, fn):
+        return jax.checkpoint(fn, prevent_cse=False) if self.cfg.remat else fn
+
+    def _forward_transformer(self, params, h, positions, return_kv):
+        cfg = self.cfg
+        n_first = (cfg.moe.first_dense_layers
+                   if (cfg.moe and cfg.moe.first_dense_layers) else 0)
+        kvs = {}
+
+        if n_first:
+            def first_body(x, layer_p):
+                x, kv = transformer_block(layer_p, cfg, x, positions,
+                                          jnp.bool_(False),
+                                          dense_override=True)
+                x = constrain(x, "batch", None, "tp")
+                return x, kv if return_kv else None
+            h, kv_f = scan_layers(self._maybe_remat(first_body), h,
+                                  params["first_blocks"], cfg.unroll)
+            if return_kv:
+                kvs["attn_first"] = kv_f
+
+        flags = self._local_flags(cfg.n_layers)[n_first:]
+
+        def body(x, inp):
+            layer_p, is_local = inp
+            x, kv = transformer_block(layer_p, cfg, x, positions, is_local)
+            x = constrain(x, "batch", None, "tp")
+            return x, kv if return_kv else None
+
+        h, kv_main = scan_layers(self._maybe_remat(body), h,
+                                 (params["blocks"], flags), cfg.unroll)
+        if return_kv:
+            kvs["attn"] = kv_main
+        return h, kvs
+
+    def _forward_xlstm(self, params, h):
+        cfg = self.cfg
+
+        def group_body(x, group_p):
+            mlstm_p, slstm_p = group_p
+
+            def inner(xi, lp):
+                xi = mlstm_block(lp, cfg, xi)
+                return constrain(xi, "batch", None, "tp"), None
+
+            x, _ = scan_layers(self._maybe_remat(inner), x, mlstm_p,
+                               cfg.unroll)
+            x = slstm_block(slstm_p, cfg, x)
+            return constrain(x, "batch", None, "tp"), None
+
+        h, _ = scan_layers(self._maybe_remat(group_body), h,
+                           (params["mlstm"], params["slstm"]), cfg.unroll)
+        return h
+
+    def _forward_zamba(self, params, h, positions, return_kv):
+        cfg = self.cfg
+        shared = params["shared"]
+
+        def group_body(x, group_p):
+            mamba_p, lora_p = group_p
+
+            def inner(xi, lp):
+                xi = mamba_block(lp, cfg, xi)
+                return constrain(xi, "batch", None, "tp"), None
+
+            x, _ = scan_layers(self._maybe_remat(inner), x, mamba_p,
+                               cfg.unroll)
+            x, kv = zamba_shared_block(shared, lora_p, cfg, x, positions)
+            return constrain(x, "batch", None, "tp"), \
+                kv if return_kv else None
+
+        h, kv = scan_layers(self._maybe_remat(group_body), h,
+                            (params["mamba"], params["lora"]), cfg.unroll)
+
+        if "mamba_tail" in params:
+            def tail(xi, lp):
+                xi = mamba_block(lp, cfg, xi)
+                return constrain(xi, "batch", None, "tp"), None
+            h, _ = scan_layers(self._maybe_remat(tail), h,
+                               params["mamba_tail"], cfg.unroll)
+        return h, ({"attn": kv} if return_kv else {})
+
+    # ==================================================================
+    # loss
+    # ==================================================================
+    def loss(self, params: Params, batch: Dict[str, jax.Array]) -> jax.Array:
+        logits = self.forward(params, batch)
+        return cross_entropy_loss(logits, batch["labels"])
+
+    # ==================================================================
+    # prefill: forward + return caches sized to the prompt
+    # ==================================================================
+    def prefill(self, params: Params, inputs: Dict[str, jax.Array]):
+        logits, kv = self.forward(params, inputs, return_kv=True)
+        return logits[:, -1:, :], kv
+
+    # ==================================================================
+    # decode
+    # ==================================================================
+    def decode_step(self, params: Params, cache: Any,
+                    inputs: Dict[str, jax.Array], pos: jax.Array):
+        """One token for every sequence in the batch.
+
+        inputs: {tokens: (b,1)} or {embeddings: (b,1,d)}; pos: scalar int32.
+        cache layout from `cache_specs`.
+        """
+        cfg = self.cfg
+        h = self._embed(params, inputs)
+        h = constrain(h, "batch", None, "tp")
+
+        if cfg.family in ("dense", "moe"):
+            h, cache = self._decode_transformer(params, h, cache, pos)
+        elif cfg.family == "xlstm":
+            h, cache = self._decode_xlstm(params, h, cache)
+        elif cfg.family == "zamba":
+            h, cache = self._decode_zamba(params, h, cache, pos)
+        logits = self._logits(params, h)
+        return logits, cache
+
+    def _decode_transformer(self, params, h, cache, pos):
+        cfg = self.cfg
+        n_first = (cfg.moe.first_dense_layers
+                   if (cfg.moe and cfg.moe.first_dense_layers) else 0)
+        if n_first:
+            def first_body(x, inp):
+                layer_p, c = inp
+                x, c = transformer_block_decode(layer_p, cfg, x, c, pos,
+                                                jnp.bool_(False),
+                                                dense_override=True)
+                return constrain(x, "batch", None, "tp"), c
+            h, cf = scan_layers(first_body, h,
+                                (params["first_blocks"],
+                                 cache["attn_first"]), cfg.unroll)
+            cache = dict(cache, attn_first=cf)
+
+        flags = self._local_flags(cfg.n_layers)[n_first:]
+
+        def body(x, inp):
+            layer_p, c, is_local = inp
+            x, c = transformer_block_decode(layer_p, cfg, x, c, pos, is_local)
+            return constrain(x, "batch", None, "tp"), c
+
+        h, cm = scan_layers(body, h, (params["blocks"], cache["attn"],
+                                      flags), cfg.unroll)
+        return h, dict(cache, attn=cm)
+
+    def _decode_xlstm(self, params, h, cache):
+        cfg = self.cfg
+
+        def group_body(x, inp):
+            (mlstm_p, slstm_p), (mc, sc) = inp
+
+            def inner(xi, lp_c):
+                lp, c = lp_c
+                xi, c = mlstm_block_decode(lp, cfg, xi, c)
+                return constrain(xi, "batch", None, "tp"), c
+
+            x, mc = scan_layers(inner, x, (mlstm_p, mc), cfg.unroll)
+            x, sc = slstm_block_decode(slstm_p, cfg, x, sc)
+            return constrain(x, "batch", None, "tp"), (mc, sc)
+
+        h, (mc, sc) = scan_layers(
+            group_body, h,
+            ((params["mlstm"], params["slstm"]),
+             (cache["mlstm"], cache["slstm"])), cfg.unroll)
+        return h, dict(cache, mlstm=mc, slstm=sc)
+
+    def _decode_zamba(self, params, h, cache, pos):
+        cfg = self.cfg
+        shared = params["shared"]
+
+        def group_body(x, inp):
+            (mamba_p, lora_p), (mc, ac) = inp
+
+            def inner(xi, lp_c):
+                lp, c = lp_c
+                xi, c = mamba_block_decode(lp, cfg, xi, c)
+                return constrain(xi, "batch", None, "tp"), c
+
+            x, mc = scan_layers(inner, x, (mamba_p, mc), cfg.unroll)
+            x, ac = zamba_shared_block_decode(shared, lora_p, cfg, x, ac, pos)
+            return constrain(x, "batch", None, "tp"), (mc, ac)
+
+        h, (mc, ac) = scan_layers(
+            group_body, h,
+            ((params["mamba"], params["lora"]),
+             (cache["mamba"], cache["attn"])), cfg.unroll)
+        cache = dict(cache, mamba=mc, attn=ac)
+
+        if "mamba_tail" in params:
+            def tail(xi, lp_c):
+                lp, c = lp_c
+                xi, c = mamba_block_decode(lp, cfg, xi, c)
+                return constrain(xi, "batch", None, "tp"), c
+            h, tc = scan_layers(tail, h, (params["mamba_tail"],
+                                          cache["mamba_tail"]), cfg.unroll)
+            cache = dict(cache, mamba_tail=tc)
+        return h, cache
+
+    # ==================================================================
+    # cache specs (ParamSpec pytree: shapes + dtypes + logical axes)
+    # ==================================================================
+    def cache_specs(self, batch: int, max_seq: int,
+                    kv_dtype=jnp.bfloat16) -> Any:
+        cfg = self.cfg
+
+        def attn_axes(struct):
+            if len(struct.shape) == 4:          # (b, S, g, hd)
+                return (BATCH, KV_SEQ, NONE, NONE)
+            return (BATCH, KV_SEQ, NONE)        # (b, S, r) MLA latent
+
+        def to_spec(struct, axes):
+            return ParamSpec(tuple(struct.shape), struct.dtype, axes,
+                             init="zeros")
+
+        def stack(spec: ParamSpec, n: int) -> ParamSpec:
+            return spec.stacked(n)
+
+        if cfg.family in ("dense", "moe"):
+            one = empty_cache_spec(cfg, batch, max_seq, kv_dtype)
+            one_specs = {k: to_spec(v, attn_axes(v)) for k, v in one.items()}
+            n_first = (cfg.moe.first_dense_layers
+                       if (cfg.moe and cfg.moe.first_dense_layers) else 0)
+            out = {"attn": {k: stack(v, cfg.n_layers - n_first)
+                            for k, v in one_specs.items()}}
+            if n_first:
+                out["attn_first"] = {k: stack(v, n_first)
+                                     for k, v in one_specs.items()}
+            return out
+
+        if cfg.family == "xlstm":
+            per = cfg.ssm.slstm_every
+            n_groups = cfg.n_layers // per
+            m_axes = {"C": (BATCH, NONE, TP, NONE), "n": (BATCH, NONE, TP),
+                      "m": (BATCH, NONE), "conv": (BATCH, NONE, TP)}
+            s_axes = {"c": (BATCH, TP), "n": (BATCH, TP), "h": (BATCH, TP),
+                      "m": (BATCH, NONE)}
+            m_one = {k: to_spec(v, m_axes[k])
+                     for k, v in mlstm_cache_spec(cfg, batch).items()}
+            s_one = {k: to_spec(v, s_axes[k])
+                     for k, v in slstm_cache_spec(cfg, batch).items()}
+            return {
+                "mlstm": {k: stack(stack(v, per - 1), n_groups)
+                          for k, v in m_one.items()},
+                "slstm": {k: stack(v, n_groups) for k, v in s_one.items()},
+            }
+
+        if cfg.family == "zamba":
+            per = cfg.zamba.shared_every
+            n_groups = cfg.n_layers // per
+            n_tail = cfg.n_layers - n_groups * per
+            mb_axes = {"state": (BATCH, TP, NONE, NONE),
+                       "conv": (BATCH, NONE, TP)}
+            m_one = {k: to_spec(v, mb_axes[k])
+                     for k, v in mamba2_cache_spec(cfg, batch).items()}
+            a_one = {k: to_spec(v, attn_axes(v))
+                     for k, v in empty_cache_spec(cfg, batch, max_seq,
+                                                  kv_dtype).items()}
+            out = {
+                "mamba": {k: stack(stack(v, per), n_groups)
+                          for k, v in m_one.items()},
+                "attn": {k: stack(v, n_groups) for k, v in a_one.items()},
+            }
+            if n_tail:
+                out["mamba_tail"] = {k: stack(v, n_tail)
+                                     for k, v in m_one.items()}
+            return out
+
+        raise ValueError(cfg.family)

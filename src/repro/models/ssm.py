@@ -1,0 +1,424 @@
+"""Recurrent-state blocks: Mamba2 (chunked SSD), mLSTM, sLSTM (xLSTM).
+
+These replace attention for the `xlstm` and `zamba` families.  Decode is
+O(1)/token against a fixed-size recurrent state — which is why the
+assigned long_500k shape runs for these archs (DESIGN.md SS4).
+
+Mamba2 training uses the chunked SSD formulation (matmul-friendly: intra-
+chunk attention-like block + inter-chunk state recurrence via lax.scan).
+mLSTM/sLSTM train via a stabilized lax.scan over time — the paper-faithful
+recurrent form (xLSTM exponential gating with max-stabilizer).
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import FSDP, NONE, TP, ParamSpec, rms_norm, scan_layers
+from repro.kernels.ops import qmatmul_xla as qmm
+from repro.quant.qarray import maybe_dequantize as deq
+from .config import ModelConfig
+
+Params = Dict[str, jax.Array]
+
+
+# ============================================================================
+# Mamba2
+# ============================================================================
+def mamba2_dims(cfg: ModelConfig):
+    s = cfg.ssm
+    d_inner = int(s.expand * cfg.d_model)
+    n_heads = d_inner // s.head_dim
+    return d_inner, n_heads, s.d_state
+
+
+def mamba2_specs(cfg: ModelConfig) -> Dict[str, ParamSpec]:
+    s = cfg.ssm
+    d = cfg.d_model
+    di, nh, ds = mamba2_dims(cfg)
+    conv_dim = di + 2 * ds                       # x + B + C (single group)
+    return {
+        "in_proj": ParamSpec((d, 2 * di + 2 * ds + nh), axes=(FSDP, TP)),
+        "conv_w": ParamSpec((s.d_conv, conv_dim), axes=(NONE, TP),
+                            scale=1.0 / math.sqrt(s.d_conv)),
+        "conv_b": ParamSpec((conv_dim,), axes=(TP,), init="zeros"),
+        "a_log": ParamSpec((nh,), axes=(NONE,), init="zeros"),
+        "d_skip": ParamSpec((nh,), axes=(NONE,), init="ones"),
+        "dt_bias": ParamSpec((nh,), axes=(NONE,), init="zeros"),
+        "norm": ParamSpec((di,), axes=(TP,), init="ones"),
+        "out_proj": ParamSpec((di, d), axes=(TP, FSDP)),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv. x: (b,s,c), w: (k,c)."""
+    k = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i][None, None, :]
+              for i in range(k))
+    return out + b
+
+
+def _split_xbcdt(cfg: ModelConfig, proj: jax.Array):
+    di, nh, ds = mamba2_dims(cfg)
+    z = proj[..., :di]
+    xbc = proj[..., di:di + di + 2 * ds]
+    dt = proj[..., di + di + 2 * ds:]
+    return z, xbc, dt
+
+
+def mamba2_forward(p: Params, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    """Chunked SSD over the full sequence. x: (b,s,d)."""
+    s_cfg = cfg.ssm
+    b, s_orig, _ = x.shape
+    di, nh, ds = mamba2_dims(cfg)
+    hd = s_cfg.head_dim
+    L = min(s_cfg.chunk, s_orig)
+    pad = (-s_orig) % L
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+    s = s_orig + pad
+    nc = s // L
+
+    proj = qmm(x, p["in_proj"])
+    z, xbc, dt_raw = _split_xbcdt(cfg, proj)
+    xbc = jax.nn.silu(_causal_conv(xbc, p["conv_w"], p["conv_b"]))
+    xs = xbc[..., :di].reshape(b, s, nh, hd)
+    B = xbc[..., di:di + ds]                                 # (b,s,n)
+    C = xbc[..., di + ds:]                                   # (b,s,n)
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))  # (b,s,h)
+    A = -jnp.exp(p["a_log"].astype(jnp.float32))              # (h,)
+    dtA = dt * A[None, None, :]                               # (b,s,h)
+
+    # chunk
+    xs_c = xs.reshape(b, nc, L, nh, hd)
+    B_c = B.reshape(b, nc, L, ds)
+    C_c = C.reshape(b, nc, L, ds)
+    dt_c = dt.reshape(b, nc, L, nh)
+    dtA_c = dtA.reshape(b, nc, L, nh)
+
+    cs = jnp.cumsum(dtA_c, axis=2)                            # (b,c,l,h)
+    tot = cs[:, :, -1, :]                                     # (b,c,h)
+
+    # put chunk dim first for the scan
+    def per_chunk(carry, inp):
+        state = carry                                          # (b,h,hd,n) f32
+        xs_i, B_i, C_i, dt_i, cs_i, tot_i = inp
+        # intra-chunk: scores_ij = (C_i . B_j) exp(cs_i - cs_j) dt_j, j <= i
+        cb = jnp.einsum("bln,bmn->blm", C_i, B_i,
+                        preferred_element_type=jnp.float32)    # (b,l,l)
+        seg = cs_i[:, :, None, :] - cs_i[:, None, :, :]        # (b,l,m,h)
+        mask = jnp.tril(jnp.ones((L, L), bool))
+        decay = jnp.where(mask[None, :, :, None], jnp.exp(seg), 0.0)
+        w = cb[..., None] * decay * dt_i[:, None, :, :]        # (b,l,m,h)
+        y_intra = jnp.einsum("blmh,bmhp->blhp", w.astype(xs_i.dtype), xs_i)
+        # inter-chunk: contribution of the carried state
+        cexp = jnp.exp(cs_i)                                   # (b,l,h)
+        y_inter = jnp.einsum("bln,bhpn,blh->blhp", C_i,
+                             state.astype(C_i.dtype),
+                             cexp.astype(C_i.dtype))
+        # new chunk state
+        dec_end = jnp.exp(tot_i[:, None, :] - cs_i)            # (b,l,h)
+        contrib = jnp.einsum("blh,blhp,bln->bhpn",
+                             (dec_end * dt_i).astype(xs_i.dtype), xs_i, B_i)
+        state = state * jnp.exp(tot_i)[:, :, None, None] + \
+            contrib.astype(jnp.float32)
+        return state, y_intra + y_inter
+
+    state0 = jnp.zeros((b, nh, hd, ds), jnp.float32)
+    inputs = (xs_c.swapaxes(0, 1), B_c.swapaxes(0, 1), C_c.swapaxes(0, 1),
+              dt_c.swapaxes(0, 1), cs.swapaxes(0, 1), tot.swapaxes(0, 1))
+    _, ys = scan_layers(per_chunk, state0, inputs,
+                        cfg.unroll and cfg.unroll_ssm_chunks)
+    y = ys.swapaxes(0, 1).reshape(b, s, nh, hd)
+
+    y = y + xs * p["d_skip"].astype(x.dtype)[None, None, :, None]
+    y = y.reshape(b, s, di)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    out = qmm(y, p["out_proj"])
+    return out[:, :s_orig] if pad else out
+
+
+def mamba2_decode(p: Params, cfg: ModelConfig, x: jax.Array, cache: Dict,
+                  ) -> Tuple[jax.Array, Dict]:
+    """One-step recurrence. x: (b,1,d).
+    cache: {state: (b,h,hd,n) f32, conv: (b, k-1, conv_dim)}."""
+    s_cfg = cfg.ssm
+    b = x.shape[0]
+    di, nh, ds = mamba2_dims(cfg)
+    hd = s_cfg.head_dim
+    k = s_cfg.d_conv
+
+    proj = qmm(x, p["in_proj"])
+    z, xbc, dt_raw = _split_xbcdt(cfg, proj)
+
+    conv_buf = jnp.concatenate([cache["conv"], xbc], axis=1)   # (b,k,cd)
+    xbc1 = jnp.einsum("bkc,kc->bc", conv_buf, p["conv_w"]) + p["conv_b"]
+    xbc1 = jax.nn.silu(xbc1)[:, None, :]
+    new_conv = conv_buf[:, 1:, :]
+
+    xs = xbc1[..., :di].reshape(b, nh, hd)
+    B = xbc1[..., di:di + ds][:, 0]                            # (b,n)
+    C = xbc1[..., di + ds:][:, 0]                              # (b,n)
+
+    dt = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))   # (b,h)
+    A = -jnp.exp(p["a_log"].astype(jnp.float32))
+    dA = jnp.exp(dt * A[None, :])                              # (b,h)
+
+    state = cache["state"] * dA[:, :, None, None] + \
+        jnp.einsum("bh,bhp,bn->bhpn", dt, xs.astype(jnp.float32),
+                   B.astype(jnp.float32))
+    y = jnp.einsum("bhpn,bn->bhp", state, C.astype(jnp.float32))
+    y = y.astype(x.dtype) + xs * p["d_skip"].astype(x.dtype)[None, :, None]
+    y = y.reshape(b, 1, di)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    return qmm(y, p["out_proj"]), {"state": state, "conv": new_conv}
+
+
+def mamba2_cache_spec(cfg: ModelConfig, batch: int):
+    di, nh, ds = mamba2_dims(cfg)
+    cd = di + 2 * ds
+    return {
+        "state": jax.ShapeDtypeStruct((batch, nh, cfg.ssm.head_dim, ds),
+                                      jnp.float32),
+        "conv": jax.ShapeDtypeStruct((batch, cfg.ssm.d_conv - 1, cd),
+                                     jnp.bfloat16),
+    }
+
+
+# ============================================================================
+# mLSTM (xLSTM matrix-memory block)
+# ============================================================================
+def mlstm_dims(cfg: ModelConfig):
+    s = cfg.ssm
+    di = int(s.proj_factor_mlstm * cfg.d_model)
+    nh = s.mlstm_heads
+    return di, nh, di // nh
+
+
+def mlstm_specs(cfg: ModelConfig) -> Dict[str, ParamSpec]:
+    s = cfg.ssm
+    d = cfg.d_model
+    di, nh, dh = mlstm_dims(cfg)
+    return {
+        "up_proj": ParamSpec((d, 2 * di), axes=(FSDP, TP)),
+        "conv_w": ParamSpec((s.conv_width, di), axes=(NONE, TP),
+                            scale=1.0 / math.sqrt(s.conv_width)),
+        "conv_b": ParamSpec((di,), axes=(TP,), init="zeros"),
+        # headwise (block-diagonal) q/k/v: (h, dh, dh).  Sharded on the
+        # OUTPUT dh dim: nh(=4) cannot shard over a 16-way model axis
+        # (SSPerf cell a: replicated qkv made the scan carry unsharded)
+        "wq": ParamSpec((nh, dh, dh), axes=(NONE, NONE, TP)),
+        "wk": ParamSpec((nh, dh, dh), axes=(NONE, NONE, TP)),
+        "wv": ParamSpec((nh, dh, dh), axes=(NONE, NONE, TP)),
+        "w_if": ParamSpec((di, 2 * nh), axes=(FSDP, NONE),
+                          scale=1.0 / math.sqrt(di)),
+        "b_if": ParamSpec((2 * nh,), axes=(NONE,), init="zeros"),
+        "w_o": ParamSpec((di, di), axes=(FSDP, TP)),
+        "hnorm": ParamSpec((di,), axes=(TP,), init="ones"),
+        "down_proj": ParamSpec((di, d), axes=(TP, FSDP)),
+    }
+
+
+def _mlstm_cell(q, k, v, i_raw, f_raw, state):
+    """One step. q/k/v: (b,h,dh); i/f: (b,h); state {C,n,m}.
+
+    The carry sharding is pinned (batch x dh_v over data x model): without
+    the constraint SPMD flip-flops the loop state to replicated
+    ("involuntary full rematerialization"), blowing the 4096-step backward
+    to >200 GiB/device (SSPerf cell a3)."""
+    from repro.dist.shard import constrain
+    C, n, m = state
+    log_f = -jax.nn.softplus(-f_raw)                    # log sigmoid(f)
+    m_new = jnp.maximum(log_f + m, i_raw)
+    i_p = jnp.exp(i_raw - m_new)
+    f_p = jnp.exp(log_f + m - m_new)
+    C = f_p[..., None, None] * C + \
+        i_p[..., None, None] * jnp.einsum("bhv,bhk->bhvk", v, k)
+    C = constrain(C, "batch", None, "tp", None)
+    n = f_p[..., None] * n + i_p[..., None] * k
+    n = constrain(n, "batch", None, "tp")
+    num = jnp.einsum("bhvk,bhk->bhv", C, q)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", n, q)),
+                      jnp.exp(-m_new))
+    h = num / den[..., None]
+    return (C, n, m_new), h
+
+
+def _mlstm_qkvif(p: Params, cfg: ModelConfig, x_m: jax.Array):
+    di, nh, dh = mlstm_dims(cfg)
+    lead = x_m.shape[:-1]
+    xh = x_m.reshape(*lead, nh, dh)
+    q = jnp.einsum("...hd,hde->...he", xh, deq(p["wq"]).astype(xh.dtype))
+    k = jnp.einsum("...hd,hde->...he", xh,
+                   deq(p["wk"]).astype(xh.dtype)) / math.sqrt(dh)
+    v = jnp.einsum("...hd,hde->...he", xh, deq(p["wv"]).astype(xh.dtype))
+    gates = (x_m @ p["w_if"] + p["b_if"]).astype(jnp.float32)
+    i_raw, f_raw = gates[..., :nh], gates[..., nh:]
+    return q.astype(jnp.float32), k.astype(jnp.float32), \
+        v.astype(jnp.float32), i_raw, f_raw
+
+
+def mlstm_forward(p: Params, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    b, s, _ = x.shape
+    di, nh, dh = mlstm_dims(cfg)
+    up = qmm(x, p["up_proj"])
+    x_m, z = up[..., :di], up[..., di:]
+    x_c = jax.nn.silu(_causal_conv(x_m, p["conv_w"], p["conv_b"]))
+    q, k, v, i_raw, f_raw = _mlstm_qkvif(p, cfg, x_c)
+    o = jax.nn.sigmoid(qmm(x_m, p["w_o"]))
+
+    def step(state, inp):
+        qt, kt, vt, it, ft = inp
+        state, h = _mlstm_cell(qt, kt, vt, it, ft, state)
+        return state, h
+
+    state0 = (jnp.zeros((b, nh, dh, dh), jnp.float32),
+              jnp.zeros((b, nh, dh), jnp.float32),
+              jnp.full((b, nh), -1e30, jnp.float32))
+    inputs = (q.swapaxes(0, 1), k.swapaxes(0, 1), v.swapaxes(0, 1),
+              i_raw.swapaxes(0, 1), f_raw.swapaxes(0, 1))
+    _, hs = jax.lax.scan(step, state0, inputs)
+    h = hs.swapaxes(0, 1).reshape(b, s, di).astype(x.dtype)
+    h = rms_norm(h, p["hnorm"], cfg.norm_eps) * o
+    out = h * jax.nn.silu(z)
+    return qmm(out, p["down_proj"])
+
+
+def mlstm_decode(p: Params, cfg: ModelConfig, x: jax.Array, cache: Dict
+                 ) -> Tuple[jax.Array, Dict]:
+    b = x.shape[0]
+    di, nh, dh = mlstm_dims(cfg)
+    up = qmm(x, p["up_proj"])
+    x_m, z = up[..., :di], up[..., di:]
+
+    conv_buf = jnp.concatenate([cache["conv"], x_m], axis=1)
+    x_c = jnp.einsum("bkc,kc->bc", conv_buf, p["conv_w"]) + p["conv_b"]
+    x_c = jax.nn.silu(x_c)[:, None, :]
+    q, k, v, i_raw, f_raw = _mlstm_qkvif(p, cfg, x_c[:, 0])
+    o = jax.nn.sigmoid(qmm(x_m, p["w_o"]))
+
+    state = (cache["C"], cache["n"], cache["m"])
+    state, h = _mlstm_cell(q, k, v, i_raw, f_raw, state)
+    h = h.reshape(b, 1, di).astype(x.dtype)
+    h = rms_norm(h, p["hnorm"], cfg.norm_eps) * o
+    out = qmm(h * jax.nn.silu(z), p["down_proj"])
+    return out, {"C": state[0], "n": state[1], "m": state[2],
+                 "conv": conv_buf[:, 1:, :]}
+
+
+def mlstm_cache_spec(cfg: ModelConfig, batch: int):
+    di, nh, dh = mlstm_dims(cfg)
+    return {
+        "C": jax.ShapeDtypeStruct((batch, nh, dh, dh), jnp.float32),
+        "n": jax.ShapeDtypeStruct((batch, nh, dh), jnp.float32),
+        "m": jax.ShapeDtypeStruct((batch, nh), jnp.float32),
+        "conv": jax.ShapeDtypeStruct((batch, cfg.ssm.conv_width - 1, di),
+                                     jnp.bfloat16),
+    }
+
+
+# ============================================================================
+# sLSTM (xLSTM scalar-memory block with recurrent gating)
+# ============================================================================
+def slstm_dims(cfg: ModelConfig):
+    nh = cfg.ssm.mlstm_heads
+    return cfg.d_model, nh, cfg.d_model // nh
+
+
+def slstm_specs(cfg: ModelConfig) -> Dict[str, ParamSpec]:
+    d, nh, dh = slstm_dims(cfg)
+    f_up = int(cfg.ssm.proj_factor_slstm * d)
+    return {
+        "w_gates": ParamSpec((d, 4 * d), axes=(FSDP, NONE)),
+        "r_gates": ParamSpec((nh, dh, 4 * dh), axes=(NONE, NONE, TP),
+                             scale=1.0 / math.sqrt(dh)),
+        "b_gates": ParamSpec((4 * d,), axes=(NONE,), init="zeros"),
+        "gnorm": ParamSpec((d,), axes=(NONE,), init="ones"),
+        "ffn_up": ParamSpec((d, 2 * f_up), axes=(FSDP, TP)),
+        "ffn_down": ParamSpec((f_up, d), axes=(TP, FSDP)),
+    }
+
+
+def _slstm_cell(p, cfg, xt, state):
+    """xt: (b,d). state {c,n,h,m}: (b,d)/(b,nh)."""
+    d, nh, dh = slstm_dims(cfg)
+    b = xt.shape[0]
+    c, n, h_prev, m = state
+    hx = h_prev.reshape(b, nh, dh)
+    rec = jnp.einsum("bhd,hde->bhe", hx, p["r_gates"]).reshape(b, 4 * d)
+    g = (xt @ p["w_gates"] + p["b_gates"]).astype(jnp.float32) + \
+        rec.astype(jnp.float32)
+    zr, ir, fr, orr = jnp.split(g, 4, axis=-1)
+    ir_h = ir.reshape(b, nh, dh).mean(-1)          # per-head scalar gates
+    fr_h = fr.reshape(b, nh, dh).mean(-1)
+    m_new = jnp.maximum(fr_h + m, ir_h)
+    i_p = jnp.exp(ir_h - m_new)[..., None]
+    f_p = jnp.exp(fr_h + m - m_new)[..., None]
+    cz = jnp.tanh(zr).reshape(b, nh, dh)
+    ch = c.reshape(b, nh, dh)
+    nh_ = n.reshape(b, nh, dh)
+    c_new = f_p * ch + i_p * cz
+    n_new = f_p * nh_ + i_p
+    h_new = jax.nn.sigmoid(orr) * (c_new / jnp.maximum(n_new, 1e-6)
+                                   ).reshape(b, d)
+    return (c_new.reshape(b, d), n_new.reshape(b, d), h_new, m_new), h_new
+
+
+def slstm_forward(p: Params, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    b, s, d = x.shape
+    _, nh, _ = slstm_dims(cfg)
+    tc = min(cfg.ssm.time_chunk, s)
+    pad = (-s) % tc
+    xp = jnp.pad(x, ((0, 0), (0, pad), (0, 0))) if pad else x
+    nc = (s + pad) // tc
+    chunks = xp.reshape(b, nc, tc, d).swapaxes(0, 1).astype(jnp.float32)
+
+    def chunk_body(state, xc):
+        def step(st, xt):
+            return _slstm_cell(p, cfg, xt, st)
+        return jax.lax.scan(step, state, xc.swapaxes(0, 1))
+
+    state0 = (jnp.zeros((b, d), jnp.float32), jnp.zeros((b, d), jnp.float32),
+              jnp.zeros((b, d), jnp.float32), jnp.full((b, nh), -1e30,
+                                                       jnp.float32))
+    _, hs = jax.lax.scan(jax.checkpoint(chunk_body, prevent_cse=False),
+                         state0, chunks)
+    # (nc, tc, b, d) -> (nc*tc, b, d) -> (b, s, d)
+    h = hs.reshape(nc * tc, b, d)[:s].swapaxes(0, 1)
+    h = h.astype(x.dtype)
+    h = rms_norm(h, p["gnorm"], cfg.norm_eps)
+    up = qmm(h, p["ffn_up"])
+    f_up = up.shape[-1] // 2
+    h = jax.nn.gelu(up[..., :f_up]) * up[..., f_up:]
+    return qmm(h, p["ffn_down"])
+
+
+def slstm_decode(p: Params, cfg: ModelConfig, x: jax.Array, cache: Dict
+                 ) -> Tuple[jax.Array, Dict]:
+    state = (cache["c"], cache["n"], cache["h"], cache["m"])
+    state, h = _slstm_cell(p, cfg, x[:, 0].astype(jnp.float32), state)
+    h = h[:, None, :].astype(x.dtype)
+    h = rms_norm(h, p["gnorm"], cfg.norm_eps)
+    up = qmm(h, p["ffn_up"])
+    f_up = up.shape[-1] // 2
+    h = jax.nn.gelu(up[..., :f_up]) * up[..., f_up:]
+    return qmm(h, p["ffn_down"]), {"c": state[0], "n": state[1], "h": state[2],
+                               "m": state[3]}
+
+
+def slstm_cache_spec(cfg: ModelConfig, batch: int):
+    d, nh, _ = slstm_dims(cfg)
+    f32 = jnp.float32
+    return {
+        "c": jax.ShapeDtypeStruct((batch, d), f32),
+        "n": jax.ShapeDtypeStruct((batch, d), f32),
+        "h": jax.ShapeDtypeStruct((batch, d), f32),
+        "m": jax.ShapeDtypeStruct((batch, nh), f32),
+    }

@@ -1,0 +1,8 @@
+"""INT4/INT8 weight quantization substrate (EdgeCIM precision axis)."""
+from .qarray import (QTensor, quantize, dequantize, maybe_dequantize,
+                     unpack_int4, INT4_GROUP)
+from .ptq import quantize_params, quantize_structs, quantized_fraction
+
+__all__ = ["QTensor", "quantize", "dequantize", "maybe_dequantize",
+           "unpack_int4", "INT4_GROUP", "quantize_params",
+           "quantize_structs", "quantized_fraction"]

@@ -1,0 +1,180 @@
+"""Three-term roofline analysis from compiled dry-run artifacts.
+
+    compute term    = HLO_FLOPs / (peak_FLOP/s per chip)
+    memory term     = HLO_bytes / (HBM bandwidth per chip)
+    collective term = collective_bytes / (ICI link bandwidth per chip)
+
+Sources: `compiled.cost_analysis()` supplies per-device FLOPs and bytes;
+collective bytes are NOT in cost_analysis, so we parse the optimized HLO
+(`compiled.as_text()`) and sum operand sizes of every all-gather /
+all-reduce / reduce-scatter / all-to-all / collective-permute.
+
+Hardware constants: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI (task spec).
+"""
+from __future__ import annotations
+
+import json
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+PEAK_FLOPS = 197e12          # bf16 per chip
+HBM_BW = 819e9               # B/s per chip
+ICI_BW = 50e9                # B/s per link
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "s4": 0.5, "u4": 0.5, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# e.g.  `%ag = bf16[4,128,2048]{...} all-gather(...)`  — capture result type
+_OP_RE = re.compile(
+    r"=\s*(?:\([^)]*\)\s*)?([a-z0-9]+)\[([0-9,]*)\][^a-z]*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(")
+
+_TUPLE_RE = re.compile(
+    r"=\s*\(([^)]*)\)\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> float:
+    nbytes = _DTYPE_BYTES.get(dtype)
+    if nbytes is None:
+        return 0.0
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * nbytes
+
+
+@dataclass
+class CollectiveStats:
+    bytes_by_kind: Dict[str, float] = field(default_factory=dict)
+    count_by_kind: Dict[str, int] = field(default_factory=dict)
+
+    @property
+    def total_bytes(self) -> float:
+        return sum(self.bytes_by_kind.values())
+
+    def add(self, kind: str, nbytes: float):
+        self.bytes_by_kind[kind] = self.bytes_by_kind.get(kind, 0.0) + nbytes
+        self.count_by_kind[kind] = self.count_by_kind.get(kind, 0) + 1
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    """Sum result sizes of collective ops in (optimized) HLO text.
+
+    Uses the result shape (post-collective size) per op; `-start`
+    variants counted once (`-done` carries no shape work).  Line-streamed:
+    multi-MB HLO dumps parse without materializing match lists.
+    """
+    stats = CollectiveStats()
+    for line in hlo_text.splitlines():
+        if "-done" in line:
+            continue
+        hit = None
+        for c in _COLLECTIVES:
+            if c in line:
+                hit = c
+                break
+        if hit is None:
+            continue
+        m = _OP_RE.search(line)
+        if m:
+            dtype, dims, kind = m.group(1), m.group(2), m.group(3)
+            stats.add(kind, _shape_bytes(dtype, dims))
+            continue
+        m = _TUPLE_RE.search(line)
+        if m:
+            total = sum(_shape_bytes(d, s)
+                        for d, s in _SHAPE_RE.findall(m.group(1)))
+            stats.add(m.group(2), total)
+    return stats
+
+
+@dataclass
+class Roofline:
+    arch: str
+    shape_id: str
+    kind: str
+    mesh: str
+    quant: str
+    flops: float                  # per device
+    hlo_bytes: float              # per device
+    collective_bytes: float       # per device
+    model_flops: float            # 6*N*D (useful) per device
+    collective_detail: Dict[str, float] = field(default_factory=dict)
+    memory_per_device: Optional[Dict[str, float]] = None
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.hlo_bytes / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.collective_bytes / ICI_BW
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_time(self) -> float:
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        return self.model_flops / self.flops if self.flops else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Fraction of the dominant-term roofline that is 'useful' work:
+        for compute-bound cells this is MFU against the bound time."""
+        if self.bound_time == 0:
+            return 0.0
+        return (self.model_flops / PEAK_FLOPS) / self.bound_time
+
+    def to_dict(self) -> Dict:
+        return {
+            "arch": self.arch, "shape": self.shape_id, "kind": self.kind,
+            "mesh": self.mesh, "quant": self.quant,
+            "flops": self.flops, "hlo_bytes": self.hlo_bytes,
+            "collective_bytes": self.collective_bytes,
+            "model_flops": self.model_flops,
+            "t_compute": self.t_compute, "t_memory": self.t_memory,
+            "t_collective": self.t_collective, "dominant": self.dominant,
+            "useful_flops_ratio": self.useful_flops_ratio,
+            "roofline_fraction": self.roofline_fraction,
+            "collective_detail": self.collective_detail,
+            "memory_per_device": self.memory_per_device,
+        }
+
+
+def model_flops_for(arch_id: str, shape_id: str, n_devices: int) -> float:
+    """MODEL_FLOPS per device: 6*N*D for train (2 fwd + 4 bwd), 2*N*D for
+    inference, with N = active params (MoE: top_k+shared only) and
+    D = tokens processed this step."""
+    from repro.configs.registry import SHAPES, get_config
+    from repro.launch.params_count import active_params, total_tokens
+    cfg = get_config(arch_id)
+    seq, batch, kind = SHAPES[shape_id]
+    n_active = active_params(cfg)
+    tokens = total_tokens(shape_id)
+    mult = 6.0 if kind == "train" else 2.0
+    return mult * n_active * tokens / n_devices

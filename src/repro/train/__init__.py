@@ -1,0 +1,8 @@
+"""Training substrate: AdamW, trainer (fault-tolerant), checkpointing."""
+from .adamw import AdamW, AdamWState, cosine_schedule, global_norm
+from .trainer import Trainer, TrainConfig, TrainEvent, make_train_step
+from . import checkpoint
+
+__all__ = ["AdamW", "AdamWState", "cosine_schedule", "global_norm",
+           "Trainer", "TrainConfig", "TrainEvent", "make_train_step",
+           "checkpoint"]

@@ -1,0 +1,93 @@
+"""AdamW + learning-rate schedules, dependency-free (no optax in the
+container).  Optimizer state is a pytree shaped like the params, so it
+inherits the FSDPxTP shardings — Adam moments shard 256-way and the 27B /
+235B configs fit the 16 GB/chip budget (see EXPERIMENTS.md SSDry-run)."""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Pytree = Any
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array       # ()
+    mu: Pytree            # first moment  (fp32)
+    nu: Pytree            # second moment (fp32)
+
+
+@dataclass(frozen=True)
+class AdamW:
+    lr: Callable[[jax.Array], jax.Array] | float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+
+    def init(self, params: Pytree) -> AdamWState:
+        zeros = jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        return AdamWState(step=jnp.zeros((), jnp.int32), mu=zeros,
+                          nu=jax.tree_util.tree_map(jnp.copy, zeros))
+
+    def _lr(self, step: jax.Array) -> jax.Array:
+        if callable(self.lr):
+            return self.lr(step)
+        return jnp.asarray(self.lr, jnp.float32)
+
+    def update(self, grads: Pytree, state: AdamWState, params: Pytree
+               ) -> Tuple[Pytree, AdamWState]:
+        step = state.step + 1
+
+        if self.clip_norm:
+            gnorm = global_norm(grads)
+            scale = jnp.minimum(1.0, self.clip_norm / (gnorm + 1e-9))
+            grads = jax.tree_util.tree_map(
+                lambda g: g.astype(jnp.float32) * scale, grads)
+        else:
+            grads = jax.tree_util.tree_map(
+                lambda g: g.astype(jnp.float32), grads)
+
+        b1, b2 = self.b1, self.b2
+        mu = jax.tree_util.tree_map(lambda m, g: b1 * m + (1 - b1) * g,
+                                    state.mu, grads)
+        nu = jax.tree_util.tree_map(lambda v, g: b2 * v + (1 - b2) * g * g,
+                                    state.nu, grads)
+        c1 = 1.0 - b1 ** step.astype(jnp.float32)
+        c2 = 1.0 - b2 ** step.astype(jnp.float32)
+        lr = self._lr(step)
+
+        def upd(p, m, v):
+            mhat = m / c1
+            vhat = v / c2
+            delta = mhat / (jnp.sqrt(vhat) + self.eps)
+            if self.weight_decay and p.ndim >= 2:   # decay matrices only
+                delta = delta + self.weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+
+        new_params = jax.tree_util.tree_map(upd, params, mu, nu)
+        return new_params, AdamWState(step=step, mu=mu, nu=nu)
+
+
+def global_norm(tree: Pytree) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in leaves))
+
+
+def cosine_schedule(peak_lr: float, warmup_steps: int, total_steps: int,
+                    floor: float = 0.1) -> Callable[[jax.Array], jax.Array]:
+    def fn(step: jax.Array) -> jax.Array:
+        s = step.astype(jnp.float32)
+        warm = peak_lr * s / max(warmup_steps, 1)
+        prog = jnp.clip((s - warmup_steps) /
+                        max(total_steps - warmup_steps, 1), 0.0, 1.0)
+        cos = peak_lr * (floor + (1 - floor) * 0.5 *
+                         (1.0 + jnp.cos(math.pi * prog)))
+        return jnp.where(s < warmup_steps, warm, cos)
+    return fn

@@ -1,0 +1,18 @@
+import os
+import sys
+
+# repo-local imports without install
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax  # noqa: E402
+import pytest  # noqa: E402
+
+
+@pytest.fixture(autouse=True, scope="module")
+def _clear_jax_caches():
+    """Release compiled executables between modules: the CPU backend keeps
+    every jitted dylib alive, and a full-suite session otherwise exhausts
+    the JIT linker late in the run (Fatal 'Failed to materialize
+    symbols')."""
+    yield
+    jax.clear_caches()

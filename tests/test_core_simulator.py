@@ -1,0 +1,98 @@
+"""EdgeCIM analytical simulator: paper-number validation + invariants."""
+import numpy as np
+import pytest
+
+from repro.configs.paper_slms import PAPER_SLMS
+from repro.core import (DEFAULT_TECH, EdgeCIMSimulator, HWConfig,
+                        chip_area_mm2, peak_tops, search_space_size,
+                        stream_bandwidth)
+from repro.core.stages import stage_cost, stage_cost_vec
+
+H_REF = HWConfig(c_v=2, c_h=3, t_act_v=4, t_act_h=2, m_mult=2, pe_count=16)
+SIM = EdgeCIMSimulator()
+
+
+def test_search_space_size_matches_paper():
+    assert abs(search_space_size() - 3.1e6) / 3.1e6 < 0.02   # "~3.1e6"
+
+
+def test_llama1b_int4_headline():
+    rep = SIM.generate(PAPER_SLMS["llama3.2-1b"], H_REF, 128, 128, 4, 8)
+    assert abs(rep.tokens_per_s - 400.0) / 400.0 < 0.10      # paper: 400
+    assert abs(rep.tokens_per_j - 181.0) / 181.0 < 0.10      # paper: 181
+
+
+def test_llama3b_int4_headline():
+    rep = SIM.generate(PAPER_SLMS["llama3.2-3b"], H_REF, 128, 128, 4, 8)
+    assert abs(rep.tokens_per_s - 139.3) / 139.3 < 0.10      # paper: 139.3
+
+
+def test_suite_average_matches_paper():
+    tps = [SIM.generate(s, H_REF, 128, 128, 4, 8).tokens_per_s
+           for s in PAPER_SLMS.values()]
+    tpj = [SIM.generate(s, H_REF, 128, 128, 4, 8).tokens_per_j
+           for s in PAPER_SLMS.values()]
+    assert abs(np.mean(tps) - 336.42) / 336.42 < 0.05        # paper: 336.42
+    assert abs(np.mean(tpj) - 173.02) / 173.02 < 0.05        # paper: 173.02
+
+
+def test_int4_doubles_int8_throughput():
+    s = PAPER_SLMS["llama3.2-1b"]
+    r4 = SIM.generate(s, H_REF, 128, 128, 4, 8)
+    r8 = SIM.generate(s, H_REF, 128, 128, 8, 8)
+    assert 1.7 < r4.tokens_per_s / r8.tokens_per_s < 2.1     # paper: ~2x
+
+
+def test_decode_is_bandwidth_bound():
+    """Sec. V: 'the 4096-bit bus is saturated, decoding is bandwidth-bound'
+    — latency must track streamed bytes within small overhead."""
+    s = PAPER_SLMS["llama3.2-3b"]
+    rep = SIM.generate(s, H_REF, 128, 128, 4, 8)
+    bw_floor = (s.active_params_per_token() * 0.5
+                * 128 / stream_bandwidth(H_REF))
+    assert bw_floor <= rep.latency_s < 1.25 * bw_floor
+
+
+def test_active_tile_overlap_helps():
+    """M>=2 (spare tiles prefetch) must never be slower than M=1."""
+    s = PAPER_SLMS["llama3.2-1b"]
+    h1 = HWConfig(c_v=2, c_h=3, t_act_v=4, t_act_h=2, m_mult=1, pe_count=4)
+    h2 = HWConfig(c_v=2, c_h=3, t_act_v=4, t_act_h=2, m_mult=2, pe_count=4)
+    r1 = SIM.generate(s, h1, 128, 128, 4, 8)
+    r2 = SIM.generate(s, h2, 128, 128, 4, 8)
+    assert r2.latency_s < r1.latency_s
+
+
+def test_narrow_bus_hurts():
+    s = PAPER_SLMS["llama3.2-1b"]
+    wide = SIM.generate(s, H_REF, 128, 128, 4, 8)
+    narrow_h = HWConfig(c_v=2, c_h=3, t_act_v=4, t_act_h=2, m_mult=2,
+                        pe_count=16, bus_ic=512)
+    narrow = SIM.generate(s, narrow_h, 128, 128, 4, 8)
+    assert narrow.latency_s > 2 * wide.latency_s
+
+
+def test_scalar_vs_vectorized_stage_cost_agree():
+    s = PAPER_SLMS["qwen2.5-0.5b"]
+    for st, _m in zip(s.decode_stages(256.0), s.layer_multiplicity()):
+        sc = stage_cost(st, H_REF, 4, 8)
+        sv, ev = stage_cost_vec(
+            np.array([st.weight_elems]), np.array([st.kv_stream_elems]),
+            np.array([st.macs]), np.array([st.vector_ops]),
+            np.array([st.writeback_elems]), H_REF, 4, 8)
+        assert abs(sc.seconds - sv[0]) < 1e-12
+        assert abs(sc.joules - ev[0]) < 1e-15
+
+
+def test_area_scales_with_pes():
+    small = HWConfig(c_v=1, c_h=1, t_act_v=2, t_act_h=2, m_mult=1, pe_count=4)
+    big = HWConfig(c_v=5, c_h=5, t_act_v=8, t_act_h=8, m_mult=8, pe_count=36)
+    assert chip_area_mm2(big) > 10 * chip_area_mm2(small)
+    assert peak_tops(big, 4) > peak_tops(small, 4)
+
+
+def test_kv_cache_grows_latency_with_prefill():
+    s = PAPER_SLMS["llama3.2-3b"]
+    r_small = SIM.generate(s, H_REF, 128, 128, 4, 8)
+    r_big = SIM.generate(s, H_REF, 4096, 128, 4, 8)
+    assert r_big.latency_s > r_small.latency_s

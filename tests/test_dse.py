@@ -1,0 +1,62 @@
+"""Genetic-algorithm DSE: convergence, determinism, operators."""
+import numpy as np
+
+from repro.configs.paper_slms import PAPER_SLMS
+from repro.core import (EdgeCIMSimulator, GeneticDSE, HWConfig, Objective,
+                        run_dse)
+from repro.core.dse import decode, encode, polynomial_mutation, sbx_crossover
+
+
+def test_encode_decode_roundtrip():
+    h = HWConfig(c_v=3, c_h=4, t_act_v=5, t_act_h=2, m_mult=3, pe_count=25,
+                 bus_ic=1024, bus_it=2048, bus_intra=512)
+    assert decode(encode(h)) == h
+
+
+def test_ga_beats_random_sampling():
+    spec = PAPER_SLMS["llama3.2-3b"]
+    res = run_dse(spec, alpha=0.5, w_bits=8, seed=0,
+                  pop_size=10, generations=15)
+    rng = np.random.default_rng(0)
+    obj = Objective(spec=spec, alpha=0.5, w_bits=8)
+    sim = EdgeCIMSimulator()
+    random_costs = [obj(decode(rng.random(9)), sim) for _ in range(30)]
+    assert res.best_cost <= min(random_costs) * 1.02
+
+
+def test_ga_deterministic_given_seed():
+    spec = PAPER_SLMS["qwen2.5-0.5b"]
+    r1 = run_dse(spec, alpha=1.0, seed=7, pop_size=8, generations=5)
+    r2 = run_dse(spec, alpha=1.0, seed=7, pop_size=8, generations=5)
+    assert r1.best == r2.best and r1.best_cost == r2.best_cost
+
+
+def test_ga_history_monotone():
+    res = run_dse(PAPER_SLMS["qwen2.5-0.5b"], alpha=1.0, seed=1,
+                  pop_size=8, generations=10)
+    hist = res.history
+    assert all(b <= a + 1e-12 for a, b in zip(hist, hist[1:]))
+
+
+def test_sbx_children_in_bounds():
+    rng = np.random.default_rng(0)
+    for _ in range(50):
+        c1, c2 = sbx_crossover(rng.random(9), rng.random(9), rng)
+        assert (0 <= c1).all() and (c1 <= 1).all()
+        assert (0 <= c2).all() and (c2 <= 1).all()
+
+
+def test_mutation_in_bounds():
+    rng = np.random.default_rng(0)
+    for _ in range(50):
+        m = polynomial_mutation(rng.random(9), rng, p_mut=1.0)
+        assert (0 <= m).all() and (m <= 1).all()
+
+
+def test_alpha_extremes_tradeoff():
+    """alpha=1 minimizes latency, alpha=0 minimizes energy (Fig. 7)."""
+    spec = PAPER_SLMS["llama3.2-1b"]
+    r_lat = run_dse(spec, alpha=1.0, seed=3, pop_size=12, generations=12)
+    r_en = run_dse(spec, alpha=0.0, seed=3, pop_size=12, generations=12)
+    assert r_lat.best_report.latency_s <= r_en.best_report.latency_s * 1.05
+    assert r_en.best_report.energy_j <= r_lat.best_report.energy_j * 1.05

@@ -1,0 +1,96 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps (interpret mode)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.cim_gemv import cim_gemv
+from repro.kernels.flash_decode import flash_decode
+from repro.kernels.ref import (ref_flash_decode, ref_qmatmul,
+                               ref_swiglu_qgemv)
+from repro.kernels.swiglu_gemv import swiglu_qgemv
+from repro.kernels import ops
+from repro.quant.qarray import quantize
+
+
+@pytest.mark.parametrize("bits", [4, 8])
+@pytest.mark.parametrize("m,k,n,bk,bn,group", [
+    (1, 256, 128, 256, 128, 128),     # pure GEMV
+    (4, 512, 256, 256, 128, 128),
+    (8, 1024, 512, 512, 256, 128),    # default-ish blocks
+    (2, 512, 384, 256, 128, 64),      # non-default group
+    (1, 256, 128, 128, 128, 32),      # small group
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_cim_gemv_sweep(bits, m, k, n, bk, bn, group, dtype):
+    w = jax.random.normal(jax.random.PRNGKey(0), (k, n), jnp.float32) * 0.1
+    x = jax.random.normal(jax.random.PRNGKey(1), (m, k), jnp.float32
+                          ).astype(dtype)
+    qt = quantize(w, bits=bits, group=group)
+    ref = ref_qmatmul(x.astype(jnp.float32), qt, out_dtype=jnp.float32)
+    out = cim_gemv(x, qt.data, qt.scales, bits=bits, group=group,
+                   block_n=bn, block_k=bk, interpret=True)
+    tol = 5e-2 if dtype == jnp.bfloat16 else 1e-4
+    rel = float(jnp.max(jnp.abs(out.astype(jnp.float32) - ref))
+                / (jnp.max(jnp.abs(ref)) + 1e-9))
+    assert rel < tol, rel
+
+
+@pytest.mark.parametrize("S,block_s,window,cap", [
+    (512, 256, 0, 0.0),
+    (1024, 512, 0, 0.0),
+    (1024, 256, 200, 0.0),
+    (1024, 256, 0, 50.0),
+    (512, 512, 64, 30.0),
+])
+@pytest.mark.parametrize("pos_frac", [0.1, 0.7, 1.0])
+def test_flash_decode_sweep(S, block_s, window, cap, pos_frac):
+    b, g, qpk, hd = 2, 2, 4, 64
+    key = jax.random.PRNGKey(0)
+    q = jax.random.normal(key, (b, g, qpk, hd), jnp.float32)
+    k = jax.random.normal(jax.random.PRNGKey(1), (b, S, g, hd), jnp.float32)
+    v = jax.random.normal(jax.random.PRNGKey(2), (b, S, g, hd), jnp.float32)
+    pos = jnp.int32(int(pos_frac * (S - 1)))
+    ref = ref_flash_decode(q, k, v, pos, window, cap)
+    qf = q.reshape(b * g, qpk, hd)
+    kf = k.swapaxes(1, 2).reshape(b * g, S, hd)
+    vf = v.swapaxes(1, 2).reshape(b * g, S, hd)
+    out = flash_decode(qf, kf, vf, pos, block_s=block_s, window=window,
+                       attn_cap=cap, interpret=True).reshape(b, g, qpk, hd)
+    assert float(jnp.max(jnp.abs(out - ref))) < 1e-5
+
+
+@pytest.mark.parametrize("bits", [4, 8])
+@pytest.mark.parametrize("k,f", [(256, 128), (512, 256)])
+def test_swiglu_fused_sweep(bits, k, f):
+    wg = jax.random.normal(jax.random.PRNGKey(0), (k, f), jnp.float32) * 0.1
+    wu = jax.random.normal(jax.random.PRNGKey(1), (k, f), jnp.float32) * 0.1
+    x = jax.random.normal(jax.random.PRNGKey(2), (2, k), jnp.float32)
+    qg = quantize(wg, bits, 128)
+    qu = quantize(wu, bits, 128)
+    ref = ref_swiglu_qgemv(x, qg, qu)
+    out = swiglu_qgemv(x, qg.data, qg.scales, qu.data, qu.scales, bits=bits,
+                       group=128, block_n=128, block_k=256, interpret=True)
+    assert float(jnp.max(jnp.abs(out - ref))) < 1e-4
+
+
+def test_ops_qmatmul_dispatches_and_matches():
+    w = jax.random.normal(jax.random.PRNGKey(0), (512, 256), jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (3, 512), jnp.float32)
+    qt = quantize(w, 4, 128)
+    out_kernel = ops.qmatmul(x, qt)          # aligned -> pallas interpret
+    out_ref = ops.qmatmul_xla(x, qt)         # dequants to bf16 (serving path)
+    rel = float(jnp.max(jnp.abs(out_kernel - out_ref))
+                / jnp.max(jnp.abs(out_ref)))
+    assert rel < 5e-3
+
+
+def test_decode_attention_wrapper():
+    b, g, qpk, hd, S = 2, 2, 2, 32, 1024
+    q = jax.random.normal(jax.random.PRNGKey(0), (b, g, qpk, hd))
+    k = jax.random.normal(jax.random.PRNGKey(1), (b, S, g, hd))
+    v = jax.random.normal(jax.random.PRNGKey(2), (b, S, g, hd))
+    pos = jnp.int32(900)
+    out_k = ops.decode_attention(q, k, v, pos, use_kernel=True)
+    out_r = ops.decode_attention(q, k, v, pos, use_kernel=False)
+    assert float(jnp.max(jnp.abs(out_k - out_r))) < 1e-5

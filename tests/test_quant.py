@@ -1,0 +1,82 @@
+"""Quantization substrate: packing, error bounds, struct builders."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import ParamSpec
+from repro.quant import (QTensor, dequantize, quantize, quantize_params,
+                         quantize_structs, unpack_int4)
+from repro.quant.qarray import dequant_rows
+
+
+@pytest.mark.parametrize("bits,group", [(4, 32), (4, 128), (8, 64),
+                                        (8, 128)])
+@pytest.mark.parametrize("shape,axis", [((256, 64), 0), ((4, 256, 64), 1),
+                                        ((128, 256), 1)])
+def test_roundtrip_error_bounded(bits, group, shape, axis):
+    """|w - deq(q(w))| <= scale/2 elementwise (symmetric rounding)."""
+    w = jax.random.normal(jax.random.PRNGKey(0), shape, jnp.float32)
+    qt = quantize(w, bits=bits, group=group, axis=axis)
+    deq = dequantize(qt, jnp.float32)
+    qmax = 7.0 if bits == 4 else 127.0
+    # reconstruct per-element scale bound
+    K = shape[axis]
+    g = min(group, K)
+    wm = jnp.moveaxis(w, axis, 0).reshape(K // g, g, -1)
+    scale = jnp.max(jnp.abs(wm), axis=1, keepdims=True) / qmax
+    bound = jnp.broadcast_to(scale, wm.shape).reshape(K, -1)
+    err = jnp.abs(jnp.moveaxis(deq - w, axis, 0).reshape(K, -1))
+    # 0.5 rounding + f16 scale storage error (qmax * 2^-11)
+    qmax_ = 7.0 if bits == 4 else 127.0
+    assert bool(jnp.all(err <= (0.51 + qmax_ * 2**-11) * bound + 1e-6))
+
+
+def test_pack_unpack_int4_identity():
+    q = jnp.arange(-8, 8, dtype=jnp.int8).reshape(16, 1)
+    w = q.astype(jnp.float32) / 7.0
+    qt = quantize(w, bits=4, group=16)
+    assert qt.data.dtype == jnp.uint8 and qt.data.shape == (8, 1)
+    assert bool(jnp.all(jnp.abs(dequantize(qt, jnp.float32) - w) < 0.2))
+
+
+def test_dequant_rows_matches_full_dequant():
+    w = jax.random.normal(jax.random.PRNGKey(0), (64, 128), jnp.float32)
+    qt = quantize(w, bits=4, group=32, axis=1)
+    ids = jnp.array([0, 5, 63, 5])
+    rows = dequant_rows(qt, ids, jnp.float32)
+    full = dequantize(qt, jnp.float32)
+    assert float(jnp.max(jnp.abs(rows - full[ids]))) < 1e-6
+
+
+def test_quantize_structs_matches_quantize_params_shapes():
+    spec = {"wq": ParamSpec((256, 128), axes=(None, None)),
+            "embed": ParamSpec((64, 256), axes=(None, None)),
+            "norm": ParamSpec((128,), axes=(None,), init="ones")}
+    structs = quantize_structs(spec, bits=4, group=64)
+    import jax.random as jr
+    from repro.models.common import init_params
+    params = init_params(spec, jr.PRNGKey(0))
+    qp = quantize_params(params, bits=4, group=64)
+    for k in ("wq", "embed"):
+        assert isinstance(structs[k], QTensor) and isinstance(qp[k], QTensor)
+        assert structs[k].data.shape == qp[k].data.shape, k
+        assert structs[k].scales.shape == qp[k].scales.shape, k
+        assert structs[k].axis == qp[k].axis, k
+    assert not isinstance(structs["norm"], QTensor)
+
+
+def test_qtensor_survives_scan_slicing():
+    """Stacked-layer QTensors slice correctly inside lax.scan."""
+    w = jax.random.normal(jax.random.PRNGKey(0), (3, 64, 32), jnp.float32)
+    qt = quantize(w, bits=4, group=32, axis=1)
+    x = jnp.ones((1, 64), jnp.float32)
+
+    def body(carry, q_layer):
+        return carry + (x @ dequantize(q_layer, jnp.float32)).sum(), None
+
+    total, _ = jax.lax.scan(body, 0.0, qt)
+    expect = sum(float((x @ dequantize(quantize(w[i], 4, 32, 0),
+                                       jnp.float32)).sum())
+                 for i in range(3))
+    assert abs(float(total) - expect) < 1e-2

@@ -1,0 +1,37 @@
+"""HLO collective parser + roofline terms."""
+from repro.roofline.analysis import (Roofline, parse_collectives,
+                                     PEAK_FLOPS, HBM_BW, ICI_BW)
+
+HLO = """
+HloModule test
+ENTRY main {
+  %p0 = bf16[16,2048]{1,0} parameter(0)
+  %ag = bf16[256,2048]{1,0} all-gather(%p0), dimensions={0}
+  %ar = f32[128,128]{1,0} all-reduce(%x), to_apply=%sum
+  %rs = bf16[8,2048]{1,0} reduce-scatter(%y), dimensions={0}
+  %cp = bf16[4,4]{1,0} collective-permute(%z)
+  %agd = bf16[9]{0} all-gather-done(%h)
+  %tup = (f32[16,16]{1,0}, f32[16,16]{1,0}) all-reduce-start(%a, %b)
+}
+"""
+
+
+def test_parse_collectives_counts_and_bytes():
+    st = parse_collectives(HLO)
+    assert st.count_by_kind["all-gather"] == 1
+    assert st.bytes_by_kind["all-gather"] == 256 * 2048 * 2
+    assert st.bytes_by_kind["reduce-scatter"] == 8 * 2048 * 2
+    assert st.bytes_by_kind["collective-permute"] == 4 * 4 * 2
+    # tuple-shaped async start counted once, both operands
+    assert st.count_by_kind["all-reduce"] == 2
+    assert st.bytes_by_kind["all-reduce"] == 128 * 128 * 4 + 2 * 16 * 16 * 4
+
+
+def test_roofline_dominant_term():
+    r = Roofline(arch="a", shape_id="s", kind="train", mesh="single",
+                 quant="bf16", flops=PEAK_FLOPS, hlo_bytes=HBM_BW * 2,
+                 collective_bytes=ICI_BW * 0.5, model_flops=PEAK_FLOPS / 2)
+    assert r.t_compute == 1.0 and r.t_memory == 2.0 and r.t_collective == 0.5
+    assert r.dominant == "memory"
+    assert abs(r.roofline_fraction - 0.25) < 1e-9
+    assert abs(r.useful_flops_ratio - 0.5) < 1e-9
