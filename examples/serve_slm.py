@@ -1,10 +1,11 @@
 """End-to-end serving driver (the paper's workload: decoder-only decode).
 
 Builds a LLaMA-family SLM (reduced width for CPU), quantizes weights to
-INT8 and INT4, serves a batch of requests through the slot engine, and
-reports measured tokens/s alongside the EdgeCIM-simulator projection for
-the same model at full scale — software and hardware sides of the
-co-design in one script.
+INT8 and INT4, and serves a mixed-length batch of requests through the
+paged-KV continuous-batching engine — reporting measured tokens/s,
+TTFT/TPOT percentiles, and KV-page occupancy alongside the EdgeCIM-
+simulator projection for the same model at full scale: software and
+hardware sides of the co-design in one script.
 
   PYTHONPATH=src python examples/serve_slm.py [--scale 4] [--tokens 24]
 """
@@ -19,7 +20,7 @@ from repro.configs.paper_slms import PAPER_SLMS
 from repro.core import run_dse
 from repro.models import DecoderLM, ModelConfig, init_params
 from repro.quant import quantize_params, quantized_fraction
-from repro.serve import Request, ServeEngine
+from repro.serve import PagedServeEngine, SamplingParams, ServeRequest
 
 
 def main():
@@ -28,6 +29,8 @@ def main():
                     help="width divisor vs llama3.2-1b (CPU-friendly)")
     ap.add_argument("--tokens", type=int, default=24)
     ap.add_argument("--requests", type=int, default=6)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--top-k", type=int, default=0)
     args = ap.parse_args()
 
     s = args.scale
@@ -42,21 +45,31 @@ def main():
           f"(llama3.2-1b family / {s})")
 
     rng = np.random.default_rng(0)
-    prompts = [rng.integers(0, cfg.vocab, size=8).astype(np.int32)
-               for _ in range(args.requests)]
+    lens = rng.integers(4, 24, size=args.requests)       # mixed-length mix
+    prompts = [rng.integers(0, cfg.vocab, size=int(n)).astype(np.int32)
+               for n in lens]
+    sampling = SamplingParams(temperature=args.temperature,
+                              top_k=args.top_k)
 
     for label, p in [
             ("bf16", params),
             ("int8", quantize_params(params, bits=8)),
             ("int4", quantize_params(params, bits=4))]:
-        eng = ServeEngine(model, p, n_slots=4, max_seq=64)
+        eng = PagedServeEngine(model, p, max_batch=4, max_seq=64,
+                               page_size=8, prefill_chunk=16)
+        reqs = [ServeRequest(prompt=pr, max_new_tokens=args.tokens,
+                             rid=i, sampling=sampling)
+                for i, pr in enumerate(prompts)]
         t0 = time.monotonic()
-        reqs = eng.run([Request(prompt=pr, max_new_tokens=args.tokens,
-                                rid=i) for i, pr in enumerate(prompts)])
+        eng.run(reqs)
         dt = time.monotonic() - t0
+        m = eng.summary()
         frac = quantized_fraction(p) if label != "bf16" else 0.0
-        print(f"[{label}] {sum(len(r.out_tokens) for r in reqs)} tokens in "
-              f"{dt:.1f}s  ({eng.throughput():.0f} tok/s decode, "
+        print(f"[{label}] {int(m['tokens'])} tokens in {dt:.1f}s  "
+              f"({eng.throughput():.0f} tok/s decode, "
+              f"ttft p50/p99 {m['ttft_p50_s']*1e3:.0f}/"
+              f"{m['ttft_p99_s']*1e3:.0f} ms, "
+              f"kv occupancy peak {m['kv_occupancy_peak']*100:.0f}%, "
               f"{frac*100:.0f}% bytes quantized)")
 
     # hardware side: what the EdgeCIM accelerator would do at full scale

@@ -1,0 +1,76 @@
+"""Logical-axis -> mesh-axis rule tables.
+
+Model code declares LOGICAL axes on every parameter / activation
+(`batch`, `fsdp`, `tp`, `expert`, `kv_seq`, `seq`, `layers` — see
+models/common.py); a `MeshRules` table maps those names onto the
+physical mesh axes of a given topology.  The same model definition then
+lowers on a single pod (data x model), a multi-pod super-mesh
+(pod x data x model), or a host mesh (1 x 1) without edits.
+
+`sanitize_pspec` drops mesh axes that do not divide the corresponding
+array dimension (ragged vocab rows, tiny norm vectors): XLA requires
+even sharding, and an un-shardable dim is simply replicated.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, Optional, Tuple, Union
+
+from jax.sharding import PartitionSpec as P
+
+AxisEntry = Union[None, str, Tuple[str, ...]]
+
+
+@dataclass(frozen=True)
+class MeshRules:
+    """Mapping from logical axis name to mesh axis (or axes, or None)."""
+    table: Dict[str, AxisEntry] = field(default_factory=dict)
+
+    def get(self, name: Optional[str]) -> AxisEntry:
+        if name is None:
+            return None
+        return self.table.get(name)
+
+    def pspec(self, axes: Tuple[Optional[str], ...]) -> P:
+        return P(*[self.get(a) for a in axes])
+
+    def replace(self, **kw: AxisEntry) -> "MeshRules":
+        return MeshRules({**self.table, **kw})
+
+
+SINGLE_POD_RULES = MeshRules({
+    "batch": "data", "fsdp": "data", "tp": "model", "expert": "model",
+    "kv_seq": "model", "seq": "data", "layers": None,
+})
+
+# Multi-pod: activations batch-shard over (pod, data); params stay
+# FSDP-sharded within a pod (each pod holds a full copy -> inter-pod
+# traffic is gradients only, which dist/compress.py quantizes to INT8).
+MULTI_POD_RULES = MeshRules({
+    "batch": ("pod", "data"), "fsdp": "data", "tp": "model",
+    "expert": "model", "kv_seq": "model", "seq": "data", "layers": None,
+})
+
+
+def rules_for_mesh(mesh) -> MeshRules:
+    return MULTI_POD_RULES if "pod" in mesh.axis_names else SINGLE_POD_RULES
+
+
+def _axis_size(mesh, entry: AxisEntry) -> int:
+    if entry is None:
+        return 1
+    names = (entry,) if isinstance(entry, str) else entry
+    n = 1
+    for a in names:
+        n *= int(mesh.shape[a])
+    return n
+
+
+def sanitize_pspec(spec: P, shape: Tuple[int, ...], mesh) -> P:
+    """Replicate any dim the mesh axes cannot evenly divide."""
+    out = []
+    for dim, entry in zip(shape, tuple(spec) + (None,) * len(shape)):
+        if entry is not None and dim % _axis_size(mesh, entry) != 0:
+            entry = None
+        out.append(entry)
+    return P(*out)

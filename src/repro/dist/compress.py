@@ -1,0 +1,55 @@
+"""Inter-pod gradient compression: INT8 quantization with error feedback.
+
+Between pods only gradients move (params are replicated per pod, FSDP
+within).  Quantizing that traffic to INT8 cuts the inter-pod bytes 4x;
+the residual (quantization error) is carried forward and added to the
+next step's gradient, so the accumulated update is unbiased — the
+standard error-feedback trick.
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def _q8(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Symmetric per-tensor INT8 quantization -> (int8 codes, f32 scale)."""
+    scale = jnp.max(jnp.abs(x)) / 127.0
+    safe = jnp.where(scale > 0, scale, 1.0)
+    q = jnp.clip(jnp.round(x / safe), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def _dq8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    safe = jnp.where(scale > 0, scale, 1.0)
+    return q.astype(jnp.float32) * jnp.where(scale > 0, safe, 0.0)
+
+
+def compress_decompress_roundtrip(x: jax.Array) -> jax.Array:
+    """What the receiving pod reconstructs from one tensor's gradient."""
+    return _dq8(*_q8(x))
+
+
+def init_error_state(grads: Any) -> Any:
+    """Zero error-feedback residual matching a gradient pytree."""
+    return jax.tree_util.tree_map(
+        lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+
+
+def compress_with_feedback(grads: Any, err: Any) -> Tuple[Any, Any]:
+    """(grads, residual) -> (decoded grads as the far pod sees them,
+    updated residual).  Applied leaf-wise over the gradient pytree."""
+
+    def per_leaf(g, e):
+        gf = g.astype(jnp.float32) + e
+        dec = compress_decompress_roundtrip(gf)
+        return dec.astype(g.dtype), gf - dec
+
+    flat = jax.tree_util.tree_map(per_leaf, grads, err)
+    dec = jax.tree_util.tree_map(lambda t: t[0], flat,
+                                 is_leaf=lambda x: isinstance(x, tuple))
+    new_err = jax.tree_util.tree_map(lambda t: t[1], flat,
+                                     is_leaf=lambda x: isinstance(x, tuple))
+    return dec, new_err

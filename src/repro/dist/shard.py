@@ -1,0 +1,87 @@
+"""Sharding helpers: logical-axis constraints + spec-tree -> NamedSharding.
+
+`constrain` is the boundary-hint primitive model code calls between
+blocks (`constrain(x, "batch", None, "tp")`).  It is a no-op unless a
+`use_mesh_rules(mesh, rules)` context is active — smoke tests and the
+single-host serve engine run the very same model code with zero SPMD
+overhead, while the dry-run/pjit path gets real with_sharding_constraint
+hints.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Any, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from .axes import MeshRules, sanitize_pspec
+
+_ctx = threading.local()
+
+
+def _current() -> Optional[Tuple[Mesh, MeshRules]]:
+    return getattr(_ctx, "mesh_rules", None)
+
+
+@contextlib.contextmanager
+def use_mesh_rules(mesh: Mesh, rules: MeshRules):
+    prev = _current()
+    _ctx.mesh_rules = (mesh, rules)
+    try:
+        yield
+    finally:
+        _ctx.mesh_rules = prev
+
+
+def constrain(x: jax.Array, *axes: Optional[str]) -> jax.Array:
+    """Sharding-constrain `x` by logical axis names (no-op w/o context)."""
+    cur = _current()
+    if cur is None:
+        return x
+    mesh, rules = cur
+    spec = sanitize_pspec(rules.pspec(tuple(axes)), x.shape, mesh)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+# ----------------------------------------------------------------------------
+# spec trees -> sharding trees
+# ----------------------------------------------------------------------------
+def _leaf_sharding(axes, shape, mesh, rules) -> NamedSharding:
+    return NamedSharding(mesh, sanitize_pspec(rules.pspec(axes), shape, mesh))
+
+
+def tree_shardings(spec_tree: Any, mesh: Mesh, rules: MeshRules) -> Any:
+    """ParamSpec pytree -> NamedSharding pytree (same structure)."""
+    from repro.models.common import is_spec
+    return jax.tree_util.tree_map(
+        lambda s: _leaf_sharding(s.axes, s.shape, mesh, rules),
+        spec_tree, is_leaf=is_spec)
+
+
+def qtree_shardings(spec_tree: Any, qtree: Any, mesh: Mesh,
+                    rules: MeshRules) -> Any:
+    """Shardings for a (possibly quantized) param tree.
+
+    `qtree` mirrors `spec_tree` except eligible weights are QTensor nodes
+    (packed data + scales); both QTensor fields shard by the dense
+    weight's logical axes, re-sanitized against their own (packed /
+    grouped) shapes.
+    """
+    from repro.models.common import is_spec
+    from repro.quant.qarray import QTensor
+
+    def per_leaf(spec, q):
+        if isinstance(q, QTensor):
+            return QTensor(
+                data=_leaf_sharding(spec.axes, q.data.shape, mesh, rules),
+                scales=_leaf_sharding(spec.axes, q.scales.shape, mesh,
+                                      rules),
+                bits=q.bits, group=q.group, axis=q.axis,
+                orig_shape=q.orig_shape)
+        return _leaf_sharding(spec.axes, q.shape, mesh, rules)
+
+    return jax.tree_util.tree_map(
+        per_leaf, spec_tree, qtree,
+        is_leaf=lambda x: is_spec(x))

@@ -1,9 +1,12 @@
 """Pallas TPU kernels (validated in interpret mode on CPU) + jnp oracles."""
-from .ops import qmatmul, qmatmul_xla, decode_attention, swiglu
+from .ops import (qmatmul, qmatmul_xla, decode_attention,
+                  paged_decode_attention, swiglu)
 from .cim_gemv import cim_gemv
 from .flash_decode import flash_decode
+from .paged_flash_decode import paged_flash_decode
 from .swiglu_gemv import swiglu_qgemv
 from . import ref
 
-__all__ = ["qmatmul", "qmatmul_xla", "decode_attention", "swiglu",
-           "cim_gemv", "flash_decode", "swiglu_qgemv", "ref"]
+__all__ = ["qmatmul", "qmatmul_xla", "decode_attention",
+           "paged_decode_attention", "swiglu", "cim_gemv", "flash_decode",
+           "paged_flash_decode", "swiglu_qgemv", "ref"]

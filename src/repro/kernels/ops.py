@@ -17,7 +17,9 @@ from repro.quant.qarray import QTensor, maybe_dequantize
 
 from .cim_gemv import cim_gemv
 from .flash_decode import flash_decode
-from .ref import ref_flash_decode, ref_qmatmul, ref_swiglu_qgemv
+from .paged_flash_decode import paged_flash_decode
+from .ref import (ref_flash_decode, ref_paged_decode, ref_qmatmul,
+                  ref_swiglu_qgemv)
 from .swiglu_gemv import swiglu_qgemv
 
 
@@ -67,6 +69,28 @@ def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
     out = flash_decode(qf, kf, vf, pos, window=window, attn_cap=attn_cap,
                        interpret=_interpret())
     return out.reshape(b, g, qpk, hd)
+
+
+def paged_decode_attention(q: jax.Array, k_pages: jax.Array,
+                           v_pages: jax.Array, tables: jax.Array,
+                           lengths: jax.Array, window: int = 0,
+                           attn_cap: float = 0.0,
+                           use_kernel: bool = None) -> jax.Array:
+    """Paged decode attention: q (b,g,qpk,hd), pools (n_pages,ps,g,hd),
+    tables (b,max_pages), lengths (b,) -> (b,g,qpk,hd).
+
+    Routes to the Pallas block-table kernel on TPU (the gather never
+    materializes); the pure-jnp gather reference is the lowering path
+    everywhere else (and the oracle the kernel is tested against).
+    """
+    if use_kernel is None:
+        use_kernel = not _interpret()
+    if not use_kernel:
+        return ref_paged_decode(q, k_pages, v_pages, tables, lengths,
+                                window, attn_cap)
+    return paged_flash_decode(q, k_pages, v_pages, tables, lengths,
+                              window=window, attn_cap=attn_cap,
+                              interpret=_interpret())
 
 
 def swiglu(x: jax.Array, w_gate: Any, w_up: Any) -> jax.Array:

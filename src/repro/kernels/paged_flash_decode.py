@@ -1,0 +1,114 @@
+"""`paged_flash_decode` — block-table paged decode attention Pallas kernel.
+
+The paged-KV serving runtime keeps K/V in a shared pool of fixed-size
+pages; each sequence owns a list of page ids (its block table).  This
+kernel is `flash_decode` with the KV stream INDIRECTED through the block
+table: the table and the per-sequence lengths ride in as scalar-prefetch
+operands, so the grid's page dimension DMAs exactly the pages the
+sequence owns (EdgeCIM's KV-block streaming, Sec. III-C2, with paging on
+top).  Online-softmax state (m, l, acc) lives in VMEM scratch across the
+page dimension.
+
+Grid: (batch, kv_head, seq_page).  Padded table entries must hold a
+valid page id (the engine pads with 0); their scores are masked by the
+length operand, so the gathered garbage never contributes.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1.0e30
+
+
+def _kernel(tab_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
+            m_ref, l_ref, acc_ref, *, page_size: int, n_i: int,
+            scale: float, window: int, attn_cap: float):
+    b_idx = pl.program_id(0)
+    i_idx = pl.program_id(2)
+
+    @pl.when(i_idx == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    length = len_ref[b_idx]
+    q = q_ref[0, 0].astype(jnp.float32)                 # (qpk, hd)
+    k = k_ref[0, :, 0].astype(jnp.float32)              # (page_size, hd)
+    v = v_ref[0, :, 0].astype(jnp.float32)
+
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+    if attn_cap:
+        s = attn_cap * jnp.tanh(s / attn_cap)
+    k_pos = i_idx * page_size + jax.lax.broadcasted_iota(
+        jnp.int32, (1, page_size), 1)
+    valid = k_pos < length
+    if window:
+        valid = valid & ((length - 1) - k_pos < window)
+    s = jnp.where(valid, s, NEG_INF)                    # (qpk, page_size)
+
+    m_prev = m_ref[...]                                 # (qpk, 1)
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new)
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jnp.dot(
+        p, v, preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(i_idx == n_i - 1)
+    def _done():
+        o_ref[0, 0] = (acc_ref[...] /
+                       jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "attn_cap",
+                                             "interpret"))
+def paged_flash_decode(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
+                       tables: jax.Array, lengths: jax.Array,
+                       window: int = 0, attn_cap: float = 0.0,
+                       interpret: bool = False) -> jax.Array:
+    """q: (b, g, qpk, hd); k_pages/v_pages: (n_pages, page_size, g, hd);
+    tables: (b, max_pages) int32; lengths: (b,) int32 valid tokens per
+    sequence (inclusive of the current token).  Returns (b, g, qpk, hd).
+    """
+    b, g, qpk, hd = q.shape
+    page_size = k_pages.shape[1]
+    max_pages = tables.shape[1]
+    scale = 1.0 / (hd ** 0.5)
+
+    # pools stay in their storage layout (n_pages, ps, g, hd): the block
+    # table drives the page index and the kv-head rides as a unit axis,
+    # so no whole-pool transpose/copy happens per decode step
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, g, max_pages),
+        in_specs=[
+            pl.BlockSpec((1, 1, qpk, hd), lambda bi, gi, i, tab, ln:
+                         (bi, gi, 0, 0)),
+            pl.BlockSpec((1, page_size, 1, hd), lambda bi, gi, i, tab, ln:
+                         (tab[bi, i], 0, gi, 0)),
+            pl.BlockSpec((1, page_size, 1, hd), lambda bi, gi, i, tab, ln:
+                         (tab[bi, i], 0, gi, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, qpk, hd), lambda bi, gi, i, tab, ln:
+                               (bi, gi, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((qpk, 1), jnp.float32),
+            pltpu.VMEM((qpk, 1), jnp.float32),
+            pltpu.VMEM((qpk, hd), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(_kernel, page_size=page_size, n_i=max_pages,
+                          scale=scale, window=window, attn_cap=attn_cap),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, g, qpk, hd), q.dtype),
+        interpret=interpret,
+    )(tables.astype(jnp.int32), lengths.astype(jnp.int32), q, k_pages,
+      v_pages)

@@ -42,6 +42,37 @@ def ref_flash_decode(q: jax.Array, k: jax.Array, v: jax.Array,
     return jnp.einsum("bgpk,bkgh->bgph", w.astype(v.dtype), v)
 
 
+def ref_paged_decode(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
+                     tables: jax.Array, lengths: jax.Array,
+                     window: int = 0, attn_cap: float = 0.0) -> jax.Array:
+    """Paged single-token decode attention oracle (block-table gather).
+
+    q: (b, g, qpk, hd); k_pages, v_pages: (n_pages, page_size, g, hd);
+    tables: (b, max_pages) int32 page ids (padded entries must be valid
+    indices — they are masked out); lengths: (b,) int32 tokens valid per
+    sequence INCLUSIVE of the current one.  Returns (b, g, qpk, hd).
+    """
+    b = q.shape[0]
+    hd = q.shape[-1]
+    n_pg, ps = k_pages.shape[0], k_pages.shape[1]
+    S = tables.shape[1] * ps
+    k = k_pages[tables].reshape(b, S, *k_pages.shape[2:])
+    v = v_pages[tables].reshape(b, S, *v_pages.shape[2:])
+    scores = jnp.einsum("bgph,bkgh->bgpk", q, k.astype(q.dtype),
+                        preferred_element_type=jnp.float32)
+    scores = scores / jnp.sqrt(jnp.float32(hd))
+    if attn_cap:
+        scores = attn_cap * jnp.tanh(scores / attn_cap)
+    k_pos = jnp.arange(S)
+    mask = k_pos[None, :] < lengths[:, None]
+    if window:
+        mask = mask & ((lengths[:, None] - 1) - k_pos[None, :] < window)
+    scores = jnp.where(mask[:, None, None, :], scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bgpk,bkgh->bgph", w.astype(q.dtype),
+                      v.astype(q.dtype))
+
+
 def ref_swiglu_qgemv(x: jax.Array, w_gate, w_up) -> jax.Array:
     """Fused gate/up GEMV + SiLU*mul oracle. x: (m, d) -> (m, f)."""
     g = ref_qmatmul(x, w_gate, out_dtype=jnp.float32)

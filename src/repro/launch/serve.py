@@ -2,6 +2,9 @@
 
   PYTHONPATH=src python -m repro.launch.serve --arch gemma3-4b --smoke \
       --quant int4 --requests 8 --tokens 32
+
+Dense/moe architectures run on the paged-KV continuous-batching engine;
+recurrent families (xlstm/zamba) fall back to the slot shim.
 """
 import argparse
 
@@ -16,8 +19,14 @@ def main():
                     choices=["bf16", "int8", "int4"])
     ap.add_argument("--requests", type=int, default=6)
     ap.add_argument("--tokens", type=int, default=24)
-    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--batch", type=int, default=4,
+                    help="max concurrent decode lanes")
     ap.add_argument("--max-seq", type=int, default=128)
+    ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--pages", type=int, default=0,
+                    help="KV pool pages (0 = dense-equivalent worst case)")
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--top-k", type=int, default=0)
     args = ap.parse_args()
 
     import jax
@@ -25,7 +34,8 @@ def main():
     from repro.configs import get_config, get_smoke_config
     from repro.models import DecoderLM, init_params
     from repro.quant import quantize_params, quantized_fraction
-    from repro.serve import Request, ServeEngine
+    from repro.serve import (PagedServeEngine, Request, SamplingParams,
+                             ServeEngine, ServeRequest)
 
     cfg = (get_smoke_config(args.arch) if args.smoke
            else get_config(args.arch)).replace(dtype="float32", remat=False)
@@ -40,16 +50,44 @@ def main():
                                  else 8, group=16 if args.smoke else 128)
         print(f"[serve] {quantized_fraction(params)*100:.0f}% of param "
               f"bytes quantized ({args.quant})")
-    eng = ServeEngine(model, params, n_slots=args.slots,
-                      max_seq=args.max_seq)
+
     rng = np.random.default_rng(0)
-    reqs = [Request(prompt=rng.integers(0, cfg.vocab, 8).astype(np.int32),
-                    max_new_tokens=args.tokens, rid=i)
-            for i in range(args.requests)]
-    done = eng.run(reqs)
-    print(f"[serve] {sum(len(r.out_tokens) for r in done)} tokens, "
-          f"{eng.throughput():.0f} tok/s decode "
-          f"({jax.default_backend()} backend)")
+    prompts = [rng.integers(0, cfg.vocab, int(n)).astype(np.int32)
+               for n in rng.integers(4, 17, size=args.requests)]
+
+    if args.max_seq % args.page_size:
+        raise SystemExit(f"--max-seq {args.max_seq} must be a multiple of "
+                         f"--page-size {args.page_size}")
+    if model.supports_paged():
+        eng = PagedServeEngine(
+            model, params, max_batch=args.batch, max_seq=args.max_seq,
+            page_size=args.page_size, n_pages=args.pages or None)
+        sampling = SamplingParams(temperature=args.temperature,
+                                  top_k=args.top_k)
+        reqs = [ServeRequest(prompt=p, max_new_tokens=args.tokens, rid=i,
+                             sampling=sampling)
+                for i, p in enumerate(prompts)]
+        eng.run(reqs)
+        m = eng.summary()
+        print(f"[serve] {int(m['tokens'])} tokens, "
+              f"{eng.throughput():.0f} tok/s decode, "
+              f"ttft p50 {m['ttft_p50_s']*1e3:.0f} ms / "
+              f"p99 {m['ttft_p99_s']*1e3:.0f} ms, "
+              f"tpot p50 {m['tpot_p50_s']*1e3:.1f} ms, "
+              f"kv occupancy peak {m['kv_occupancy_peak']*100:.0f}% "
+              f"({jax.default_backend()} backend)")
+    else:
+        eng = ServeEngine(model, params, n_slots=args.batch,
+                          max_seq=args.max_seq,
+                          greedy=args.temperature <= 0,
+                          sampling=SamplingParams(
+                              temperature=args.temperature,
+                              top_k=args.top_k))
+        done = eng.run([Request(prompt=p, max_new_tokens=args.tokens, rid=i)
+                        for i, p in enumerate(prompts)])
+        print(f"[serve] {sum(len(r.out_tokens) for r in done)} tokens, "
+              f"{eng.throughput():.0f} tok/s decode "
+              f"({jax.default_backend()} backend, slot shim)")
 
 
 if __name__ == "__main__":

@@ -233,6 +233,141 @@ def gqa_decode(p: Params, cfg: ModelConfig, x: jax.Array, cache: Dict,
     return out, {"k": ck, "v": cv}
 
 
+def _page_scatter(pool: jax.Array, vals: jax.Array, tables: jax.Array,
+                  slots: jax.Array, n_new: jax.Array) -> jax.Array:
+    """Write per-token rows into a paged pool.
+
+    pool: (n_pages, page_size, ...); vals: (b, s, ...); tables:
+    (b, max_pages); slots: (b, s) absolute positions; n_new: (b,) valid
+    new tokens per sequence (padding lanes write out-of-bounds and drop).
+    """
+    b, s = vals.shape[0], vals.shape[1]
+    n_pages, ps = pool.shape[0], pool.shape[1]
+    page = tables[jnp.arange(b)[:, None], slots // ps]           # (b, s)
+    page = jnp.where(jnp.arange(s)[None, :] < n_new[:, None], page, n_pages)
+    off = slots % ps
+    return pool.at[page, off].set(vals.astype(pool.dtype), mode="drop")
+
+
+def gqa_paged_step(p: Params, cfg: ModelConfig, x: jax.Array, cache: Dict,
+                   tables: jax.Array, lengths: jax.Array, n_new: jax.Array,
+                   is_local) -> Tuple[jax.Array, Dict]:
+    """Chunked prefill / decode against a paged KV pool.
+
+    x: (b, s, d) — s == 1 is decode, s > 1 a prefill chunk (right-padded;
+    `n_new[i]` of the s tokens are real).  cache {k, v}:
+    (n_pages, page_size, g, hd) page pools shared by the whole batch;
+    tables: (b, max_pages) int32; lengths: (b,) tokens already cached.
+    Per-sequence positions — no shared `pos` scalar, so one sequence's
+    prefill can never clobber another's rows (the dense engine's
+    `_prefill_slot` bug).
+    """
+    b, s, _ = x.shape
+    hd, g, qpk = cfg.hd(), cfg.n_kv_heads, cfg.q_per_kv()
+    ps = cache["k"].shape[1]
+    S = tables.shape[1] * ps
+    q, k, v = _qkv(p, cfg, x)
+
+    theta_local = cfg.rope_theta_local or cfg.rope_theta
+    theta = jnp.where(is_local, theta_local, cfg.rope_theta)
+    slots = lengths[:, None] + jnp.arange(s)[None, :]            # (b, s)
+    cos, sin = rope_tables(slots, hd, theta)                     # (b, s, hd/2)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+
+    ck = _page_scatter(cache["k"], k, tables, slots, n_new)
+    cv = _page_scatter(cache["v"], v, tables, slots, n_new)
+    total = lengths + n_new                                      # (b,)
+    window = int(cfg.local_window or 0)
+    scale = 1.0 / math.sqrt(hd)
+
+    if s == 1 and not window:
+        # decode fast path: block-table Pallas kernel on TPU, gather
+        # reference elsewhere.  Models with sliding-window layers carry a
+        # traced `is_local`, which needs the masked gather path below.
+        from repro.kernels.ops import paged_decode_attention
+        qg = q.reshape(b, g, qpk, hd)
+        out_g = paged_decode_attention(qg, ck, cv, tables, total, 0,
+                                       cfg.attn_softcap)
+        out = out_g.reshape(b, 1, cfg.n_heads * hd).astype(x.dtype)
+        return qmm(out, p["wo"]), {"k": ck, "v": cv}
+
+    # chunk path: gather the sequence's pages back to a contiguous view
+    kg = ck[tables].reshape(b, S, g, hd)
+    vg = cv[tables].reshape(b, S, g, hd)
+    qg = q.reshape(b, s, g, qpk, hd)
+    scores = jnp.einsum("bqgph,bkgh->bgpqk", qg, kg.astype(qg.dtype),
+                        preferred_element_type=jnp.float32) * scale
+    if cfg.attn_softcap:
+        scores = softcap(scores, cfg.attn_softcap)
+    k_pos = jnp.arange(S)
+    mask = (k_pos[None, None, :] <= slots[:, :, None]) \
+        & (k_pos[None, None, :] < total[:, None, None])          # (b, s, S)
+    if window:
+        local_ok = slots[:, :, None] - k_pos[None, None, :] < window
+        mask = mask & jnp.where(is_local, local_ok, True)
+    scores = jnp.where(mask[:, None, None, :, :], scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bgpqk,bkgh->bqgph", w.astype(vg.dtype), vg)
+    out = out.reshape(b, s, cfg.n_heads * hd).astype(x.dtype)
+    return qmm(out, p["wo"]), {"k": ck, "v": cv}
+
+
+def mla_paged_step(p: Params, cfg: ModelConfig, x: jax.Array, cache: Dict,
+                   tables: jax.Array, lengths: jax.Array, n_new: jax.Array,
+                   is_local) -> Tuple[jax.Array, Dict]:
+    """Paged absorbed-MLA step over latent pools.
+
+    cache {c_kv: (n_pages, ps, r), k_rope: (n_pages, ps, rope_d)}.
+    """
+    m = cfg.mla
+    b, s, _ = x.shape
+    H = cfg.n_heads
+    nope, rope_d, vd = m.qk_nope_head_dim, m.qk_rope_head_dim, m.v_head_dim
+    r = m.kv_lora_rank
+    ps = cache["c_kv"].shape[1]
+    S = tables.shape[1] * ps
+
+    q = qmm(x, p["wq"]).reshape(b, s, H, nope + rope_d)
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+
+    dkv = qmm(x, p["w_dkv"])
+    c_new = rms_norm(dkv[..., :r], p["ckv_norm"], cfg.norm_eps)
+    kr_new = dkv[..., r:][:, :, None, :]                         # (b,s,1,rd)
+
+    slots = lengths[:, None] + jnp.arange(s)[None, :]
+    cos, sin = rope_tables(slots, rope_d, cfg.rope_theta)
+    q_rope = apply_rope(q_rope, cos, sin)
+    kr_new = apply_rope(kr_new, cos, sin)
+
+    c_pool = _page_scatter(cache["c_kv"], c_new, tables, slots, n_new)
+    kr_pool = _page_scatter(cache["k_rope"], kr_new[:, :, 0, :], tables,
+                            slots, n_new)
+    c_all = c_pool[tables].reshape(b, S, r)
+    kr_all = kr_pool[tables].reshape(b, S, rope_d)
+
+    w_uk = deq(p["w_uk"]).reshape(r, H, nope)
+    q_lat = jnp.einsum("bqhn,rhn->bqhr", q_nope, w_uk)
+    scores = (jnp.einsum("bqhr,bkr->bhqk", q_lat, c_all.astype(q_lat.dtype),
+                         preferred_element_type=jnp.float32)
+              + jnp.einsum("bqhr,bkr->bhqk", q_rope,
+                           kr_all.astype(q_rope.dtype),
+                           preferred_element_type=jnp.float32))
+    scores = scores / math.sqrt(nope + rope_d)
+    k_pos = jnp.arange(S)
+    total = lengths + n_new
+    mask = (k_pos[None, None, :] <= slots[:, :, None]) \
+        & (k_pos[None, None, :] < total[:, None, None])
+    scores = jnp.where(mask[:, None, :, :], scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1)
+
+    o_lat = jnp.einsum("bhqk,bkr->bqhr", w.astype(c_all.dtype), c_all)
+    w_uv = deq(p["w_uv"]).reshape(r, H, vd)
+    out = jnp.einsum("bqhr,rhv->bqhv", o_lat.astype(x.dtype), w_uv)
+    out = qmm(out.reshape(b, s, H * vd), p["wo"])
+    return out, {"c_kv": c_pool, "k_rope": kr_pool}
+
+
 # ----------------------------------------------------------------------------
 # MLA (DeepSeek-V2 multi-head latent attention)
 # ----------------------------------------------------------------------------
@@ -333,6 +468,30 @@ def attn_forward(p, cfg, x, positions, is_local):
 def attn_decode(p, cfg, x, cache, pos, is_local):
     fn = mla_decode if cfg.attn_kind == "mla" else gqa_decode
     return fn(p, cfg, x, cache, pos, is_local)
+
+
+def attn_paged_step(p, cfg, x, cache, tables, lengths, n_new, is_local):
+    fn = mla_paged_step if cfg.attn_kind == "mla" else gqa_paged_step
+    return fn(p, cfg, x, cache, tables, lengths, n_new, is_local)
+
+
+def paged_cache_spec(cfg: ModelConfig, n_pages: int, page_size: int,
+                     dtype=jnp.bfloat16) -> Dict[str, jax.ShapeDtypeStruct]:
+    """Shape/dtype of one layer's paged KV pool (shared by all sequences)."""
+    if cfg.attn_kind == "mla":
+        m = cfg.mla
+        return {
+            "c_kv": jax.ShapeDtypeStruct((n_pages, page_size,
+                                          m.kv_lora_rank), dtype),
+            "k_rope": jax.ShapeDtypeStruct((n_pages, page_size,
+                                            m.qk_rope_head_dim), dtype),
+        }
+    return {
+        "k": jax.ShapeDtypeStruct((n_pages, page_size, cfg.n_kv_heads,
+                                   cfg.hd()), dtype),
+        "v": jax.ShapeDtypeStruct((n_pages, page_size, cfg.n_kv_heads,
+                                   cfg.hd()), dtype),
+    }
 
 
 def empty_cache_spec(cfg: ModelConfig, batch: int, max_seq: int,

@@ -15,7 +15,8 @@ from typing import Any, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from .attention import attention_specs, attn_decode, attn_forward
+from .attention import (attention_specs, attn_decode, attn_forward,
+                        attn_paged_step)
 from .common import FSDP, NONE, TP, ParamSpec, layer_norm, rms_norm
 from .config import ModelConfig
 from .ffn import dense_ffn, dense_ffn_specs, ffn_forward, ffn_specs
@@ -86,6 +87,26 @@ def transformer_block_decode(p: Params, cfg: ModelConfig, x: jax.Array,
                              ) -> Tuple[jax.Array, Dict]:
     h = apply_norm(p["ln_attn"], cfg, x)
     a, cache = attn_decode(p["attn"], cfg, h, cache, pos, is_local)
+    if cfg.post_block_norm:
+        a = apply_norm(p["post_attn"], cfg, a)
+    x = x + a
+    h = apply_norm(p["ln_ffn"], cfg, x)
+    f = dense_ffn(p["ffn"], cfg, h) if dense_override \
+        else ffn_forward(p["ffn"], cfg, h)
+    if cfg.post_block_norm:
+        f = apply_norm(p["post_ffn"], cfg, f)
+    return x + f, cache
+
+
+def transformer_block_paged(p: Params, cfg: ModelConfig, x: jax.Array,
+                            cache: Dict, tables: jax.Array,
+                            lengths: jax.Array, n_new: jax.Array, is_local,
+                            dense_override: bool = False
+                            ) -> Tuple[jax.Array, Dict]:
+    """Decode/chunked-prefill block against a paged KV pool (x: (b,s,d))."""
+    h = apply_norm(p["ln_attn"], cfg, x)
+    a, cache = attn_paged_step(p["attn"], cfg, h, cache, tables, lengths,
+                               n_new, is_local)
     if cfg.post_block_norm:
         a = apply_norm(p["post_attn"], cfg, a)
     x = x + a

@@ -25,14 +25,15 @@ from repro.dist.shard import constrain
 from repro.kernels.ops import qmatmul_xla as qmm
 from repro.quant.qarray import QTensor, dequant_rows, maybe_dequantize as deq
 
-from .attention import empty_cache_spec
+from .attention import empty_cache_spec, paged_cache_spec
 from .blocks import (mamba_block, mamba_block_decode, mamba_block_specs,
                      mlstm_block, mlstm_block_decode, mlstm_block_specs,
                      norm_specs, apply_norm, slstm_block, slstm_block_decode,
                      slstm_block_specs, transformer_block,
-                     transformer_block_decode, transformer_block_specs,
-                     zamba_lora_specs, zamba_shared_block,
-                     zamba_shared_block_decode, zamba_shared_specs)
+                     transformer_block_decode, transformer_block_paged,
+                     transformer_block_specs, zamba_lora_specs,
+                     zamba_shared_block, zamba_shared_block_decode,
+                     zamba_shared_specs)
 from .common import (BATCH, FSDP, KV_SEQ, NONE, TP, ParamSpec,
                      cross_entropy_loss, init_params, param_count,
                      scan_layers, softcap, stack_specs)
@@ -359,6 +360,61 @@ class DecoderLM:
         return h, cache
 
     # ==================================================================
+    # paged decode / chunked batch prefill (the serve-v2 runtime path)
+    # ==================================================================
+    def supports_paged(self) -> bool:
+        """Paging applies to attention KV; recurrent families carry
+        constant-size per-sequence state instead (nothing to page)."""
+        return self.cfg.family in ("dense", "moe")
+
+    def paged_step(self, params: Params, cache: Any,
+                   inputs: Dict[str, jax.Array], tables: jax.Array,
+                   lengths: jax.Array, n_new: jax.Array):
+        """Advance a dynamic batch against the paged KV pool.
+
+        inputs: {tokens: (b, s)} — s == 1 is a decode step for the whole
+        batch; s > 1 is a chunked BATCH PREFILL (each lane consumes
+        `n_new[i] <= s` prompt tokens this call; lanes with n_new == 0
+        are inactive padding).  tables: (b, max_pages) page ids per lane;
+        lengths: (b,) tokens already in cache per lane.
+
+        Returns (logits (b, s, vocab), cache); the caller samples lane i
+        from logits[i, n_new[i] - 1].  Per-lane positions mean one
+        lane's writes can never touch another lane's pages.
+        """
+        cfg = self.cfg
+        assert self.supports_paged(), cfg.family
+        h = self._embed(params, inputs)
+        h = constrain(h, "batch", None, "tp")
+
+        n_first = (cfg.moe.first_dense_layers
+                   if (cfg.moe and cfg.moe.first_dense_layers) else 0)
+        if n_first:
+            def first_body(x, inp):
+                layer_p, c = inp
+                x, c = transformer_block_paged(
+                    layer_p, cfg, x, c, tables, lengths, n_new,
+                    jnp.bool_(False), dense_override=True)
+                return constrain(x, "batch", None, "tp"), c
+            h, cf = scan_layers(first_body, h,
+                                (params["first_blocks"],
+                                 cache["attn_first"]), cfg.unroll)
+            cache = dict(cache, attn_first=cf)
+
+        flags = self._local_flags(cfg.n_layers)[n_first:]
+
+        def body(x, inp):
+            layer_p, c, is_local = inp
+            x, c = transformer_block_paged(layer_p, cfg, x, c, tables,
+                                           lengths, n_new, is_local)
+            return constrain(x, "batch", None, "tp"), c
+
+        h, cm = scan_layers(body, h, (params["blocks"], cache["attn"],
+                                      flags), cfg.unroll)
+        logits = self._logits(params, h)
+        return logits, dict(cache, attn=cm)
+
+    # ==================================================================
     # cache specs (ParamSpec pytree: shapes + dtypes + logical axes)
     # ==================================================================
     def cache_specs(self, batch: int, max_seq: int,
@@ -428,3 +484,29 @@ class DecoderLM:
             return out
 
         raise ValueError(cfg.family)
+
+    def paged_cache_specs(self, n_pages: int, page_size: int,
+                          kv_dtype=jnp.bfloat16) -> Any:
+        """ParamSpec pytree for the paged KV pool: per-layer page pools
+        stacked over layers (scan layout), shared by every sequence via
+        block tables.  Total KV memory is n_pages * page_size rows —
+        sized to the WORKLOAD, not to n_slots * max_seq."""
+        cfg = self.cfg
+        assert self.supports_paged(), cfg.family
+
+        def pool_axes(struct):
+            if len(struct.shape) == 4:          # (n_pages, ps, g, hd)
+                return (NONE, NONE, TP, NONE)
+            return (NONE, NONE, NONE)           # (n_pages, ps, r) MLA latent
+
+        one = paged_cache_spec(cfg, n_pages, page_size, kv_dtype)
+        one_specs = {k: ParamSpec(tuple(v.shape), v.dtype, pool_axes(v),
+                                  init="zeros") for k, v in one.items()}
+        n_first = (cfg.moe.first_dense_layers
+                   if (cfg.moe and cfg.moe.first_dense_layers) else 0)
+        out = {"attn": {k: v.stacked(cfg.n_layers - n_first)
+                        for k, v in one_specs.items()}}
+        if n_first:
+            out["attn_first"] = {k: v.stacked(n_first)
+                                 for k, v in one_specs.items()}
+        return out

@@ -1,4 +1,14 @@
-"""Serving substrate: slot-based batched decode engine."""
-from .engine import ServeEngine, Request
+"""Serving substrate: paged-KV continuous-batching runtime (v2).
 
-__all__ = ["ServeEngine", "Request"]
+allocator -> scheduler -> engine -> telemetry; see README.md in this
+package.  `ServeEngine`/`Request` remain as the seed-API shim.
+"""
+from .engine import PagedServeEngine, Request, ServeEngine
+from .paged_cache import BlockAllocator, OutOfPagesError, PagedKVCache
+from .sampling import SamplingParams, sample_tokens
+from .scheduler import Scheduler, ServeRequest
+from .telemetry import Telemetry
+
+__all__ = ["PagedServeEngine", "Request", "ServeEngine", "BlockAllocator",
+           "OutOfPagesError", "PagedKVCache", "SamplingParams",
+           "sample_tokens", "Scheduler", "ServeRequest", "Telemetry"]

@@ -1,15 +1,29 @@
-"""Batched decode serving engine (EdgeCIM's workload at pod scale).
+"""Paged-KV continuous-batching serve engine (repro.serve v2).
 
-Slot-based continuous batching-lite: a fixed decode batch of `n_slots`
-sequences; finished/empty slots are refilled from the request queue at
-step granularity.  The decode step is a single jitted call (one graph for
-the whole batch — the GEMV regime the paper optimizes), with quantized
-weights (INT4/INT8) as first-class params.
+EdgeCIM's workload is autoregressive decode — batched GEMV over a
+growing KV cache — and the memory that cache wastes is the edge
+bottleneck.  v2 replaces the seed's fixed-slot engine + dense
+(n_slots, max_seq) cache with:
 
-The engine is deliberately single-process here (the multi-pod image of
-decode is the dry-run's serve_step with KV sharded over the mesh); its
-role in this repo is (a) the end-to-end serving example, (b) the harness
-that measures tokens/s for the benchmark suite.
+  allocator  (paged_cache.BlockAllocator) — free-list over KV pages
+  scheduler  (scheduler.Scheduler)        — admission control, priority,
+                                            deadlines, chunked prefill
+  engine     (this file)                  — dynamic decode batch against
+                                            the paged pool, streaming
+                                            callbacks, preemption
+  telemetry  (telemetry.Telemetry)        — TTFT/TPOT/queue percentiles,
+                                            KV occupancy
+
+Every step runs at most two jitted graphs with shape-stable arguments:
+one chunked BATCH PREFILL call (b = max_batch, s = prefill_chunk) and
+one decode call (b = max_batch, s = 1), both `DecoderLM.paged_step`.
+Per-lane positions make one sequence's prefill unable to clobber
+another's cache rows (the seed `_prefill_slot` bug).
+
+The legacy slot engine survives only as `ServeEngine`, a compatibility
+shim: dense/moe families route to the paged runtime; recurrent families
+(xlstm/zamba — constant-size state, nothing to page) keep a slot loop
+that only admits into an idle batch.
 """
 from __future__ import annotations
 
@@ -24,10 +38,244 @@ import numpy as np
 from repro.models import DecoderLM
 from repro.models.common import spec_structs
 
+from .paged_cache import PagedKVCache
+from .sampling import SamplingParams, sample_tokens
+from .scheduler import Scheduler, ServeRequest
+from .telemetry import Telemetry
 
+
+class PagedServeEngine:
+    def __init__(self, model: DecoderLM, params: Any, *,
+                 max_batch: int = 8, max_seq: int = 256,
+                 page_size: int = 16, n_pages: Optional[int] = None,
+                 prefill_chunk: int = 16, kv_dtype=jnp.bfloat16,
+                 eos_id: Optional[int] = None, seed: int = 0,
+                 clock=time.monotonic):
+        assert model.cfg.embed_inputs, "engine serves token-input models"
+        assert model.supports_paged(), (
+            f"family {model.cfg.family!r} has no paged-KV path; use the "
+            "ServeEngine shim")
+        assert max_seq % page_size == 0, (max_seq, page_size)
+        self.model = model
+        self.params = params
+        self.max_batch = max_batch
+        self.max_seq = max_seq
+        self.eos_id = eos_id
+        self._clock = clock
+        if n_pages is None:      # dense-equivalent worst case: never OOM
+            n_pages = max_batch * (max_seq // page_size)
+        self.cache = PagedKVCache(model, n_pages, page_size, max_seq,
+                                  kv_dtype)
+        self.scheduler = Scheduler(max_batch,
+                                   prefill_chunk=min(prefill_chunk, max_seq))
+        self.telemetry = Telemetry()
+        self.lanes: List[Optional[ServeRequest]] = [None] * max_batch
+        self._step_fn = jax.jit(model.paged_step, donate_argnums=(1,))
+        self._key = jax.random.PRNGKey(seed)
+        self._next_eid = 0
+
+    # ------------------------------------------------------------------
+    @property
+    def n_running(self) -> int:
+        return sum(r is not None for r in self.lanes)
+
+    @property
+    def busy(self) -> bool:
+        return self.n_running > 0 or self.scheduler.n_queued > 0
+
+    def submit(self, req: ServeRequest) -> None:
+        now = self._clock()
+        req.eid = self._next_eid      # rid is the caller's label and may
+        self._next_eid += 1           # collide; eid keys cache/telemetry
+        self.telemetry.enqueue(req.eid, now)
+        self.scheduler.submit(req, now)
+
+    def run(self, requests: List[ServeRequest]) -> List[ServeRequest]:
+        for r in requests:
+            self.submit(r)
+        while self.busy:
+            self.step()
+        return requests
+
+    # ------------------------------------------------------------------
+    def _tables(self) -> np.ndarray:
+        tab = np.zeros((self.max_batch, self.cache.max_pages), np.int32)
+        for i, req in enumerate(self.lanes):
+            if req is not None:
+                tab[i] = self.cache.table_for(req.eid)
+        return tab
+
+    def _lengths(self) -> np.ndarray:
+        ln = np.zeros(self.max_batch, np.int32)
+        for i, req in enumerate(self.lanes):
+            if req is not None:
+                ln[i] = self.cache.seqs[req.eid].length
+        return ln
+
+    def _sample_rows(self, rows: jax.Array) -> np.ndarray:
+        """rows: (max_batch, vocab) -> (max_batch,) tokens, per-lane
+        sampling params, PRNG key threaded through the engine."""
+        temp = np.zeros(self.max_batch, np.float32)
+        topk = np.zeros(self.max_batch, np.int32)
+        for i, req in enumerate(self.lanes):
+            if req is not None:
+                temp[i] = req.sampling.temperature
+                topk[i] = req.sampling.top_k
+        self._key, sub = jax.random.split(self._key)
+        return np.asarray(sample_tokens(sub, rows, temp, topk))
+
+    def _emit(self, req: ServeRequest, token: int, now: float,
+              decode: bool = True) -> None:
+        req.out_tokens.append(token)
+        self.telemetry.token(req.eid, now, decode=decode)
+        if req.on_token is not None:
+            req.on_token(req.rid, token)
+
+    def _maybe_finish(self, lane: int, now: float) -> None:
+        req = self.lanes[lane]
+        seq = self.cache.seqs[req.eid]
+        hit_eos = (self.eos_id is not None and req.out_tokens
+                   and req.out_tokens[-1] == self.eos_id)
+        if (len(req.out_tokens) >= req.max_new_tokens or hit_eos
+                or seq.length >= self.max_seq):
+            req.done = True
+            self.telemetry.done(req.eid, now)
+            self.cache.release(req.eid)
+            self.lanes[lane] = None
+
+    def _preempt(self, lane: int) -> None:
+        """Pool exhausted mid-decode: evict this lane, requeue it with
+        (prompt + generated) as the new prompt — its KV is rebuilt by
+        prefill when pages free up."""
+        req = self.lanes[lane]
+        self.cache.release(req.eid)
+        self.lanes[lane] = None
+        req.prompt = np.concatenate(
+            [np.asarray(req.prompt, np.int32),
+             np.asarray(req.out_tokens, np.int32)])
+        req.prefill_done = 0
+        self.scheduler.submit(req, self._clock(), resubmit=True)
+
+    # ------------------------------------------------------------------
+    def step(self) -> None:
+        now = self._clock()
+        for req in self.scheduler.admit(now, self.n_running, self.cache):
+            lane = self.lanes.index(None)
+            self.lanes[lane] = req
+            self.telemetry.admit(req.eid, now)
+
+        prefill_s = self._prefill_phase()
+        decode_s = self._decode_phase()
+        self.telemetry.step(self.cache.occupancy(), self.n_running,
+                            decode_s=decode_s, prefill_s=prefill_s)
+
+    def _prefill_phase(self) -> float:
+        """One chunked BATCH prefill call for every lane with prompt
+        tokens left; lanes finishing their prompt sample their first
+        output token from this call's logits."""
+        pre = [i for i, r in enumerate(self.lanes)
+               if r is not None and r.prefill_remaining > 0]
+        if not pre:
+            return 0.0
+        s = self.scheduler.prefill_chunk
+        tokens = np.zeros((self.max_batch, s), np.int32)
+        n_new = np.zeros(self.max_batch, np.int32)
+        finishing = False
+        for i in pre:
+            req = self.lanes[i]
+            q = self.scheduler.prefill_quota(req)
+            tokens[i, :q] = req.prompt[req.prefill_done:req.prefill_done + q]
+            n_new[i] = q
+            finishing |= q == req.prefill_remaining
+        lengths = self._lengths()
+        tables = self._tables()
+
+        t0 = time.monotonic()
+        logits, self.cache.pools = self._step_fn(
+            self.params, self.cache.pools, {"tokens": jnp.asarray(tokens)},
+            jnp.asarray(tables), jnp.asarray(lengths), jnp.asarray(n_new))
+        dt = time.monotonic() - t0
+
+        if finishing:       # only sample when some lane ends its prompt
+            last = jnp.take_along_axis(
+                logits, jnp.asarray(np.maximum(n_new - 1, 0)
+                                    )[:, None, None], axis=1)[:, 0, :]
+            nxt = self._sample_rows(last)
+        now = self._clock()
+        for i in pre:
+            req = self.lanes[i]
+            q = int(n_new[i])
+            req.prefill_done += q
+            self.cache.seqs[req.eid].length += q
+            self.telemetry.prefill_tokens += q
+            if req.prefill_remaining == 0:
+                self._emit(req, int(nxt[i]), now, decode=False)
+                self._maybe_finish(i, now)
+        return dt
+
+    def _decode_phase(self) -> float:
+        """One decode step for every lane with its prompt fully cached
+        and at least one emitted token (a lane that finished prefill this
+        same step joins immediately: its first token is this call's
+        input, written at position seqs[eid].length)."""
+        dec = [i for i, r in enumerate(self.lanes)
+               if r is not None and r.prefill_remaining == 0
+               and r.out_tokens]
+        ready = []
+        for i in dec:
+            req = self.lanes[i]
+            # the token we feed is the last emitted one; this decode call
+            # itself writes its KV row at position seqs[rid].length
+            if not self.cache.ensure_room(req.eid, 1):
+                self._preempt(i)
+                continue
+            ready.append(i)
+        if not ready:
+            return 0.0
+
+        tokens = np.zeros((self.max_batch, 1), np.int32)
+        n_new = np.zeros(self.max_batch, np.int32)
+        for i in ready:
+            req = self.lanes[i]
+            tokens[i, 0] = req.out_tokens[-1]
+            n_new[i] = 1
+        lengths = self._lengths()
+        tables = self._tables()
+
+        t0 = time.monotonic()
+        logits, self.cache.pools = self._step_fn(
+            self.params, self.cache.pools, {"tokens": jnp.asarray(tokens)},
+            jnp.asarray(tables), jnp.asarray(lengths), jnp.asarray(n_new))
+        dt = time.monotonic() - t0
+
+        nxt = self._sample_rows(logits[:, 0, :])
+        now = self._clock()
+        for i in ready:
+            req = self.lanes[i]
+            self.cache.seqs[req.eid].length += 1
+            self._emit(req, int(nxt[i]), now)
+            self._maybe_finish(i, now)
+        return dt
+
+    # ------------------------------------------------------------------
+    def summary(self) -> Dict[str, float]:
+        return self.telemetry.summary()
+
+    def throughput(self) -> float:
+        """Decode-graph token rate (matches summary's
+        decode_tokens_per_s; prefill time/tokens are reported
+        separately)."""
+        s = self.telemetry
+        return s.decode_tokens / s.decode_s if s.decode_s else 0.0
+
+
+# ============================================================================
+# legacy compatibility shim
+# ============================================================================
 @dataclass
 class Request:
-    prompt: np.ndarray                   # (prompt_len,) int32
+    """Legacy request (seed API); prefer scheduler.ServeRequest."""
+    prompt: np.ndarray
     max_new_tokens: int = 32
     rid: int = 0
     out_tokens: List[int] = field(default_factory=list)
@@ -35,81 +283,115 @@ class Request:
 
 
 class ServeEngine:
+    """Seed-API shim over the paged runtime.
+
+    Dense/moe models run on `PagedServeEngine` (n_slots -> max_batch,
+    worst-case page count so old workloads can never OOM).  Recurrent
+    families keep a minimal slot loop over `decode_step` that only
+    admits into an idle batch (their per-sequence state is constant-size;
+    interleaved admission needs per-lane state swap, out of scope here).
+    """
+
     def __init__(self, model: DecoderLM, params: Any, n_slots: int = 4,
-                 max_seq: int = 256, greedy: bool = True):
-        assert model.cfg.embed_inputs, "engine serves token-input models"
+                 max_seq: int = 256, greedy: bool = True,
+                 sampling: Optional[SamplingParams] = None):
         self.model = model
         self.params = params
         self.n_slots = n_slots
         self.max_seq = max_seq
         self.greedy = greedy
-
-        cache_specs = model.cache_specs(n_slots, max_seq)
-        self.cache = jax.tree_util.tree_map(
-            lambda s: jnp.zeros(s.shape, s.dtype), spec_structs(cache_specs))
-        self.slot_req: List[Optional[Request]] = [None] * n_slots
-        self.slot_pos = np.zeros(n_slots, np.int32)
-
-        self._decode = jax.jit(model.decode_step)
+        self.sampling = sampling
+        self._paged = model.supports_paged()
+        if self._paged:
+            # largest page size dividing max_seq (any max_seq works, as
+            # the seed API allowed; page_size 1 = one token per page)
+            page_size = next(p for p in (16, 8, 4, 2, 1)
+                             if max_seq % p == 0)
+            self.engine = PagedServeEngine(
+                model, params, max_batch=n_slots, max_seq=max_seq,
+                page_size=page_size,
+                prefill_chunk=min(16, max_seq))
+        else:
+            self.engine = None
         self.stats: Dict[str, float] = {"tokens": 0, "steps": 0,
                                         "decode_s": 0.0}
 
-    # ------------------------------------------------------------------
-    def _prefill_slot(self, slot: int, req: Request):
-        """Token-by-token prefill into the slot's cache rows (keeps one
-        compiled graph; a production engine would batch-prefill)."""
-        for t, tok in enumerate(req.prompt):
-            token = jnp.zeros((self.n_slots, 1), jnp.int32
-                              ).at[slot, 0].set(int(tok))
-            logits, self.cache = self._decode(self.params, self.cache,
-                                              {"tokens": token},
-                                              jnp.int32(t))
-        self.slot_req[slot] = req
-        self.slot_pos[slot] = len(req.prompt)
-
-    def _sample(self, logits: jax.Array) -> np.ndarray:
-        if self.greedy:
-            return np.asarray(jnp.argmax(logits[:, 0, :], axis=-1))
-        p = jax.nn.softmax(logits[:, 0, :], axis=-1)
-        return np.asarray(jnp.argmax(p, axis=-1))
-
-    # ------------------------------------------------------------------
     def run(self, requests: List[Request]) -> List[Request]:
-        queue = list(requests)
-        active = 0
-        # NOTE: slots share a position counter per step (aligned decoding);
-        # per-slot positions are tracked for output trimming.
-        while queue or any(r is not None for r in self.slot_req):
-            # refill empty slots
-            for s in range(self.n_slots):
-                if self.slot_req[s] is None and queue:
-                    self._prefill_slot(s, queue.pop(0))
-            # one decode step for the whole batch
-            pos = int(self.slot_pos.max())
-            if pos >= self.max_seq:
-                break
-            last = np.zeros((self.n_slots, 1), np.int32)
-            for s, req in enumerate(self.slot_req):
-                if req is not None:
-                    last[s, 0] = (req.out_tokens[-1] if req.out_tokens
-                                  else req.prompt[-1])
-            t0 = time.monotonic()
-            logits, self.cache = self._decode(
-                self.params, self.cache, {"tokens": jnp.asarray(last)},
-                jnp.int32(pos))
-            self.stats["decode_s"] += time.monotonic() - t0
-            self.stats["steps"] += 1
-            nxt = self._sample(logits)
-            for s, req in enumerate(self.slot_req):
-                if req is None:
-                    continue
-                req.out_tokens.append(int(nxt[s]))
-                self.stats["tokens"] += 1
-                self.slot_pos[s] = pos + 1
-                if len(req.out_tokens) >= req.max_new_tokens:
-                    req.done = True
-                    self.slot_req[s] = None
-        return requests
+        sampling = self.sampling if self.sampling is not None else \
+            SamplingParams(temperature=0.0 if self.greedy else 1.0)
+        if self._paged:
+            sreqs = [ServeRequest(prompt=np.asarray(r.prompt, np.int32),
+                                  max_new_tokens=r.max_new_tokens,
+                                  rid=i, sampling=sampling)
+                     for i, r in enumerate(requests)]
+            self.engine.run(sreqs)
+            for r, sr in zip(requests, sreqs):
+                r.out_tokens = sr.out_tokens
+                r.done = sr.done
+            t = self.engine.telemetry
+            self.stats = {"tokens": t.tokens, "steps": t.steps,
+                          "decode_tokens": t.decode_tokens,
+                          "decode_s": t.decode_s}
+            return requests
+        return self._run_recurrent(requests, sampling)
 
     def throughput(self) -> float:
-        return self.stats["tokens"] / max(self.stats["decode_s"], 1e-9)
+        n = self.stats.get("decode_tokens", self.stats["tokens"])
+        return n / self.stats["decode_s"] if self.stats["decode_s"] else 0.0
+
+    # -- recurrent-family fallback --------------------------------------
+    def _run_recurrent(self, requests: List[Request],
+                       sampling: SamplingParams) -> List[Request]:
+        model, params = self.model, self.params
+        decode = jax.jit(model.decode_step)
+        key = jax.random.PRNGKey(0)
+        temp = jnp.full((self.n_slots,), sampling.temperature, jnp.float32)
+        topk = jnp.full((self.n_slots,), sampling.top_k, jnp.int32)
+        # recurrent state has no padding mask, so only EQUAL-length
+        # prompts may share a lockstep batch (a pad token would corrupt
+        # the shorter lane's state); group by length, then chunk
+        by_len: Dict[int, List[Request]] = {}
+        for r in requests:
+            by_len.setdefault(len(r.prompt), []).append(r)
+        queue: List[List[Request]] = []
+        for _, group in sorted(by_len.items()):
+            for j in range(0, len(group), self.n_slots):
+                queue.append(group[j:j + self.n_slots])
+        while queue:
+            batch = queue.pop(0)
+            cache = jax.tree_util.tree_map(
+                lambda s: jnp.zeros(s.shape, s.dtype),
+                spec_structs(model.cache_specs(self.n_slots, self.max_seq)))
+            maxp = len(batch[0].prompt)
+            toks = np.zeros((self.n_slots, maxp), np.int32)
+            for i, r in enumerate(batch):
+                toks[i] = r.prompt
+            logits = None
+            for t in range(maxp):
+                logits, cache = decode(params, cache,
+                                       {"tokens": jnp.asarray(toks[:, t:t + 1])},
+                                       jnp.int32(t))
+            steps = max(r.max_new_tokens for r in batch)
+            t0 = time.monotonic()
+            last = None
+            for step in range(steps):
+                key, sub = jax.random.split(key)
+                nxt = np.asarray(sample_tokens(sub, logits[:, 0, :], temp,
+                                               topk))
+                for i, r in enumerate(batch):
+                    if len(r.out_tokens) < r.max_new_tokens:
+                        r.out_tokens.append(int(nxt[i]))
+                        self.stats["tokens"] += 1
+                        self.stats["decode_tokens"] = \
+                            self.stats.get("decode_tokens", 0) + 1
+                last = nxt.reshape(-1, 1)
+                if step == steps - 1 or maxp + step + 1 >= self.max_seq:
+                    break
+                logits, cache = decode(params, cache,
+                                       {"tokens": jnp.asarray(last)},
+                                       jnp.int32(maxp + step))
+                self.stats["steps"] += 1
+            self.stats["decode_s"] += time.monotonic() - t0
+            for r in batch:
+                r.done = True
+        return requests

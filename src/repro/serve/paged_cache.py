@@ -1,0 +1,137 @@
+"""Paged KV cache: free-list block allocator + per-request block tables.
+
+The device side is a pool of `n_pages` fixed-size pages per layer
+(allocated once, shape-stable for jit); the host side is this allocator
+handing page ids to requests as they grow.  Memory is sized to the
+WORKLOAD (total tokens in flight), not to worst-case
+`n_slots * max_seq` — the dense cache's waste is exactly what EdgeCIM
+identifies as the edge bottleneck.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class OutOfPagesError(RuntimeError):
+    pass
+
+
+class BlockAllocator:
+    """Free-list allocator over `n_pages` page ids with owner tracking.
+
+    Invariants (property-tested in tests/test_paged_cache.py):
+      * a page is never handed out twice without an intervening free
+      * free(owner) returns exactly the pages that owner held
+      * n_free + sum(held) == n_pages at all times
+    """
+
+    def __init__(self, n_pages: int):
+        assert n_pages > 0
+        self.n_pages = n_pages
+        self._free: List[int] = list(range(n_pages - 1, -1, -1))
+        self._held: Dict[int, List[int]] = {}
+
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    def n_held(self, owner: int) -> int:
+        return len(self._held.get(owner, ()))
+
+    def occupancy(self) -> float:
+        return 1.0 - len(self._free) / self.n_pages
+
+    def can_alloc(self, n: int) -> bool:
+        return len(self._free) >= n
+
+    def alloc(self, owner: int, n: int = 1) -> List[int]:
+        if len(self._free) < n:
+            raise OutOfPagesError(
+                f"need {n} pages, {len(self._free)} free of {self.n_pages}")
+        pages = [self._free.pop() for _ in range(n)]
+        self._held.setdefault(owner, []).extend(pages)
+        return pages
+
+    def free(self, owner: int) -> List[int]:
+        pages = self._held.pop(owner, [])
+        self._free.extend(pages)
+        return pages
+
+
+@dataclass
+class SequenceState:
+    """Host-side view of one request's cache residency."""
+    rid: int
+    pages: List[int] = field(default_factory=list)
+    length: int = 0                     # tokens materialized in the pool
+
+    def capacity(self, page_size: int) -> int:
+        return len(self.pages) * page_size
+
+
+class PagedKVCache:
+    """Device pools + block tables for a dynamic batch.
+
+    `pools` is the model's paged cache pytree (per-layer page pools);
+    `table_for` assembles the padded (max_pages,) block-table row a lane
+    feeds to `DecoderLM.paged_step`.  Page 0 pads unused table entries —
+    padded slots are masked by length, never read into scores.
+    """
+
+    def __init__(self, model, n_pages: int, page_size: int, max_seq: int,
+                 kv_dtype=jnp.bfloat16):
+        assert max_seq % page_size == 0
+        self.page_size = page_size
+        self.max_pages = max_seq // page_size
+        self.allocator = BlockAllocator(n_pages)
+        self.seqs: Dict[int, SequenceState] = {}
+        specs = model.paged_cache_specs(n_pages, page_size, kv_dtype)
+        from repro.models.common import spec_structs
+        self.pools = jax.tree_util.tree_map(
+            lambda s: jnp.zeros(s.shape, s.dtype), spec_structs(specs))
+
+    # -- residency ------------------------------------------------------
+    def admit(self, rid: int, prompt_len: int) -> SequenceState:
+        need = -(-max(prompt_len, 1) // self.page_size)
+        seq = SequenceState(rid=rid, pages=self.allocator.alloc(rid, need))
+        self.seqs[rid] = seq
+        return seq
+
+    def pages_needed(self, prompt_len: int) -> int:
+        return -(-max(prompt_len, 1) // self.page_size)
+
+    def ensure_room(self, rid: int, extra_tokens: int = 1) -> bool:
+        """Grow the request's page list to fit `extra_tokens` more; False
+        if the pool is exhausted (caller may preempt/queue)."""
+        seq = self.seqs[rid]
+        need_total = seq.length + extra_tokens
+        if need_total > self.max_pages * self.page_size:
+            return False
+        while seq.capacity(self.page_size) < need_total:
+            if not self.allocator.can_alloc(1):
+                return False
+            seq.pages.extend(self.allocator.alloc(rid, 1))
+        return True
+
+    def release(self, rid: int) -> None:
+        self.allocator.free(rid)
+        self.seqs.pop(rid, None)
+
+    # -- device-facing views -------------------------------------------
+    def table_for(self, rid: int) -> np.ndarray:
+        seq = self.seqs[rid]
+        row = np.zeros(self.max_pages, np.int32)
+        row[:len(seq.pages)] = seq.pages
+        return row
+
+    def occupancy(self) -> float:
+        return self.allocator.occupancy()
+
+    def kv_bytes(self) -> int:
+        return sum(leaf.size * leaf.dtype.itemsize
+                   for leaf in jax.tree_util.tree_leaves(self.pools))

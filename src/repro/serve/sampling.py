@@ -1,0 +1,78 @@
+"""Token sampling: greedy / temperature / top-k, PRNG-key threaded.
+
+The seed engine's non-greedy branch computed softmax-then-argmax — i.e.
+greedy with extra steps.  This module is the real thing, vectorized over
+a batch whose lanes may carry different sampling params (the engine
+serves mixed traffic in one decode step).
+
+This runs once per generated token, so the dispatch avoids paying for
+machinery a batch doesn't use: all-greedy batches take a pure argmax,
+no-top-k batches skip truncation, and top-k uses `lax.top_k` over the
+batch max k instead of a full-vocab sort.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass(frozen=True)
+class SamplingParams:
+    temperature: float = 0.0     # 0 -> greedy
+    top_k: int = 0               # 0 -> full vocab
+
+
+@jax.jit
+def _greedy(logits: jax.Array) -> jax.Array:
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+
+def _mix_greedy(logits, temperature, sampled):
+    greedy_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return jnp.where(temperature <= 0.0, greedy_tok, sampled)
+
+
+@jax.jit
+def _sample_full(key, logits, temperature):
+    lf = logits.astype(jnp.float32)
+    scaled = lf / jnp.maximum(temperature, 1e-6)[:, None]
+    sampled = jax.random.categorical(key, scaled, axis=-1).astype(jnp.int32)
+    return _mix_greedy(lf, temperature, sampled)
+
+
+@functools.partial(jax.jit, static_argnames=("kmax",))
+def _sample_topk(key, logits, temperature, top_k, kmax: int):
+    lf = logits.astype(jnp.float32)
+    scaled = lf / jnp.maximum(temperature, 1e-6)[:, None]
+    # kth-largest per lane from the batch-max top-k (no full-vocab sort);
+    # lanes with top_k <= 0 keep the whole vocab
+    top_vals, _ = jax.lax.top_k(scaled, kmax)                # (b, kmax)
+    k_eff = jnp.clip(top_k, 1, kmax).astype(jnp.int32)
+    kth = jnp.take_along_axis(top_vals, (k_eff - 1)[:, None], axis=-1)
+    kth = jnp.where((top_k > 0)[:, None], kth, -jnp.inf)
+    truncated = jnp.where(scaled >= kth, scaled, -jnp.inf)
+    sampled = jax.random.categorical(key, truncated, axis=-1).astype(
+        jnp.int32)
+    return _mix_greedy(lf, temperature, sampled)
+
+
+def sample_tokens(key: jax.Array, logits: jax.Array, temperature: jax.Array,
+                  top_k: jax.Array) -> jax.Array:
+    """logits: (b, v); temperature, top_k: (b,) per-lane params.
+
+    temperature <= 0 lanes decode greedily; top_k <= 0 means full vocab.
+    Returns (b,) int32 — one categorical draw per sampling lane from the
+    temperature-scaled, top-k-truncated distribution.
+    """
+    temp_np = np.asarray(temperature)
+    topk_np = np.asarray(top_k)
+    if not np.any(temp_np > 0.0):
+        return _greedy(logits)
+    kmax = int(topk_np.max(initial=0))
+    if kmax <= 0 or kmax >= logits.shape[-1]:
+        return _sample_full(key, logits, temperature)
+    return _sample_topk(key, logits, temperature, top_k, kmax)

@@ -1,0 +1,118 @@
+"""Request scheduler: admission control, priorities, deadlines, chunked
+prefill accounting.
+
+Queue discipline: a heap ordered by (priority, absolute deadline,
+arrival).  Admission is gated on BOTH a batch-lane budget and the paged
+cache's free-page count — a request enters the running batch only when
+its whole prompt fits in free pages (plus one growth page), so decode
+never deadlocks on a half-prefilled request.  Requests whose deadline
+passed while queued are rejected, not run: at the edge a late answer is
+a wasted answer (EdgeCIM's latency-bound regime).
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+from dataclasses import dataclass, field
+from typing import Callable, List, Optional
+
+import numpy as np
+
+from .sampling import SamplingParams
+
+
+@dataclass
+class ServeRequest:
+    prompt: np.ndarray                       # (prompt_len,) int32
+    max_new_tokens: int = 32
+    rid: int = 0                             # caller's label (not unique)
+    priority: int = 0                        # lower value = more urgent
+    deadline_s: Optional[float] = None       # relative to enqueue
+    sampling: SamplingParams = field(default_factory=SamplingParams)
+    on_token: Optional[Callable[[int, int], None]] = None  # (rid, token)
+
+    # lifecycle (engine-owned)
+    out_tokens: List[int] = field(default_factory=list)
+    done: bool = False
+    rejected: bool = False                   # never ran: deadline/too big
+    truncated: bool = False                  # evicted mid-generation
+    prefill_done: int = 0                    # prompt tokens consumed
+    t_enqueue: float = 0.0
+    eid: int = -1                            # engine-assigned unique id
+
+    @property
+    def prompt_len(self) -> int:
+        return int(len(self.prompt))
+
+    @property
+    def prefill_remaining(self) -> int:
+        return self.prompt_len - self.prefill_done
+
+
+class Scheduler:
+    def __init__(self, max_batch: int, prefill_chunk: int = 16):
+        assert max_batch > 0 and prefill_chunk > 0
+        self.max_batch = max_batch
+        self.prefill_chunk = prefill_chunk
+        self._heap: List = []
+        self._order = itertools.count()
+
+    # -- queue ----------------------------------------------------------
+    def submit(self, req: ServeRequest, now: float,
+               resubmit: bool = False) -> None:
+        """resubmit=True (preemption) keeps the ORIGINAL enqueue time, so
+        a deadline is measured from first arrival, not from eviction."""
+        if not resubmit:
+            req.t_enqueue = now
+        abs_deadline = (req.t_enqueue + req.deadline_s
+                        if req.deadline_s is not None else float("inf"))
+        heapq.heappush(self._heap, (req.priority, abs_deadline,
+                                    next(self._order), req))
+
+    @property
+    def n_queued(self) -> int:
+        return len(self._heap)
+
+    # -- admission ------------------------------------------------------
+    def admit(self, now: float, n_running: int, cache) -> List[ServeRequest]:
+        """Pop admissible requests: respects the lane budget and the
+        allocator (prompt pages + 1 growth page must be free).  Expired
+        requests are marked rejected and dropped.  Returns newly admitted
+        requests with their pages already allocated."""
+        admitted: List[ServeRequest] = []
+        deferred: List = []
+        max_tokens = cache.max_pages * cache.page_size
+        while self._heap and n_running + len(admitted) < self.max_batch:
+            prio, abs_dl, order, req = heapq.heappop(self._heap)
+            need = cache.pages_needed(req.prompt_len) + 1
+            if (now > abs_dl or req.prompt_len == 0
+                    or req.prompt_len >= max_tokens
+                    or need > cache.allocator.n_pages):
+                # expired in queue; empty prompt; prompt can never fit
+                # max_seq; or needs more pages than the pool HAS (not
+                # merely has free) — deferring any of these would spin
+                # forever.  A preempted request that already generated
+                # output is TRUNCATED (partial result stands); one that
+                # never ran is REJECTED.
+                if req.out_tokens:
+                    req.truncated = True
+                else:
+                    req.rejected = True
+                req.done = True
+                continue
+            if not cache.allocator.can_alloc(need):
+                # keep it queued; lower-priority requests behind it may
+                # still fit, but skipping ahead would starve this one —
+                # stop admitting (head-of-line, by design)
+                deferred.append((prio, abs_dl, order, req))
+                break
+            cache.admit(req.eid, req.prompt_len)
+            admitted.append(req)
+        for item in deferred:
+            heapq.heappush(self._heap, item)
+        return admitted
+
+    # -- chunked prefill ------------------------------------------------
+    def prefill_quota(self, req: ServeRequest) -> int:
+        """Prompt tokens this request may consume in the current step."""
+        return min(self.prefill_chunk, req.prefill_remaining)

@@ -1,0 +1,127 @@
+"""Serving telemetry: latency percentiles, throughput, KV occupancy.
+
+Per-request timeline: enqueue -> admit (queue time) -> first token
+(TTFT) -> done; TPOT is the mean inter-token gap after the first.
+Engine-level gauges (KV occupancy, batch size) are sampled every step.
+All clocks are caller-supplied monotonic seconds, so tests can drive
+synthetic time.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import numpy as np
+
+
+@dataclass
+class RequestTrace:
+    rid: int
+    t_enqueue: float = 0.0
+    t_admit: Optional[float] = None
+    t_first_token: Optional[float] = None
+    t_done: Optional[float] = None
+    n_tokens: int = 0
+
+    @property
+    def queue_s(self) -> Optional[float]:
+        if self.t_admit is None:
+            return None
+        return self.t_admit - self.t_enqueue
+
+    @property
+    def ttft_s(self) -> Optional[float]:
+        if self.t_first_token is None:
+            return None
+        return self.t_first_token - self.t_enqueue
+
+    @property
+    def tpot_s(self) -> Optional[float]:
+        if self.t_done is None or self.t_first_token is None \
+                or self.n_tokens < 2:
+            return None
+        return (self.t_done - self.t_first_token) / (self.n_tokens - 1)
+
+
+def _pct(vals: List[float], q: float) -> float:
+    return float(np.percentile(np.asarray(vals, np.float64), q)) \
+        if vals else float("nan")
+
+
+class Telemetry:
+    def __init__(self):
+        self.traces: Dict[int, RequestTrace] = {}
+        self.occupancy_samples: List[float] = []
+        self.batch_samples: List[int] = []
+        self.decode_s = 0.0
+        self.prefill_s = 0.0
+        self.steps = 0
+        self.tokens = 0
+        self.decode_tokens = 0       # emitted by the decode graph
+        self.prefill_tokens = 0
+        self.t_start: Optional[float] = None
+        self.t_end: Optional[float] = None
+
+    # -- request lifecycle ---------------------------------------------
+    def enqueue(self, rid: int, now: float):
+        self.traces[rid] = RequestTrace(rid=rid, t_enqueue=now)
+        if self.t_start is None:
+            self.t_start = now
+
+    def admit(self, rid: int, now: float):
+        self.traces[rid].t_admit = now
+
+    def token(self, rid: int, now: float, decode: bool = True):
+        """decode=False marks a token emitted by the prefill graph (each
+        request's first), kept out of the decode-rate denominator."""
+        tr = self.traces[rid]
+        if tr.t_first_token is None:
+            tr.t_first_token = now
+        tr.n_tokens += 1
+        self.tokens += 1
+        if decode:
+            self.decode_tokens += 1
+        self.t_end = now
+
+    def done(self, rid: int, now: float):
+        self.traces[rid].t_done = now
+        self.t_end = now
+
+    # -- engine gauges --------------------------------------------------
+    def step(self, occupancy: float, batch: int, decode_s: float = 0.0,
+             prefill_s: float = 0.0):
+        self.occupancy_samples.append(occupancy)
+        self.batch_samples.append(batch)
+        self.decode_s += decode_s
+        self.prefill_s += prefill_s
+        self.steps += 1
+
+    # -- rollup ---------------------------------------------------------
+    def summary(self) -> Dict[str, float]:
+        ttft = [t.ttft_s for t in self.traces.values()
+                if t.ttft_s is not None]
+        tpot = [t.tpot_s for t in self.traces.values()
+                if t.tpot_s is not None]
+        queue = [t.queue_s for t in self.traces.values()
+                 if t.queue_s is not None]
+        wall = ((self.t_end - self.t_start)
+                if self.t_start is not None and self.t_end is not None
+                and self.t_end > self.t_start else 0.0)
+        return {
+            "requests": float(len(self.traces)),
+            "tokens": float(self.tokens),
+            "prefill_tokens": float(self.prefill_tokens),
+            "steps": float(self.steps),
+            "tokens_per_s": self.tokens / wall if wall else float("nan"),
+            "decode_tokens_per_s": (self.decode_tokens / self.decode_s
+                                    if self.decode_s else float("nan")),
+            "ttft_p50_s": _pct(ttft, 50), "ttft_p99_s": _pct(ttft, 99),
+            "tpot_p50_s": _pct(tpot, 50), "tpot_p99_s": _pct(tpot, 99),
+            "queue_p50_s": _pct(queue, 50), "queue_p99_s": _pct(queue, 99),
+            "kv_occupancy_mean": (float(np.mean(self.occupancy_samples))
+                                  if self.occupancy_samples else 0.0),
+            "kv_occupancy_peak": (float(np.max(self.occupancy_samples))
+                                  if self.occupancy_samples else 0.0),
+            "batch_mean": (float(np.mean(self.batch_samples))
+                           if self.batch_samples else 0.0),
+        }

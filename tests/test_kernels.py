@@ -6,8 +6,9 @@ import pytest
 
 from repro.kernels.cim_gemv import cim_gemv
 from repro.kernels.flash_decode import flash_decode
-from repro.kernels.ref import (ref_flash_decode, ref_qmatmul,
-                               ref_swiglu_qgemv)
+from repro.kernels.paged_flash_decode import paged_flash_decode
+from repro.kernels.ref import (ref_flash_decode, ref_paged_decode,
+                               ref_qmatmul, ref_swiglu_qgemv)
 from repro.kernels.swiglu_gemv import swiglu_qgemv
 from repro.kernels import ops
 from repro.quant.qarray import quantize
@@ -58,6 +59,55 @@ def test_flash_decode_sweep(S, block_s, window, cap, pos_frac):
     out = flash_decode(qf, kf, vf, pos, block_s=block_s, window=window,
                        attn_cap=cap, interpret=True).reshape(b, g, qpk, hd)
     assert float(jnp.max(jnp.abs(out - ref))) < 1e-5
+
+
+@pytest.mark.parametrize("page_size,max_pages,window,cap", [
+    (16, 8, 0, 0.0),
+    (32, 4, 0, 0.0),
+    (16, 8, 40, 0.0),
+    (16, 8, 0, 30.0),
+    (8, 16, 24, 50.0),
+])
+def test_paged_flash_decode_sweep(page_size, max_pages, window, cap):
+    """Block-table kernel vs the gather oracle, shuffled page layouts and
+    ragged per-sequence lengths."""
+    b, g, qpk, hd = 3, 2, 4, 64
+    n_pages = b * max_pages
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.standard_normal((b, g, qpk, hd)), jnp.float32)
+    kp = jnp.asarray(rng.standard_normal((n_pages, page_size, g, hd)),
+                     jnp.float32)
+    vp = jnp.asarray(rng.standard_normal((n_pages, page_size, g, hd)),
+                     jnp.float32)
+    tables = jnp.asarray(
+        rng.permutation(n_pages).reshape(b, max_pages), jnp.int32)
+    S = max_pages * page_size
+    lengths = jnp.asarray(rng.integers(1, S + 1, size=b), jnp.int32)
+    ref = ref_paged_decode(q, kp, vp, tables, lengths, window, cap)
+    out = paged_flash_decode(q, kp, vp, tables, lengths, window=window,
+                             attn_cap=cap, interpret=True)
+    assert float(jnp.max(jnp.abs(out - ref))) < 1e-5
+
+
+def test_paged_decode_matches_dense_flash_decode():
+    """Identity block table + full lengths == the dense decode kernel."""
+    b, g, qpk, hd, ps, n_pg = 2, 2, 2, 32, 16, 16
+    rng = np.random.default_rng(1)
+    q = jnp.asarray(rng.standard_normal((b, g, qpk, hd)), jnp.float32)
+    kp = jnp.asarray(rng.standard_normal((b * n_pg // 2, ps, g, hd)),
+                     jnp.float32)
+    vp = jnp.asarray(rng.standard_normal((b * n_pg // 2, ps, g, hd)),
+                     jnp.float32)
+    tables = jnp.arange(b * n_pg // 2, dtype=jnp.int32).reshape(b, -1)
+    S = (n_pg // 2) * ps
+    kd = kp.reshape(b, S, g, hd)
+    vd = vp.reshape(b, S, g, hd)
+    pos = jnp.int32(100)
+    dense = ref_flash_decode(q, kd, vd, pos)
+    paged = ops.paged_decode_attention(
+        q, kp, vp, tables, jnp.full((b,), 101, jnp.int32),
+        use_kernel=False)
+    assert float(jnp.max(jnp.abs(dense - paged))) < 1e-6
 
 
 @pytest.mark.parametrize("bits", [4, 8])

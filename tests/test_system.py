@@ -97,6 +97,8 @@ MINI_DRYRUN = textwrap.dedent("""
                 compiled = jitted.lower(*cell.args).compile()
                 mem = compiled.memory_analysis()
                 cost = compiled.cost_analysis()
+            if isinstance(cost, list):   # older jax: one dict per device
+                cost = cost[0]
             assert float(cost.get("flops", 0)) > 0
             print("OK", arch, shape)
 """)
