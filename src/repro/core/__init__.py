@@ -11,7 +11,8 @@ Public API:
 from .hw import (HWConfig, TechConstants, DEFAULT_TECH, chip_area_mm2,
                  peak_tops, stream_bandwidth, search_space_size)
 from .workload import SLMSpec, Stage, make_dense_spec
-from .simulator import EdgeCIMSimulator, SimReport, decode_fraction
+from .simulator import (EdgeCIMSimulator, SimReport, SpecKnob,
+                        decode_fraction)
 from .objective import Objective
 from .dse import GeneticDSE, GAResult, run_dse, decode, encode
 from .pareto import pareto_front, pareto_reports
@@ -19,7 +20,8 @@ from .pareto import pareto_front, pareto_reports
 __all__ = [
     "HWConfig", "TechConstants", "DEFAULT_TECH", "chip_area_mm2", "peak_tops",
     "stream_bandwidth", "search_space_size", "SLMSpec", "Stage",
-    "make_dense_spec", "EdgeCIMSimulator", "SimReport", "decode_fraction",
+    "make_dense_spec", "EdgeCIMSimulator", "SimReport", "SpecKnob",
+    "decode_fraction",
     "Objective", "GeneticDSE", "GAResult", "run_dse", "decode", "encode",
     "pareto_front", "pareto_reports",
 ]

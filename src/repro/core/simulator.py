@@ -7,14 +7,47 @@ engine behind the DSE (paper Sec. III-A / IV).
 from __future__ import annotations
 
 import math
-from dataclasses import dataclass
-from typing import Dict, List
+from dataclasses import dataclass, replace
+from typing import Dict, List, Optional
 
 import numpy as np
 
 from .hw import HWConfig, TechConstants, DEFAULT_TECH, chip_area_mm2, peak_tops
 from .stages import StageCost, stage_cost, stage_cost_vec
 from .workload import SLMSpec, Stage
+
+
+@dataclass(frozen=True)
+class SpecKnob:
+    """Speculative-decoding factor for the analytical model.
+
+    Decode's bottleneck is the weight stream (one full pass per token);
+    a verify step streams weights ONCE for a (k+1)-token window and
+    keeps E[accepted+bonus] of them — the same arithmetic-intensity
+    lever the DSE prices precision with, so Pareto fronts can price
+    spec decode too.  Per verify step:
+
+      weight_elems, kv_stream   x1       (shared across the window; the
+                                          multi-query kernel makes one
+                                          pass over the pages)
+      macs, vector, writeback   x(k+1)   (every window position computes)
+
+    plus `draft_cost_ratio` x k target-token-equivalents of drafting
+    (0 for the model-free n-gram drafter; ~the parameter ratio for a
+    small draft model).  `accept_rate` is the measured per-token
+    acceptance probability (spec_bench.py reports it), modeled i.i.d.
+    """
+    k: int = 4
+    accept_rate: float = 0.7
+    draft_cost_ratio: float = 0.0
+
+    def tokens_per_step(self) -> float:
+        """E[tokens emitted per verify step] = (1 - a^(k+1)) / (1 - a)
+        (accepted prefix of i.i.d. Bernoulli(a) draws, plus the bonus)."""
+        a = min(max(self.accept_rate, 0.0), 1.0)
+        if a >= 1.0:
+            return float(self.k + 1)
+        return float((1.0 - a ** (self.k + 1)) / (1.0 - a))
 
 
 @dataclass(frozen=True)
@@ -31,6 +64,7 @@ class SimReport:
     area_mm2: float
     stage_seconds: Dict[str, float]
     stage_joules: Dict[str, float]
+    spec_decode: Optional[SpecKnob] = None
 
     @property
     def tokens_per_s(self) -> float:
@@ -76,11 +110,29 @@ class EdgeCIMSimulator:
 
     # ------------------------------------------------------------------
     def generate(self, spec: SLMSpec, h: HWConfig, prefill_tokens: int = 128,
-                 gen_tokens: int = 128, w_bits: int = 4, a_bits: int = 8
-                 ) -> SimReport:
-        """Full decoding run: token t sees KV length prefill + t."""
+                 gen_tokens: int = 128, w_bits: int = 4, a_bits: int = 8,
+                 spec_decode: Optional[SpecKnob] = None) -> SimReport:
+        """Full decoding run: token t sees KV length prefill + t.
+
+        `spec_decode` prices speculative decoding: each emitted token
+        costs 1/E of a (k+1)-query verify step (weights/KV streamed
+        once, compute x(k+1)) plus k/E x draft_cost_ratio plain-token
+        equivalents of drafting."""
         tech = self.tech
         area = chip_area_mm2(h, tech)
+        if spec_decode is not None:
+            E = spec_decode.tokens_per_step()
+            kq = spec_decode.k + 1              # window width per verify
+            draft_tok = spec_decode.k * spec_decode.draft_cost_ratio / E
+
+            def verify_stage(st: Stage) -> Stage:
+                return replace(st, macs=st.macs * kq,
+                               vector_ops=st.vector_ops * kq,
+                               writeback_elems=st.writeback_elems * kq)
+
+            def spec_mix(plain_s, plain_j, ver_s, ver_j):
+                return (ver_s / E + draft_tok * plain_s,
+                        ver_j / E + draft_tok * plain_j)
 
         # ---- seq-independent stages: cost once, multiply by gen_tokens ----
         seqs = prefill_tokens + np.arange(gen_tokens, dtype=np.float64)
@@ -106,10 +158,22 @@ class EdgeCIMSimulator:
                     st.macs * ratio, st.vector_ops * ratio,
                     np.full_like(seqs, st.writeback_elems),
                     h, w_bits, a_bits, tech)
+                if spec_decode is not None:
+                    v_s, v_j = stage_cost_vec(
+                        np.full_like(seqs, st.weight_elems), kv_all,
+                        st.macs * ratio * kq, st.vector_ops * ratio * kq,
+                        np.full_like(seqs, st.writeback_elems * kq),
+                        h, w_bits, a_bits, tech)
+                    s_vec, j_vec = spec_mix(s_vec, j_vec, v_s, v_j)
                 s_sum, j_sum = float(s_vec.sum()) * m, float(j_vec.sum()) * m
             else:
                 c = stage_cost(st, h, w_bits, a_bits, tech).scale(m)
-                s_sum, j_sum = c.seconds * gen_tokens, c.joules * gen_tokens
+                sec_t, j_t = c.seconds, c.joules
+                if spec_decode is not None:
+                    cv = stage_cost(verify_stage(st), h, w_bits, a_bits,
+                                    tech).scale(m)
+                    sec_t, j_t = spec_mix(sec_t, j_t, cv.seconds, cv.joules)
+                s_sum, j_sum = sec_t * gen_tokens, j_t * gen_tokens
             stage_s[st.name] = stage_s.get(st.name, 0.0) + s_sum
             stage_j[st.name] = stage_j.get(st.name, 0.0) + j_sum
             total_s += s_sum
@@ -117,10 +181,14 @@ class EdgeCIMSimulator:
 
         for st in (spec.embed_stage(), spec.head_stage()):
             c = stage_cost(st, h, w_bits, a_bits, tech)
-            stage_s[st.name] = c.seconds * gen_tokens
-            stage_j[st.name] = c.joules * gen_tokens
-            total_s += c.seconds * gen_tokens
-            total_j += c.joules * gen_tokens
+            sec_t, j_t = c.seconds, c.joules
+            if spec_decode is not None:
+                cv = stage_cost(verify_stage(st), h, w_bits, a_bits, tech)
+                sec_t, j_t = spec_mix(sec_t, j_t, cv.seconds, cv.joules)
+            stage_s[st.name] = sec_t * gen_tokens
+            stage_j[st.name] = j_t * gen_tokens
+            total_s += sec_t * gen_tokens
+            total_j += j_t * gen_tokens
 
         # ---- static (leakage) energy over the whole run --------------------
         p_static = area * tech.p_static_mm2
@@ -133,6 +201,7 @@ class EdgeCIMSimulator:
             prefill_tokens=prefill_tokens, gen_tokens=gen_tokens,
             latency_s=total_s, energy_j=total_j, area_mm2=area,
             stage_seconds=stage_s, stage_joules=stage_j,
+            spec_decode=spec_decode,
         )
 
     # ------------------------------------------------------------------

@@ -17,9 +17,9 @@ from repro.quant.qarray import QTensor, maybe_dequantize
 
 from .cim_gemv import cim_gemv
 from .flash_decode import flash_decode
-from .paged_flash_decode import paged_flash_decode
-from .ref import (ref_flash_decode, ref_paged_decode, ref_qmatmul,
-                  ref_swiglu_qgemv)
+from .paged_flash_decode import paged_flash_decode, paged_flash_verify
+from .ref import (ref_flash_decode, ref_paged_decode, ref_paged_verify,
+                  ref_qmatmul, ref_swiglu_qgemv)
 from .swiglu_gemv import swiglu_qgemv
 
 
@@ -89,6 +89,29 @@ def paged_decode_attention(q: jax.Array, k_pages: jax.Array,
         return ref_paged_decode(q, k_pages, v_pages, tables, lengths,
                                 window, attn_cap)
     return paged_flash_decode(q, k_pages, v_pages, tables, lengths,
+                              window=window, attn_cap=attn_cap,
+                              interpret=_interpret())
+
+
+def paged_verify_attention(q: jax.Array, k_pages: jax.Array,
+                           v_pages: jax.Array, tables: jax.Array,
+                           lengths: jax.Array, window: int = 0,
+                           attn_cap: float = 0.0,
+                           use_kernel: bool = None) -> jax.Array:
+    """Multi-query paged attention for speculative verify windows.
+
+    q: (b, s, g, qpk, hd) — s draft positions per lane, query j at
+    absolute position lengths[i] + j; lengths EXCLUDE the window.
+    Pallas multi-query kernel on TPU (one pass over the sequence's
+    pages verifies the whole window), jnp gather oracle elsewhere.
+    Returns (b, s, g, qpk, hd).
+    """
+    if use_kernel is None:
+        use_kernel = not _interpret()
+    if not use_kernel:
+        return ref_paged_verify(q, k_pages, v_pages, tables, lengths,
+                                window, attn_cap)
+    return paged_flash_verify(q, k_pages, v_pages, tables, lengths,
                               window=window, attn_cap=attn_cap,
                               interpret=_interpret())
 

@@ -67,6 +67,107 @@ def _kernel(tab_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
                        jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
 
 
+def _verify_kernel(tab_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
+                   m_ref, l_ref, acc_ref, *, page_size: int, n_i: int,
+                   qpk: int, scale: float, window: int, attn_cap: float):
+    """Multi-query variant: the q block carries s query positions (rows
+    j*qpk..j*qpk+qpk-1 are position lengths[b]+j), each with its own
+    causal horizon — verification of a k-token draft window in ONE pass
+    over the sequence's pages (decode GEMV -> small-batch GEMM)."""
+    b_idx = pl.program_id(0)
+    i_idx = pl.program_id(2)
+
+    @pl.when(i_idx == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    length = len_ref[b_idx]                             # tokens BEFORE window
+    q = q_ref[0, 0].astype(jnp.float32)                 # (s*qpk, hd)
+    k = k_ref[0, :, 0].astype(jnp.float32)              # (page_size, hd)
+    v = v_ref[0, :, 0].astype(jnp.float32)
+    sq = q.shape[0]
+
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+    if attn_cap:
+        s = attn_cap * jnp.tanh(s / attn_cap)
+    k_pos = i_idx * page_size + jax.lax.broadcasted_iota(
+        jnp.int32, (sq, page_size), 1)
+    q_pos = length + jax.lax.broadcasted_iota(
+        jnp.int32, (sq, page_size), 0) // qpk           # intra-window causal
+    valid = k_pos <= q_pos
+    if window:
+        valid = valid & (q_pos - k_pos < window)
+    s = jnp.where(valid, s, NEG_INF)                    # (s*qpk, page_size)
+
+    m_prev = m_ref[...]                                 # (s*qpk, 1)
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new)
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jnp.dot(
+        p, v, preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(i_idx == n_i - 1)
+    def _done():
+        o_ref[0, 0] = (acc_ref[...] /
+                       jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "attn_cap",
+                                             "interpret"))
+def paged_flash_verify(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
+                       tables: jax.Array, lengths: jax.Array,
+                       window: int = 0, attn_cap: float = 0.0,
+                       interpret: bool = False) -> jax.Array:
+    """Speculative-verify attention over the paged pool.
+
+    q: (b, s, g, qpk, hd) — s draft-window query positions per lane;
+    query j of lane i sits at absolute position lengths[i] + j and
+    attends k_pos <= lengths[i] + j (its own K row is already scattered
+    into the pool).  lengths counts tokens cached BEFORE this window
+    (exclusive — unlike `paged_flash_decode`, whose lengths include the
+    current token).  Returns (b, s, g, qpk, hd).
+    """
+    b, s, g, qpk, hd = q.shape
+    page_size = k_pages.shape[1]
+    max_pages = tables.shape[1]
+    scale = 1.0 / (hd ** 0.5)
+    qf = q.transpose(0, 2, 1, 3, 4).reshape(b, g, s * qpk, hd)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, g, max_pages),
+        in_specs=[
+            pl.BlockSpec((1, 1, s * qpk, hd), lambda bi, gi, i, tab, ln:
+                         (bi, gi, 0, 0)),
+            pl.BlockSpec((1, page_size, 1, hd), lambda bi, gi, i, tab, ln:
+                         (tab[bi, i], 0, gi, 0)),
+            pl.BlockSpec((1, page_size, 1, hd), lambda bi, gi, i, tab, ln:
+                         (tab[bi, i], 0, gi, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, s * qpk, hd), lambda bi, gi, i, tab, ln:
+                               (bi, gi, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((s * qpk, 1), jnp.float32),
+            pltpu.VMEM((s * qpk, 1), jnp.float32),
+            pltpu.VMEM((s * qpk, hd), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        functools.partial(_verify_kernel, page_size=page_size,
+                          n_i=max_pages, qpk=qpk, scale=scale,
+                          window=window, attn_cap=attn_cap),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, g, s * qpk, hd), q.dtype),
+        interpret=interpret,
+    )(tables.astype(jnp.int32), lengths.astype(jnp.int32), qf, k_pages,
+      v_pages)
+    return out.reshape(b, g, s, qpk, hd).transpose(0, 2, 1, 3, 4)
+
+
 @functools.partial(jax.jit, static_argnames=("window", "attn_cap",
                                              "interpret"))
 def paged_flash_decode(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,

@@ -73,6 +73,39 @@ def ref_paged_decode(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
                       v.astype(q.dtype))
 
 
+def ref_paged_verify(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
+                     tables: jax.Array, lengths: jax.Array,
+                     window: int = 0, attn_cap: float = 0.0) -> jax.Array:
+    """Multi-query paged verify oracle (speculative-decode windows).
+
+    q: (b, s, g, qpk, hd) — query j of lane i sits at absolute position
+    lengths[i] + j (its K/V rows are already scattered into the pool);
+    lengths: (b,) int32 tokens cached BEFORE the window (EXCLUSIVE of
+    the window, unlike `ref_paged_decode`).  Intra-window causal mask:
+    query j sees k_pos <= lengths[i] + j.  Returns (b, s, g, qpk, hd).
+    """
+    b, s = q.shape[0], q.shape[1]
+    hd = q.shape[-1]
+    ps = k_pages.shape[1]
+    S = tables.shape[1] * ps
+    k = k_pages[tables].reshape(b, S, *k_pages.shape[2:])
+    v = v_pages[tables].reshape(b, S, *v_pages.shape[2:])
+    scores = jnp.einsum("bqgph,bkgh->bgpqk", q, k.astype(q.dtype),
+                        preferred_element_type=jnp.float32)
+    scores = scores / jnp.sqrt(jnp.float32(hd))
+    if attn_cap:
+        scores = attn_cap * jnp.tanh(scores / attn_cap)
+    k_pos = jnp.arange(S)
+    q_pos = lengths[:, None] + jnp.arange(s)[None, :]           # (b, s)
+    mask = k_pos[None, None, :] <= q_pos[:, :, None]            # (b, s, S)
+    if window:
+        mask = mask & (q_pos[:, :, None] - k_pos[None, None, :] < window)
+    scores = jnp.where(mask[:, None, None, :, :], scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bgpqk,bkgh->bqgph", w.astype(q.dtype),
+                      v.astype(q.dtype))
+
+
 def ref_swiglu_qgemv(x: jax.Array, w_gate, w_up) -> jax.Array:
     """Fused gate/up GEMV + SiLU*mul oracle. x: (m, d) -> (m, f)."""
     g = ref_qmatmul(x, w_gate, out_dtype=jnp.float32)

@@ -27,6 +27,13 @@ def main():
                     help="KV pool pages (0 = dense-equivalent worst case)")
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--top-k", type=int, default=0)
+    ap.add_argument("--top-p", type=float, default=1.0)
+    ap.add_argument("--spec", default="off",
+                    choices=["off", "ngram", "model"],
+                    help="speculative decoding drafter (model: a 1-layer "
+                         "half-width smoke draft of the same arch)")
+    ap.add_argument("--spec-k", type=int, default=4,
+                    help="draft window (tokens per verify step)")
     args = ap.parse_args()
 
     import jax
@@ -59,30 +66,56 @@ def main():
         raise SystemExit(f"--max-seq {args.max_seq} must be a multiple of "
                          f"--page-size {args.page_size}")
     if model.supports_paged():
+        spec_cfg = None
+        if args.spec != "off":
+            from repro.spec import SpecConfig
+            if args.spec == "model":
+                dcfg = cfg.replace(name=cfg.name + "-draft", n_layers=1,
+                                   d_model=max(cfg.d_model // 2, 32),
+                                   d_ff=max(cfg.d_ff // 2, 64))
+                draft = DecoderLM(dcfg)
+                dparams = init_params(draft.param_specs(),
+                                      jax.random.PRNGKey(7),
+                                      dtype_override=jnp.float32)
+                spec_cfg = SpecConfig(k=args.spec_k, drafter="model",
+                                      draft_model=draft,
+                                      draft_params=dparams,
+                                      draft_page_size=args.page_size)
+            else:
+                spec_cfg = SpecConfig(k=args.spec_k, drafter="ngram")
         eng = PagedServeEngine(
             model, params, max_batch=args.batch, max_seq=args.max_seq,
-            page_size=args.page_size, n_pages=args.pages or None)
+            page_size=args.page_size, n_pages=args.pages or None,
+            spec=spec_cfg)
         sampling = SamplingParams(temperature=args.temperature,
-                                  top_k=args.top_k)
+                                  top_k=args.top_k, top_p=args.top_p)
         reqs = [ServeRequest(prompt=p, max_new_tokens=args.tokens, rid=i,
                              sampling=sampling)
                 for i, p in enumerate(prompts)]
         eng.run(reqs)
         m = eng.summary()
+        spec_msg = ""
+        if spec_cfg is not None:
+            acc = m["spec_acceptance_rate"]
+            acc_txt = (f"{acc*100:.0f}%" if np.isfinite(acc)
+                       else "n/a (0 drafted)")
+            spec_msg = (f", spec[{args.spec} k={args.spec_k}] "
+                        f"acc {acc_txt} "
+                        f"{m['tokens_per_decode_step']:.2f} tok/step")
         print(f"[serve] {int(m['tokens'])} tokens, "
               f"{eng.throughput():.0f} tok/s decode, "
               f"ttft p50 {m['ttft_p50_s']*1e3:.0f} ms / "
               f"p99 {m['ttft_p99_s']*1e3:.0f} ms, "
               f"tpot p50 {m['tpot_p50_s']*1e3:.1f} ms, "
-              f"kv occupancy peak {m['kv_occupancy_peak']*100:.0f}% "
-              f"({jax.default_backend()} backend)")
+              f"kv occupancy peak {m['kv_occupancy_peak']*100:.0f}%"
+              f"{spec_msg} ({jax.default_backend()} backend)")
     else:
         eng = ServeEngine(model, params, n_slots=args.batch,
                           max_seq=args.max_seq,
                           greedy=args.temperature <= 0,
                           sampling=SamplingParams(
                               temperature=args.temperature,
-                              top_k=args.top_k))
+                              top_k=args.top_k, top_p=args.top_p))
         done = eng.run([Request(prompt=p, max_new_tokens=args.tokens, rid=i)
                         for i, p in enumerate(prompts)])
         print(f"[serve] {sum(len(r.out_tokens) for r in done)} tokens, "

@@ -251,7 +251,7 @@ def _page_scatter(pool: jax.Array, vals: jax.Array, tables: jax.Array,
 
 def gqa_paged_step(p: Params, cfg: ModelConfig, x: jax.Array, cache: Dict,
                    tables: jax.Array, lengths: jax.Array, n_new: jax.Array,
-                   is_local) -> Tuple[jax.Array, Dict]:
+                   is_local, verify: bool = False) -> Tuple[jax.Array, Dict]:
     """Chunked prefill / decode against a paged KV pool.
 
     x: (b, s, d) — s == 1 is decode, s > 1 a prefill chunk (right-padded;
@@ -261,6 +261,13 @@ def gqa_paged_step(p: Params, cfg: ModelConfig, x: jax.Array, cache: Dict,
     Per-sequence positions — no shared `pos` scalar, so one sequence's
     prefill can never clobber another's rows (the dense engine's
     `_prefill_slot` bug).
+
+    verify=True (speculative decode) routes the s > 1 window through the
+    multi-query flash kernel — one pass over the sequence's pages
+    scores all s draft positions — instead of the chunk path's full
+    page gather.  Same math (the intra-window causal mask is identical);
+    sliding-window models carry a traced `is_local` and keep the masked
+    gather path.
     """
     b, s, _ = x.shape
     hd, g, qpk = cfg.hd(), cfg.n_kv_heads, cfg.q_per_kv()
@@ -292,6 +299,16 @@ def gqa_paged_step(p: Params, cfg: ModelConfig, x: jax.Array, cache: Dict,
         out = out_g.reshape(b, 1, cfg.n_heads * hd).astype(x.dtype)
         return qmm(out, p["wo"]), {"k": ck, "v": cv}
 
+    if verify and not window:
+        # speculative-verify fast path: all s window positions in one
+        # multi-query pass, no (b, S, ...) gather materialized
+        from repro.kernels.ops import paged_verify_attention
+        qg = q.reshape(b, s, g, qpk, hd)
+        out_g = paged_verify_attention(qg, ck, cv, tables, lengths, 0,
+                                       cfg.attn_softcap)
+        out = out_g.reshape(b, s, cfg.n_heads * hd).astype(x.dtype)
+        return qmm(out, p["wo"]), {"k": ck, "v": cv}
+
     # chunk path: gather the sequence's pages back to a contiguous view
     kg = ck[tables].reshape(b, S, g, hd)
     vg = cv[tables].reshape(b, S, g, hd)
@@ -315,10 +332,14 @@ def gqa_paged_step(p: Params, cfg: ModelConfig, x: jax.Array, cache: Dict,
 
 def mla_paged_step(p: Params, cfg: ModelConfig, x: jax.Array, cache: Dict,
                    tables: jax.Array, lengths: jax.Array, n_new: jax.Array,
-                   is_local) -> Tuple[jax.Array, Dict]:
+                   is_local, verify: bool = False) -> Tuple[jax.Array, Dict]:
     """Paged absorbed-MLA step over latent pools.
 
     cache {c_kv: (n_pages, ps, r), k_rope: (n_pages, ps, rope_d)}.
+    The latent gather already scores every window position with the
+    correct intra-window causal mask, so `verify` needs no separate
+    path (the latent stream is ~9x smaller than GQA K/V — the gather
+    the multi-query kernel exists to avoid is cheap here).
     """
     m = cfg.mla
     b, s, _ = x.shape
@@ -470,9 +491,11 @@ def attn_decode(p, cfg, x, cache, pos, is_local):
     return fn(p, cfg, x, cache, pos, is_local)
 
 
-def attn_paged_step(p, cfg, x, cache, tables, lengths, n_new, is_local):
+def attn_paged_step(p, cfg, x, cache, tables, lengths, n_new, is_local,
+                    verify: bool = False):
     fn = mla_paged_step if cfg.attn_kind == "mla" else gqa_paged_step
-    return fn(p, cfg, x, cache, tables, lengths, n_new, is_local)
+    return fn(p, cfg, x, cache, tables, lengths, n_new, is_local,
+              verify=verify)
 
 
 def paged_cache_spec(cfg: ModelConfig, n_pages: int, page_size: int,

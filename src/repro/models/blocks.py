@@ -101,12 +101,13 @@ def transformer_block_decode(p: Params, cfg: ModelConfig, x: jax.Array,
 def transformer_block_paged(p: Params, cfg: ModelConfig, x: jax.Array,
                             cache: Dict, tables: jax.Array,
                             lengths: jax.Array, n_new: jax.Array, is_local,
-                            dense_override: bool = False
+                            dense_override: bool = False,
+                            verify: bool = False
                             ) -> Tuple[jax.Array, Dict]:
     """Decode/chunked-prefill block against a paged KV pool (x: (b,s,d))."""
     h = apply_norm(p["ln_attn"], cfg, x)
     a, cache = attn_paged_step(p["attn"], cfg, h, cache, tables, lengths,
-                               n_new, is_local)
+                               n_new, is_local, verify=verify)
     if cfg.post_block_norm:
         a = apply_norm(p["post_attn"], cfg, a)
     x = x + a

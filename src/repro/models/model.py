@@ -382,6 +382,31 @@ class DecoderLM:
         from logits[i, n_new[i] - 1].  Per-lane positions mean one
         lane's writes can never touch another lane's pages.
         """
+        return self._paged_forward(params, cache, inputs, tables, lengths,
+                                   n_new, verify=False)
+
+    def paged_verify_step(self, params: Params, cache: Any,
+                          inputs: Dict[str, jax.Array], tables: jax.Array,
+                          lengths: jax.Array, n_new: jax.Array):
+        """Speculative-decode verify: score a k-token draft window in one
+        pass.
+
+        inputs: {tokens: (b, s)} — lane i's row is [last_emitted,
+        d_1, ..., d_{n_new[i]-1}, pad...]; `lengths` counts tokens
+        already cached (the window's KV rows are written by this call,
+        exactly like chunked prefill).  Returns logits (b, s, vocab):
+        logits[i, j] is the target distribution for the token AFTER
+        window position j — the acceptance rule walks it left to right.
+        Identical math to `paged_step` (same intra-window causal mask);
+        the difference is routing: attention runs the multi-query flash
+        kernel instead of gathering every page the lane owns, which is
+        what turns decode GEMV into small-batch GEMM.
+        """
+        return self._paged_forward(params, cache, inputs, tables, lengths,
+                                   n_new, verify=True)
+
+    def _paged_forward(self, params, cache, inputs, tables, lengths, n_new,
+                       verify: bool):
         cfg = self.cfg
         assert self.supports_paged(), cfg.family
         h = self._embed(params, inputs)
@@ -394,7 +419,7 @@ class DecoderLM:
                 layer_p, c = inp
                 x, c = transformer_block_paged(
                     layer_p, cfg, x, c, tables, lengths, n_new,
-                    jnp.bool_(False), dense_override=True)
+                    jnp.bool_(False), dense_override=True, verify=verify)
                 return constrain(x, "batch", None, "tp"), c
             h, cf = scan_layers(first_body, h,
                                 (params["first_blocks"],
@@ -406,7 +431,8 @@ class DecoderLM:
         def body(x, inp):
             layer_p, c, is_local = inp
             x, c = transformer_block_paged(layer_p, cfg, x, c, tables,
-                                           lengths, n_new, is_local)
+                                           lengths, n_new, is_local,
+                                           verify=verify)
             return constrain(x, "batch", None, "tp"), c
 
         h, cm = scan_layers(body, h, (params["blocks"], cache["attn"],

@@ -16,9 +16,13 @@ bottleneck.  v2 replaces the seed's fixed-slot engine + dense
 
 Every step runs at most two jitted graphs with shape-stable arguments:
 one chunked BATCH PREFILL call (b = max_batch, s = prefill_chunk) and
-one decode call (b = max_batch, s = 1), both `DecoderLM.paged_step`.
-Per-lane positions make one sequence's prefill unable to clobber
-another's cache rows (the seed `_prefill_slot` bug).
+one decode call — `DecoderLM.paged_step` (b = max_batch, s = 1), or,
+when the engine is built with a `repro.spec.SpecConfig`, one
+`paged_verify_step` (b = max_batch, s = k + 1) that verifies a drafted
+window and emits a variable number of tokens per lane (speculative
+decoding; see repro/spec/).  Per-lane positions make one sequence's
+prefill unable to clobber another's cache rows (the seed
+`_prefill_slot` bug).
 
 The legacy slot engine survives only as `ServeEngine`, a compatibility
 shim: dense/moe families route to the paged runtime; recurrent families
@@ -50,7 +54,7 @@ class PagedServeEngine:
                  page_size: int = 16, n_pages: Optional[int] = None,
                  prefill_chunk: int = 16, kv_dtype=jnp.bfloat16,
                  eos_id: Optional[int] = None, seed: int = 0,
-                 clock=time.monotonic):
+                 spec: Optional[Any] = None, clock=time.monotonic):
         assert model.cfg.embed_inputs, "engine serves token-input models"
         assert model.supports_paged(), (
             f"family {model.cfg.family!r} has no paged-KV path; use the "
@@ -73,6 +77,13 @@ class PagedServeEngine:
         self._step_fn = jax.jit(model.paged_step, donate_argnums=(1,))
         self._key = jax.random.PRNGKey(seed)
         self._next_eid = 0
+        if spec is not None:            # SpecConfig -> speculative decode
+            from repro.spec import SpecDecoder
+            self.spec: Optional[SpecDecoder] = SpecDecoder(
+                model, spec, max_batch=max_batch, max_seq=max_seq,
+                kv_dtype=kv_dtype)
+        else:
+            self.spec = None
 
     # ------------------------------------------------------------------
     @property
@@ -117,12 +128,14 @@ class PagedServeEngine:
         sampling params, PRNG key threaded through the engine."""
         temp = np.zeros(self.max_batch, np.float32)
         topk = np.zeros(self.max_batch, np.int32)
+        topp = np.ones(self.max_batch, np.float32)
         for i, req in enumerate(self.lanes):
             if req is not None:
                 temp[i] = req.sampling.temperature
                 topk[i] = req.sampling.top_k
+                topp[i] = req.sampling.top_p
         self._key, sub = jax.random.split(self._key)
-        return np.asarray(sample_tokens(sub, rows, temp, topk))
+        return np.asarray(sample_tokens(sub, rows, temp, topk, topp))
 
     def _emit(self, req: ServeRequest, token: int, now: float,
               decode: bool = True) -> None:
@@ -142,6 +155,8 @@ class PagedServeEngine:
             self.telemetry.done(req.eid, now)
             self.cache.release(req.eid)
             self.lanes[lane] = None
+            if self.spec is not None:
+                self.spec.drafter.release(lane)
 
     def _preempt(self, lane: int) -> None:
         """Pool exhausted mid-decode: evict this lane, requeue it with
@@ -150,6 +165,8 @@ class PagedServeEngine:
         req = self.lanes[lane]
         self.cache.release(req.eid)
         self.lanes[lane] = None
+        if self.spec is not None:
+            self.spec.drafter.release(lane)
         req.prompt = np.concatenate(
             [np.asarray(req.prompt, np.int32),
              np.asarray(req.out_tokens, np.int32)])
@@ -165,9 +182,13 @@ class PagedServeEngine:
             self.telemetry.admit(req.eid, now)
 
         prefill_s = self._prefill_phase()
-        decode_s = self._decode_phase()
+        if self.spec is not None:
+            decode_s, decode_lanes = self._decode_phase_spec()
+        else:
+            decode_s, decode_lanes = self._decode_phase()
         self.telemetry.step(self.cache.occupancy(), self.n_running,
-                            decode_s=decode_s, prefill_s=prefill_s)
+                            decode_s=decode_s, prefill_s=prefill_s,
+                            decode_lanes=decode_lanes)
 
     def _prefill_phase(self) -> float:
         """One chunked BATCH prefill call for every lane with prompt
@@ -213,16 +234,20 @@ class PagedServeEngine:
                 self._maybe_finish(i, now)
         return dt
 
-    def _decode_phase(self) -> float:
-        """One decode step for every lane with its prompt fully cached
-        and at least one emitted token (a lane that finished prefill this
-        same step joins immediately: its first token is this call's
-        input, written at position seqs[eid].length)."""
-        dec = [i for i, r in enumerate(self.lanes)
-               if r is not None and r.prefill_remaining == 0
-               and r.out_tokens]
+    def _decode_ready(self) -> List[int]:
+        """Lanes with their prompt fully cached and at least one emitted
+        token (a lane that finished prefill this same step joins
+        immediately: its first token is this call's input, written at
+        position seqs[eid].length)."""
+        return [i for i, r in enumerate(self.lanes)
+                if r is not None and r.prefill_remaining == 0
+                and r.out_tokens]
+
+    def _decode_phase(self) -> tuple:
+        """One token for every decode-ready lane.  Returns (graph
+        seconds, lanes advanced)."""
         ready = []
-        for i in dec:
+        for i in self._decode_ready():
             req = self.lanes[i]
             # the token we feed is the last emitted one; this decode call
             # itself writes its KV row at position seqs[rid].length
@@ -231,7 +256,7 @@ class PagedServeEngine:
                 continue
             ready.append(i)
         if not ready:
-            return 0.0
+            return 0.0, 0
 
         tokens = np.zeros((self.max_batch, 1), np.int32)
         n_new = np.zeros(self.max_batch, np.int32)
@@ -255,7 +280,106 @@ class PagedServeEngine:
             self.cache.seqs[req.eid].length += 1
             self._emit(req, int(nxt[i]), now)
             self._maybe_finish(i, now)
-        return dt
+        return dt, len(ready)
+
+    def _decode_phase_spec(self) -> tuple:
+        """Speculative decode: draft up to k tokens per lane, verify the
+        whole window in ONE `paged_verify_step` call (always
+        (max_batch, k + 1) — shape-stable under jit), emit the accepted
+        prefix plus the bonus token, roll rejected KV rows back.
+
+        Lanes with `req.spec == False`, or whose drafter found nothing,
+        ride the same call with an empty window — for them this IS a
+        plain decode step, so greedy output is byte-identical to the
+        non-speculative engine either way.
+        """
+        spec = self.spec
+        k = spec.cfg.k
+        dec = self._decode_ready()
+        if not dec:
+            return 0.0, 0
+
+        histories: List[Optional[np.ndarray]] = [None] * self.max_batch
+        smp: List[Optional[SamplingParams]] = [None] * self.max_batch
+        for i in dec:
+            req = self.lanes[i]
+            if req.spec:
+                histories[i] = np.concatenate(
+                    [np.asarray(req.prompt, np.int32),
+                     np.asarray(req.out_tokens, np.int32)])
+                smp[i] = req.sampling
+        # drafting is part of the decode budget speculation spends —
+        # timing it keeps tokens_per_s_decode (and spec_bench's speedup
+        # column) honest about what a model drafter costs
+        t0 = time.monotonic()
+        prop = spec.drafter.propose(histories, k, smp)
+        draft_s = time.monotonic() - t0
+
+        tokens = np.zeros((self.max_batch, k + 1), np.int32)
+        n_new = np.zeros(self.max_batch, np.int32)
+        ready: List[tuple] = []                 # (lane, n_draft)
+        for i in dec:
+            req = self.lanes[i]
+            nd = int(prop.n[i]) if histories[i] is not None else 0
+            # the window writes 1 + nd KV rows and may emit 1 + nd
+            # tokens; cap at the sequence budget AND the request's
+            # remaining token budget (no point verifying tokens
+            # emitted[:budget] would discard), then shrink until the
+            # pool can hold it (a shrunk window beats a preemption)
+            nd = max(0, min(nd,
+                            self.max_seq
+                            - self.cache.seqs[req.eid].length - 1,
+                            req.max_new_tokens - len(req.out_tokens) - 1))
+            while nd > 0 and not self.cache.ensure_room(req.eid, 1 + nd):
+                nd -= 1
+            if nd == 0 and not self.cache.ensure_room(req.eid, 1):
+                self._preempt(i)
+                continue
+            tokens[i, 0] = req.out_tokens[-1]
+            tokens[i, 1:1 + nd] = prop.tokens[i, :nd]
+            n_new[i] = 1 + nd
+            ready.append((i, nd))
+        if not ready:
+            return 0.0, 0
+        lengths = self._lengths()
+        tables = self._tables()
+
+        # nothing drafted anywhere this step: the (b, k+1) verify graph
+        # would burn (k+1)x decode compute on an effectively plain step,
+        # so dispatch the ordinary (b, 1) decode graph instead
+        plain = all(nd == 0 for _, nd in ready)
+        step_fn = self._step_fn if plain else spec.verify_fn
+        step_tokens = tokens[:, :1] if plain else tokens
+
+        t0 = time.monotonic()
+        logits, self.cache.pools = step_fn(
+            self.params, self.cache.pools,
+            {"tokens": jnp.asarray(step_tokens)},
+            jnp.asarray(tables), jnp.asarray(lengths), jnp.asarray(n_new))
+        dt = time.monotonic() - t0 + draft_s
+
+        logits_np = np.asarray(logits)
+        now = self._clock()
+        drafted = accepted = 0
+        for i, nd in ready:
+            req = self.lanes[i]
+            q_rows = prop.probs[i, :nd] if prop.probs is not None else None
+            n_acc, emitted = spec.accept(
+                logits_np[i, :nd + 1], tokens[i, 1:1 + nd], q_rows,
+                req.sampling)
+            drafted += nd
+            accepted += n_acc
+            seq = self.cache.seqs[req.eid]
+            seq.length += n_acc + 1             # keep input + accepted rows
+            self.cache.trim(req.eid, seq.length)  # free rejected pages
+            if self.eos_id is not None and self.eos_id in emitted:
+                emitted = emitted[:emitted.index(self.eos_id) + 1]
+            budget = req.max_new_tokens - len(req.out_tokens)
+            for tok in emitted[:budget]:
+                self._emit(req, tok, now)
+            self._maybe_finish(i, now)
+        self.telemetry.spec(drafted, accepted)
+        return dt, len(ready)
 
     # ------------------------------------------------------------------
     def summary(self) -> Dict[str, float]:
@@ -347,6 +471,7 @@ class ServeEngine:
         key = jax.random.PRNGKey(0)
         temp = jnp.full((self.n_slots,), sampling.temperature, jnp.float32)
         topk = jnp.full((self.n_slots,), sampling.top_k, jnp.int32)
+        topp = jnp.full((self.n_slots,), sampling.top_p, jnp.float32)
         # recurrent state has no padding mask, so only EQUAL-length
         # prompts may share a lockstep batch (a pad token would corrupt
         # the shorter lane's state); group by length, then chunk
@@ -377,7 +502,7 @@ class ServeEngine:
             for step in range(steps):
                 key, sub = jax.random.split(key)
                 nxt = np.asarray(sample_tokens(sub, logits[:, 0, :], temp,
-                                               topk))
+                                               topk, topp))
                 for i, r in enumerate(batch):
                     if len(r.out_tokens) < r.max_new_tokens:
                         r.out_tokens.append(int(nxt[i]))

@@ -62,6 +62,18 @@ class BlockAllocator:
         self._free.extend(pages)
         return pages
 
+    def free_pages(self, owner: int, pages: List[int]) -> None:
+        """Return specific pages from `owner`'s holding (speculative
+        rollback frees the TAIL of a block table, not the whole
+        sequence).  Freeing a page the owner does not hold is an error —
+        it would double-free."""
+        held = self._held.get(owner, [])
+        for p in pages:
+            held.remove(p)      # ValueError on double-free, by design
+        if not held:
+            self._held.pop(owner, None)
+        self._free.extend(pages)
+
 
 @dataclass
 class SequenceState:
@@ -121,6 +133,22 @@ class PagedKVCache:
     def release(self, rid: int) -> None:
         self.allocator.free(rid)
         self.seqs.pop(rid, None)
+
+    def trim(self, rid: int, new_length: int) -> int:
+        """Roll back to `new_length` tokens (speculative reject): drop
+        block-table entries past the last live page and free them.
+        Stale rows beyond `new_length` inside kept pages are never read
+        (every consumer masks by length) and are overwritten in place by
+        the next append.  Returns the number of pages freed."""
+        seq = self.seqs[rid]
+        assert 0 <= new_length <= seq.length, (new_length, seq.length)
+        seq.length = new_length
+        keep = -(-max(new_length, 1) // self.page_size)
+        drop = seq.pages[keep:]
+        if drop:
+            seq.pages = seq.pages[:keep]
+            self.allocator.free_pages(rid, drop)
+        return len(drop)
 
     # -- device-facing views -------------------------------------------
     def table_for(self, rid: int) -> np.ndarray:

@@ -1,4 +1,4 @@
-"""Token sampling: greedy / temperature / top-k, PRNG-key threaded.
+"""Token sampling: greedy / temperature / top-k / top-p, PRNG-key threaded.
 
 The seed engine's non-greedy branch computed softmax-then-argmax — i.e.
 greedy with extra steps.  This module is the real thing, vectorized over
@@ -7,8 +7,16 @@ serves mixed traffic in one decode step).
 
 This runs once per generated token, so the dispatch avoids paying for
 machinery a batch doesn't use: all-greedy batches take a pure argmax,
-no-top-k batches skip truncation, and top-k uses `lax.top_k` over the
-batch max k instead of a full-vocab sort.
+no-top-k batches skip truncation, top-k uses `lax.top_k` over the
+batch max k instead of a full-vocab sort, and only batches with an
+active nucleus (top_p < 1) lane pay for the full descending sort the
+cumulative cutoff needs.
+
+`processed_probs` exposes the same truncation rules as a host-side
+numpy distribution — the speculative-decode acceptance test
+(`repro.spec.verify`) must judge draft tokens against EXACTLY the
+distribution this module samples from, or speculation would skew the
+output distribution.
 """
 from __future__ import annotations
 
@@ -24,6 +32,7 @@ import numpy as np
 class SamplingParams:
     temperature: float = 0.0     # 0 -> greedy
     top_k: int = 0               # 0 -> full vocab
+    top_p: float = 1.0           # 1 -> no nucleus truncation
 
 
 @jax.jit
@@ -44,35 +53,106 @@ def _sample_full(key, logits, temperature):
     return _mix_greedy(lf, temperature, sampled)
 
 
+def _topk_cutoff(scaled: jax.Array, top_k: jax.Array, kmax: int
+                 ) -> jax.Array:
+    """Per-lane kth-largest value; -inf (keep all) where top_k <= 0."""
+    top_vals, _ = jax.lax.top_k(scaled, kmax)                # (b, kmax)
+    k_eff = jnp.clip(top_k, 1, kmax).astype(jnp.int32)
+    kth = jnp.take_along_axis(top_vals, (k_eff - 1)[:, None], axis=-1)
+    return jnp.where((top_k > 0)[:, None], kth, -jnp.inf)
+
+
 @functools.partial(jax.jit, static_argnames=("kmax",))
 def _sample_topk(key, logits, temperature, top_k, kmax: int):
     lf = logits.astype(jnp.float32)
     scaled = lf / jnp.maximum(temperature, 1e-6)[:, None]
     # kth-largest per lane from the batch-max top-k (no full-vocab sort);
     # lanes with top_k <= 0 keep the whole vocab
-    top_vals, _ = jax.lax.top_k(scaled, kmax)                # (b, kmax)
-    k_eff = jnp.clip(top_k, 1, kmax).astype(jnp.int32)
-    kth = jnp.take_along_axis(top_vals, (k_eff - 1)[:, None], axis=-1)
-    kth = jnp.where((top_k > 0)[:, None], kth, -jnp.inf)
+    kth = _topk_cutoff(scaled, top_k, kmax)
     truncated = jnp.where(scaled >= kth, scaled, -jnp.inf)
     sampled = jax.random.categorical(key, truncated, axis=-1).astype(
         jnp.int32)
     return _mix_greedy(lf, temperature, sampled)
 
 
-def sample_tokens(key: jax.Array, logits: jax.Array, temperature: jax.Array,
-                  top_k: jax.Array) -> jax.Array:
-    """logits: (b, v); temperature, top_k: (b,) per-lane params.
+@functools.partial(jax.jit, static_argnames=("kmax",))
+def _sample_topk_topp(key, logits, temperature, top_k, top_p, kmax: int):
+    """Nucleus path: full descending sort (the cumulative cutoff needs
+    it), composed with the top-k cutoff.  Nucleus rule: keep the
+    smallest prefix of the sorted distribution whose mass reaches
+    top_p — a token survives iff the mass STRICTLY BEFORE it is still
+    under top_p (so the argmax always survives)."""
+    lf = logits.astype(jnp.float32)
+    scaled = lf / jnp.maximum(temperature, 1e-6)[:, None]
+    srt = jnp.sort(scaled, axis=-1)[:, ::-1]                 # descending
+    probs = jax.nn.softmax(srt, axis=-1)
+    before = jnp.cumsum(probs, axis=-1) - probs              # exclusive
+    # top_p <= 0 floors to "argmax only" (before[0] == 0 always keeps
+    # the head) rather than truncating the entire vocabulary
+    keep = before < jnp.maximum(top_p, 1e-9)[:, None]
+    p_cut = jnp.min(jnp.where(keep, srt, jnp.inf), axis=-1, keepdims=True)
+    p_cut = jnp.where((top_p < 1.0)[:, None], p_cut, -jnp.inf)
+    cut = jnp.maximum(p_cut, _topk_cutoff(scaled, top_k, kmax)
+                      if kmax > 0 else -jnp.inf)
+    truncated = jnp.where(scaled >= cut, scaled, -jnp.inf)
+    sampled = jax.random.categorical(key, truncated, axis=-1).astype(
+        jnp.int32)
+    return _mix_greedy(lf, temperature, sampled)
 
-    temperature <= 0 lanes decode greedily; top_k <= 0 means full vocab.
-    Returns (b,) int32 — one categorical draw per sampling lane from the
-    temperature-scaled, top-k-truncated distribution.
+
+def sample_tokens(key: jax.Array, logits: jax.Array, temperature: jax.Array,
+                  top_k: jax.Array, top_p: jax.Array = None) -> jax.Array:
+    """logits: (b, v); temperature, top_k, top_p: (b,) per-lane params.
+
+    temperature <= 0 lanes decode greedily; top_k <= 0 means full vocab;
+    top_p >= 1 disables nucleus truncation.  Returns (b,) int32 — one
+    categorical draw per lane from the temperature-scaled, top-k- and
+    top-p-truncated distribution.
     """
     temp_np = np.asarray(temperature)
     topk_np = np.asarray(top_k)
     if not np.any(temp_np > 0.0):
         return _greedy(logits)
-    kmax = int(topk_np.max(initial=0))
-    if kmax <= 0 or kmax >= logits.shape[-1]:
+    # clamp the batch-max k to the vocab (a k >= vocab lane keeps the
+    # whole vocab through the kth-value cutoff) instead of zeroing it,
+    # which would silently drop OTHER lanes' truncation
+    kmax = min(int(topk_np.max(initial=0)), logits.shape[-1])
+    if top_p is not None and np.any(
+            (np.asarray(top_p) < 1.0) & (temp_np > 0.0)):
+        return _sample_topk_topp(key, logits, temperature, top_k,
+                                 jnp.asarray(top_p), kmax)
+    if kmax <= 0:
         return _sample_full(key, logits, temperature)
     return _sample_topk(key, logits, temperature, top_k, kmax)
+
+
+# ----------------------------------------------------------------------------
+# host-side processed distribution (speculative-decode acceptance)
+# ----------------------------------------------------------------------------
+def processed_probs(logits: np.ndarray, temperature: float, top_k: int,
+                    top_p: float) -> np.ndarray:
+    """The (v,) probability vector `sample_tokens` draws one lane from.
+
+    Mirrors the device path's truncation rules exactly (same kth-value
+    top-k cutoff, same exclusive-cumsum nucleus rule, ties kept on both)
+    so the speculative accept/reject test preserves the served
+    distribution.  temperature <= 0 returns the greedy one-hot.
+    """
+    lf = np.asarray(logits, np.float64)
+    if temperature <= 0.0:
+        out = np.zeros_like(lf)
+        out[int(np.argmax(lf))] = 1.0
+        return out
+    scaled = lf / max(temperature, 1e-6)
+    cut = -np.inf
+    if 0 < top_k < lf.shape[-1]:
+        cut = np.sort(scaled)[::-1][top_k - 1]
+    if top_p < 1.0:
+        srt = np.sort(scaled)[::-1]
+        e = np.exp(srt - srt[0])
+        probs = e / e.sum()
+        before = np.cumsum(probs) - probs
+        cut = max(cut, srt[before < max(top_p, 1e-9)].min())
+    scaled = np.where(scaled >= cut, scaled, -np.inf)
+    e = np.exp(scaled - scaled.max())
+    return e / e.sum()

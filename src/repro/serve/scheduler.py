@@ -29,6 +29,10 @@ class ServeRequest:
     priority: int = 0                        # lower value = more urgent
     deadline_s: Optional[float] = None       # relative to enqueue
     sampling: SamplingParams = field(default_factory=SamplingParams)
+    spec: bool = True                        # opt out of speculative decode
+    #   (only meaningful on an engine built with a SpecConfig; such an
+    #   engine still serves spec=False lanes, one token per step, in the
+    #   same shape-stable verify call with an empty draft window)
     on_token: Optional[Callable[[int, int], None]] = None  # (rid, token)
 
     # lifecycle (engine-owned)

@@ -5,6 +5,14 @@ Per-request timeline: enqueue -> admit (queue time) -> first token
 Engine-level gauges (KV occupancy, batch size) are sampled every step.
 All clocks are caller-supplied monotonic seconds, so tests can drive
 synthetic time.
+
+A decode step is NOT one token: speculative decoding emits a variable
+number of tokens per lane per step.  Tokens are therefore counted where
+they are emitted (`token`), while `step` separately counts decode-graph
+invocations and the lane-steps behind them, so throughput and
+tokens-per-step stay honest for any emission width (for the plain
+engine `tokens_per_decode_step` is exactly 1.0).  `spec` accumulates
+the drafted/accepted ledger behind the acceptance rate.
 """
 from __future__ import annotations
 
@@ -56,9 +64,13 @@ class Telemetry:
         self.decode_s = 0.0
         self.prefill_s = 0.0
         self.steps = 0
+        self.decode_steps = 0        # decode-graph invocations
+        self.decode_lane_steps = 0   # active lanes summed over decode steps
         self.tokens = 0
         self.decode_tokens = 0       # emitted by the decode graph
         self.prefill_tokens = 0
+        self.spec_drafted = 0        # draft tokens sent to verification
+        self.spec_accepted = 0       # draft tokens the target accepted
         self.t_start: Optional[float] = None
         self.t_end: Optional[float] = None
 
@@ -89,12 +101,25 @@ class Telemetry:
 
     # -- engine gauges --------------------------------------------------
     def step(self, occupancy: float, batch: int, decode_s: float = 0.0,
-             prefill_s: float = 0.0):
+             prefill_s: float = 0.0, decode_lanes: int = 0):
+        """`decode_lanes`: lanes the decode graph advanced this step (0
+        on prefill-only steps) — the denominator of tokens-per-step,
+        which `token` alone cannot provide once steps emit more than one
+        token."""
         self.occupancy_samples.append(occupancy)
         self.batch_samples.append(batch)
         self.decode_s += decode_s
         self.prefill_s += prefill_s
         self.steps += 1
+        if decode_lanes:
+            self.decode_steps += 1
+            self.decode_lane_steps += decode_lanes
+
+    def spec(self, drafted: int, accepted: int):
+        """One verify step's ledger: `drafted` tokens proposed across
+        the batch, `accepted` of them kept by the target."""
+        self.spec_drafted += drafted
+        self.spec_accepted += accepted
 
     # -- rollup ---------------------------------------------------------
     def summary(self) -> Dict[str, float]:
@@ -112,9 +137,17 @@ class Telemetry:
             "tokens": float(self.tokens),
             "prefill_tokens": float(self.prefill_tokens),
             "steps": float(self.steps),
+            "decode_steps": float(self.decode_steps),
             "tokens_per_s": self.tokens / wall if wall else float("nan"),
             "decode_tokens_per_s": (self.decode_tokens / self.decode_s
                                     if self.decode_s else float("nan")),
+            "tokens_per_decode_step": (
+                self.decode_tokens / self.decode_lane_steps
+                if self.decode_lane_steps else float("nan")),
+            "spec_drafted": float(self.spec_drafted),
+            "spec_accepted": float(self.spec_accepted),
+            "spec_acceptance_rate": (self.spec_accepted / self.spec_drafted
+                                     if self.spec_drafted else float("nan")),
             "ttft_p50_s": _pct(ttft, 50), "ttft_p99_s": _pct(ttft, 99),
             "tpot_p50_s": _pct(tpot, 50), "tpot_p99_s": _pct(tpot, 99),
             "queue_p50_s": _pct(queue, 50), "queue_p99_s": _pct(queue, 99),

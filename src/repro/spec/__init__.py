@@ -1,0 +1,12 @@
+"""Speculative decoding over the paged-KV runtime.
+
+drafter -> paged_verify_step (multi-query attention over the page pool)
+-> accept/reject (target-distribution-preserving) -> multi-token append
++ rollback (`PagedKVCache.trim`).  See repro/serve/README.md.
+"""
+from .decode import SpecConfig, SpecDecoder
+from .drafter import Drafter, DraftModelDrafter, DraftProposal, NGramDrafter
+from .verify import accept_draft
+
+__all__ = ["SpecConfig", "SpecDecoder", "Drafter", "DraftModelDrafter",
+           "DraftProposal", "NGramDrafter", "accept_draft"]

@@ -1,0 +1,74 @@
+"""SpecDecoder: the engine-facing bundle — drafter + jitted verify fn +
+acceptance RNG.
+
+EdgeCIM frames decode as memory-bound GEMV: every emitted token
+re-streams the full weight set.  Speculative decoding amortizes that
+stream over a k-token window — `paged_verify_step` scores the whole
+window in ONE pass (small-batch GEMM, the same arithmetic-intensity
+lever as the paper's tile pipeline), and the accept/reject walk keeps
+the served distribution exactly the target's.  The engine stays
+shape-stable: every verify call is (max_batch, k + 1) regardless of how
+many lanes drafted, so jit never retraces.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.serve.sampling import SamplingParams
+
+from .drafter import Drafter, DraftModelDrafter, NGramDrafter
+from .verify import accept_draft
+
+
+@dataclass
+class SpecConfig:
+    """Engine-level speculation knobs (per-request opt-out via
+    `ServeRequest.spec = False`)."""
+    k: int = 4                       # draft window (tokens per verify)
+    drafter: str = "ngram"           # "ngram" | "model"
+    ngram_max: int = 3
+    ngram_min: int = 1
+    draft_model: Any = None          # DecoderLM, drafter == "model"
+    draft_params: Any = None
+    draft_page_size: int = 16
+    draft_chunk: int = 16            # draft-cache catch-up chunk width
+    seed: int = 0
+
+
+class SpecDecoder:
+    def __init__(self, model, spec_cfg: SpecConfig, *, max_batch: int,
+                 max_seq: int, kv_dtype=None):
+        assert spec_cfg.k >= 1
+        self.cfg = spec_cfg
+        self.verify_fn = jax.jit(model.paged_verify_step,
+                                 donate_argnums=(1,))
+        self.rng = np.random.default_rng(spec_cfg.seed)
+        if spec_cfg.drafter == "ngram":
+            self.drafter: Drafter = NGramDrafter(spec_cfg.ngram_max,
+                                                 spec_cfg.ngram_min)
+        elif spec_cfg.drafter == "model":
+            assert spec_cfg.draft_model is not None, \
+                "drafter='model' needs draft_model/draft_params"
+            dm = spec_cfg.draft_model
+            assert dm.cfg.vocab == model.cfg.vocab, \
+                "draft and target models must share a vocabulary"
+            page = spec_cfg.draft_page_size
+            while max_seq % page:
+                page //= 2
+            self.drafter = DraftModelDrafter(
+                dm, spec_cfg.draft_params, max_batch=max_batch,
+                max_seq=max_seq, page_size=page, kv_dtype=kv_dtype,
+                chunk=spec_cfg.draft_chunk, seed=spec_cfg.seed)
+        else:
+            raise ValueError(spec_cfg.drafter)
+
+    def accept(self, p_logits: np.ndarray, draft: np.ndarray,
+               q_probs: Optional[np.ndarray], sampling: SamplingParams
+               ) -> Tuple[int, List[int]]:
+        """Delegate one lane's walk to the acceptance rule with the
+        decoder's RNG (one stream for the whole engine, seeded)."""
+        return accept_draft(p_logits, draft, q_probs, sampling, self.rng)

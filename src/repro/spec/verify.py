@@ -1,0 +1,94 @@
+"""Speculative accept/reject sampling — provably target-preserving.
+
+Given the target model's logits over a draft window (one verify pass =
+`DecoderLM.paged_verify_step`), walk the window left to right:
+
+  greedy lanes     accept draft token j iff it IS the target argmax at
+                   position j — the emitted stream is byte-identical to
+                   plain decode, speculation only changes how many
+                   tokens each step yields;
+  sampling lanes   accept draft x_j ~ q_j with probability
+                   min(1, p_j(x_j) / q_j(x_j)); on the first rejection
+                   emit one token from the residual
+                   norm(max(p_j - q_j, 0)) and stop.
+
+The stochastic rule is the standard speculative-sampling identity
+(Leviathan et al. / Chen et al.): accepted-or-residual output is an
+exact sample from p_j, so the served distribution equals the target's
+regardless of how bad the drafter is — drafter quality moves only the
+acceptance RATE.  A model-free drafter (prompt-lookup n-gram) is the
+degenerate q = point-mass case: accept with probability p_j(x_j),
+residual = p_j with x_j zeroed out.
+
+Every step emits the accepted prefix PLUS one token sampled from the
+position after it (the "bonus" — on zero acceptance this is exactly a
+plain decode step), so progress is always >= 1 token/step.
+
+All math runs host-side in float64 on the (v,) rows `processed_probs`
+derives with the SAME truncation rules the engine samples with — using
+raw softmax here would silently disable a lane's top-k/top-p.
+"""
+from __future__ import annotations
+
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+from repro.serve.sampling import SamplingParams, processed_probs
+
+
+def _residual_draw(p: np.ndarray, q: np.ndarray,
+                   rng: np.random.Generator) -> int:
+    """Sample from norm(max(p - q, 0)); degenerates to p when p == q."""
+    res = np.maximum(p - q, 0.0)
+    z = res.sum()
+    if z <= 0.0:
+        return int(rng.choice(p.shape[0], p=p / p.sum()))
+    return int(rng.choice(p.shape[0], p=res / z))
+
+
+def accept_draft(p_logits: np.ndarray, draft: np.ndarray,
+                 q_probs: Optional[np.ndarray], sampling: SamplingParams,
+                 rng: np.random.Generator) -> Tuple[int, List[int]]:
+    """One lane's accept/reject walk over a verified draft window.
+
+    p_logits: (n_draft + 1, v) target logits — row j conditions on the
+    prefix plus draft[:j]; draft: (n_draft,) proposed tokens; q_probs:
+    (n_draft, v) draft distributions, or None for a point-mass drafter.
+    Returns (n_accepted, emitted) where emitted carries the accepted
+    prefix plus the bonus/residual token (len == n_accepted + 1).
+    """
+    n_draft = int(len(draft))
+    assert p_logits.shape[0] >= n_draft + 1
+
+    if sampling.temperature <= 0.0:                      # greedy: exact match
+        emitted: List[int] = []
+        for j in range(n_draft):
+            top = int(np.argmax(p_logits[j]))
+            if int(draft[j]) != top:
+                return j, emitted + [top]
+            emitted.append(top)
+        return n_draft, emitted + [int(np.argmax(p_logits[n_draft]))]
+
+    emitted = []
+    for j in range(n_draft):
+        p = processed_probs(p_logits[j], sampling.temperature,
+                            sampling.top_k, sampling.top_p)
+        x = int(draft[j])
+        if q_probs is None:                              # point-mass drafter
+            q = np.zeros_like(p)
+            q[x] = 1.0
+        else:
+            q = np.asarray(q_probs[j], np.float64)
+        accept_p = 1.0 if q[x] <= 0.0 else min(1.0, p[x] / q[x])
+        # q[x] == 0 means the drafter reports a distribution it did not
+        # actually sample x from (shouldn't happen); accepting p-side
+        # keeps the walk defined
+        if p[x] > 0.0 and rng.random() < accept_p:
+            emitted.append(x)
+            continue
+        return j, emitted + [_residual_draw(p, q, rng)]
+    p_last = processed_probs(p_logits[n_draft], sampling.temperature,
+                             sampling.top_k, sampling.top_p)
+    return n_draft, emitted + [int(rng.choice(p_last.shape[0],
+                                              p=p_last / p_last.sum()))]

@@ -96,3 +96,59 @@ def test_kv_cache_grows_latency_with_prefill():
     r_small = SIM.generate(s, H_REF, 128, 128, 4, 8)
     r_big = SIM.generate(s, H_REF, 4096, 128, 4, 8)
     assert r_big.latency_s > r_small.latency_s
+
+
+# ----------------------------------------------------------------------------
+# speculative-decoding factor (SpecKnob)
+# ----------------------------------------------------------------------------
+def test_spec_knob_tokens_per_step_formula():
+    from repro.core import SpecKnob
+    assert SpecKnob(k=4, accept_rate=0.0).tokens_per_step() == 1.0
+    assert SpecKnob(k=4, accept_rate=1.0).tokens_per_step() == 5.0
+    assert SpecKnob(k=4, accept_rate=0.5).tokens_per_step() == \
+        pytest.approx((1 - 0.5 ** 5) / 0.5)
+    assert SpecKnob(k=1, accept_rate=0.3).tokens_per_step() == \
+        pytest.approx(1.3)
+
+
+def test_spec_knob_pricing_bounds_and_monotonicity():
+    from repro.core import SpecKnob
+    spec = PAPER_SLMS["llama3.2-1b"]
+    base = SIM.generate(spec, H_REF, 128, 128, 4, 8)
+
+    # zero acceptance, free drafting: roughly break-even (pays the
+    # (k+1)-wide verify compute, saves nothing)
+    zero = SIM.generate(spec, H_REF, 128, 128, 4, 8,
+                        spec_decode=SpecKnob(k=4, accept_rate=0.0))
+    assert 0.8 * base.latency_s < zero.latency_s < 1.3 * base.latency_s
+
+    # full acceptance: speedup approaches E = k + 1 (weight stream
+    # amortized over the window; the extra compute costs a little)
+    full = SIM.generate(spec, H_REF, 128, 128, 4, 8,
+                        spec_decode=SpecKnob(k=4, accept_rate=1.0))
+    assert 0.6 * 5 < base.latency_s / full.latency_s <= 5.0
+    assert full.energy_j < base.energy_j
+
+    # latency/energy decrease monotonically in accept_rate...
+    lats = [SIM.generate(spec, H_REF, 128, 128, 4, 8,
+                         spec_decode=SpecKnob(k=4, accept_rate=a)).latency_s
+            for a in (0.0, 0.3, 0.6, 0.9)]
+    assert all(a > b for a, b in zip(lats, lats[1:]))
+    # ...and increase monotonically in draft_cost_ratio
+    lats = [SIM.generate(spec, H_REF, 128, 128, 4, 8,
+                         spec_decode=SpecKnob(k=4, accept_rate=0.7,
+                                              draft_cost_ratio=r)).latency_s
+            for r in (0.0, 0.1, 0.3)]
+    assert all(a < b for a, b in zip(lats, lats[1:]))
+
+
+def test_spec_knob_threads_through_objective():
+    from repro.core import SpecKnob
+    from repro.core.objective import Objective
+    spec = PAPER_SLMS["llama3.2-1b"]
+    plain = Objective(spec=spec)
+    fast = Objective(spec=spec,
+                     spec_decode=SpecKnob(k=4, accept_rate=0.8))
+    assert fast(H_REF) < plain(H_REF)
+    rep = fast.evaluate(H_REF)
+    assert rep.spec_decode is not None and rep.spec_decode.k == 4

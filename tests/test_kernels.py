@@ -6,9 +6,11 @@ import pytest
 
 from repro.kernels.cim_gemv import cim_gemv
 from repro.kernels.flash_decode import flash_decode
-from repro.kernels.paged_flash_decode import paged_flash_decode
+from repro.kernels.paged_flash_decode import (paged_flash_decode,
+                                              paged_flash_verify)
 from repro.kernels.ref import (ref_flash_decode, ref_paged_decode,
-                               ref_qmatmul, ref_swiglu_qgemv)
+                               ref_paged_verify, ref_qmatmul,
+                               ref_swiglu_qgemv)
 from repro.kernels.swiglu_gemv import swiglu_qgemv
 from repro.kernels import ops
 from repro.quant.qarray import quantize
@@ -87,6 +89,52 @@ def test_paged_flash_decode_sweep(page_size, max_pages, window, cap):
     out = paged_flash_decode(q, kp, vp, tables, lengths, window=window,
                              attn_cap=cap, interpret=True)
     assert float(jnp.max(jnp.abs(out - ref))) < 1e-5
+
+
+@pytest.mark.parametrize("s,page_size,max_pages,window,cap", [
+    (4, 16, 8, 0, 0.0),
+    (5, 8, 16, 0, 0.0),
+    (3, 16, 8, 24, 0.0),
+    (4, 16, 8, 0, 30.0),
+    (2, 8, 16, 12, 50.0),
+])
+def test_paged_flash_verify_sweep(s, page_size, max_pages, window, cap):
+    """Multi-query verify kernel vs the gather oracle: shuffled page
+    layouts, ragged base lengths, every intra-window causal horizon."""
+    b, g, qpk, hd = 3, 2, 4, 64
+    n_pages = b * max_pages
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.standard_normal((b, s, g, qpk, hd)), jnp.float32)
+    kp = jnp.asarray(rng.standard_normal((n_pages, page_size, g, hd)),
+                     jnp.float32)
+    vp = jnp.asarray(rng.standard_normal((n_pages, page_size, g, hd)),
+                     jnp.float32)
+    tables = jnp.asarray(
+        rng.permutation(n_pages).reshape(b, max_pages), jnp.int32)
+    S = max_pages * page_size
+    lengths = jnp.asarray(rng.integers(0, S - s + 1, size=b), jnp.int32)
+    ref = ref_paged_verify(q, kp, vp, tables, lengths, window, cap)
+    out = paged_flash_verify(q, kp, vp, tables, lengths, window=window,
+                             attn_cap=cap, interpret=True)
+    assert float(jnp.max(jnp.abs(out - ref))) < 1e-5
+
+
+def test_paged_verify_s1_matches_paged_decode():
+    """A 1-wide verify window IS a decode step (lengths exclusive vs
+    inclusive is the only difference in convention)."""
+    b, g, qpk, hd, ps, mp = 2, 2, 4, 64, 16, 8
+    rng = np.random.default_rng(2)
+    q = jnp.asarray(rng.standard_normal((b, 1, g, qpk, hd)), jnp.float32)
+    kp = jnp.asarray(rng.standard_normal((b * mp, ps, g, hd)), jnp.float32)
+    vp = jnp.asarray(rng.standard_normal((b * mp, ps, g, hd)), jnp.float32)
+    tables = jnp.arange(b * mp, dtype=jnp.int32).reshape(b, mp)
+    lengths = jnp.asarray([17, 90], jnp.int32)
+    dec = ref_paged_decode(q[:, 0], kp, vp, tables, lengths + 1)
+    ver = ref_paged_verify(q, kp, vp, tables, lengths)[:, 0]
+    assert float(jnp.max(jnp.abs(dec - ver))) < 1e-6
+    krn = paged_flash_verify(q, kp, vp, tables, lengths,
+                             interpret=True)[:, 0]
+    assert float(jnp.max(jnp.abs(dec - krn))) < 1e-5
 
 
 def test_paged_decode_matches_dense_flash_decode():

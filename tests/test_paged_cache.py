@@ -97,6 +97,82 @@ def test_paged_cache_room_respects_max_seq_and_pool():
     assert not c2.ensure_room(1, 1), "pool exhausted"
 
 
+def test_allocator_free_pages_partial_and_double_free():
+    a = BlockAllocator(8)
+    pages = a.alloc(owner=1, n=5)
+    a.free_pages(1, pages[3:])                  # tail rollback
+    assert a.n_held(1) == 3 and a.n_free == 5
+    with pytest.raises(ValueError):
+        a.free_pages(1, [pages[4]])             # double-free is an error
+    a.free_pages(1, pages[:3])
+    assert a.n_held(1) == 0 and a.n_free == 8
+
+
+def test_trim_frees_tail_pages_and_keeps_table_prefix():
+    c = _cache(n_pages=16, page_size=4, max_seq=64)
+    seq = c.admit(rid=3, prompt_len=6)          # 2 pages
+    seq.length = 6
+    assert c.ensure_room(3, 7)                  # 13 tokens -> 4 pages
+    seq.length = 13
+    kept = list(seq.pages[:2])
+    freed = c.trim(3, 7)                        # roll back to 7 -> 2 pages
+    assert freed == 2 and seq.length == 7
+    assert seq.pages == kept, "surviving table prefix untouched"
+    assert c.allocator.n_free == 14
+    assert c.trim(3, 7) == 0, "idempotent at the same length"
+    c.release(3)
+    assert c.allocator.n_free == 16
+
+
+def test_paged_cache_spec_append_rollback_property():
+    """Speculative decode hammers (multi-token append -> partial
+    rollback) on the allocator.  Seeded random op sequences: pages are
+    conserved, never double-held, capacity always covers length, and
+    every sequence's block table stays a prefix of its page list."""
+    rng = np.random.default_rng(7)
+    for trial in range(15):
+        page_size = int(rng.choice([2, 4, 8]))
+        max_seq = 64
+        n_pages = int(rng.integers(6, 24))
+        c = _cache(n_pages=n_pages, page_size=page_size, max_seq=max_seq)
+        live = {}
+        next_rid = 0
+        for _ in range(300):
+            op = rng.random()
+            if (op < 0.3 or not live) and c.allocator.can_alloc(1):
+                plen = int(rng.integers(1, 2 * page_size))
+                if c.allocator.can_alloc(c.pages_needed(plen)):
+                    seq = c.admit(next_rid, plen)
+                    seq.length = plen
+                    live[next_rid] = seq
+                    next_rid += 1
+            elif op < 0.7 and live:
+                rid = int(rng.choice(list(live)))
+                seq = live[rid]
+                window = int(rng.integers(1, 6))    # k-token append
+                if c.ensure_room(rid, window):
+                    seq.length += window
+                    accepted = int(rng.integers(0, window + 1))
+                    c.trim(rid, seq.length - (window - accepted))
+            elif op < 0.9 and live:
+                rid = int(rng.choice(list(live)))
+                c.release(rid)
+                live.pop(rid)
+            # invariants
+            held = [p for s in live.values() for p in s.pages]
+            assert len(held) == len(set(held)), "page double-held"
+            assert c.allocator.n_free + len(held) == n_pages, "leak"
+            for rid, seq in live.items():
+                assert seq.capacity(page_size) >= seq.length
+                assert seq.length <= max_seq
+                assert c.allocator.n_held(rid) == len(seq.pages)
+                tab = c.table_for(rid)
+                assert list(tab[:len(seq.pages)]) == seq.pages
+        for rid in list(live):
+            c.release(rid)
+        assert c.allocator.n_free == n_pages, "drain leaves pages behind"
+
+
 def test_scheduler_priority_and_deadline():
     c = _cache(n_pages=32, page_size=4, max_seq=32)
     s = Scheduler(max_batch=2)

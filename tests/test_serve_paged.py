@@ -266,6 +266,113 @@ def test_sample_tokens_mixed_lanes():
     assert int(out[0]) == int(jnp.argmax(logits[0]))
 
 
+def test_sample_tokens_top_p_restricts_support():
+    rng = np.random.default_rng(0)
+    logits = jnp.asarray(rng.standard_normal((1, 64)).astype(np.float32))
+    probs = np.asarray(jax.nn.softmax(logits[0]))
+    order = np.argsort(probs)[::-1]
+    nucleus = set(order[:np.searchsorted(np.cumsum(probs[order]), 0.5) + 1])
+    for k in range(40):
+        tok = int(sample_tokens(jax.random.PRNGKey(k), logits,
+                                jnp.ones(1), jnp.zeros(1, jnp.int32),
+                                jnp.asarray([0.5], jnp.float32))[0])
+        assert tok in nucleus, (tok, nucleus)
+
+
+def test_sample_tokens_top_p_one_keeps_full_support():
+    """top_p=1.0 must not truncate: uniform logits stay explorable."""
+    logits = jnp.zeros((1, 64))
+    draws = {int(sample_tokens(jax.random.PRNGKey(k), logits, jnp.ones(1),
+                               jnp.zeros(1, jnp.int32),
+                               jnp.ones(1, jnp.float32))[0])
+             for k in range(30)}
+    assert len(draws) > 5
+
+
+def test_sample_tokens_top_p_composes_with_top_k():
+    """With both active the tighter truncation wins per lane."""
+    rng = np.random.default_rng(1)
+    logits = jnp.asarray(rng.standard_normal((2, 64)).astype(np.float32))
+    top3_row1 = set(np.asarray(jnp.argsort(logits[1])[::-1][:3]))
+    for k in range(30):
+        out = sample_tokens(jax.random.PRNGKey(k), logits,
+                            jnp.asarray([0.0, 2.0]),
+                            jnp.asarray([0, 3], jnp.int32),
+                            jnp.asarray([0.9, 0.99], jnp.float32))
+        # lane 0 greedy regardless of truncation params
+        assert int(out[0]) == int(jnp.argmax(logits[0]))
+        assert int(out[1]) in top3_row1
+
+
+def test_sample_tokens_vocab_wide_top_k_lane_does_not_untruncate_others():
+    """One lane asking for top_k >= vocab must not disable another
+    lane's truncation (the batch-max k is clamped, not zeroed)."""
+    rng = np.random.default_rng(4)
+    v = 16
+    logits = jnp.asarray(rng.standard_normal((2, v)).astype(np.float32))
+    top3 = set(np.asarray(jnp.argsort(logits[0])[::-1][:3]))
+    for k in range(30):
+        out = sample_tokens(jax.random.PRNGKey(k), logits,
+                            jnp.asarray([2.0, 2.0]),
+                            jnp.asarray([3, v], jnp.int32))
+        assert int(out[0]) in top3
+
+
+def test_sample_tokens_and_processed_probs_top_p_zero_is_argmax():
+    """top_p <= 0 floors to greedy on BOTH the device path and the host
+    mirror (no crash, no empty support)."""
+    from repro.serve.sampling import processed_probs
+    rng = np.random.default_rng(5)
+    logits = rng.standard_normal(32).astype(np.float32)
+    best = int(np.argmax(logits))
+    p = processed_probs(logits, 1.0, 0, 0.0)
+    assert int(np.argmax(p)) == best and p[best] == pytest.approx(1.0)
+    for k in range(10):
+        tok = int(sample_tokens(jax.random.PRNGKey(k),
+                                jnp.asarray(logits[None, :]), jnp.ones(1),
+                                jnp.zeros(1, jnp.int32),
+                                jnp.zeros(1, jnp.float32))[0])
+        assert tok == best
+
+
+def test_sample_tokens_top_p_always_keeps_argmax():
+    """Even a tiny nucleus keeps the most likely token (the exclusive-
+    cumsum rule), so sampling never degenerates to an empty support."""
+    rng = np.random.default_rng(2)
+    logits = jnp.asarray(rng.standard_normal((1, 32)).astype(np.float32))
+    tok = int(sample_tokens(jax.random.PRNGKey(0), logits, jnp.ones(1),
+                            jnp.zeros(1, jnp.int32),
+                            jnp.asarray([1e-6], jnp.float32))[0])
+    assert tok == int(jnp.argmax(logits[0]))
+
+
+def test_processed_probs_matches_device_truncation():
+    """The host-side mirror (speculative acceptance) must keep exactly
+    the support the device sampler keeps."""
+    from repro.serve.sampling import processed_probs
+    rng = np.random.default_rng(3)
+    logits = rng.standard_normal(64).astype(np.float32)
+    for temp, top_k, top_p in [(1.0, 0, 1.0), (0.7, 5, 1.0),
+                               (1.3, 0, 0.6), (0.9, 12, 0.8),
+                               (0.0, 0, 1.0)]:
+        p = processed_probs(logits, temp, top_k, top_p)
+        assert p.shape == (64,) and abs(p.sum() - 1.0) < 1e-9
+        support = set(np.nonzero(p > 0)[0])
+        if temp <= 0:
+            assert support == {int(np.argmax(logits))}
+            continue
+        draws = set()
+        for k in range(200):
+            tok = int(sample_tokens(
+                jax.random.PRNGKey(k), jnp.asarray(logits[None, :]),
+                jnp.asarray([temp]), jnp.asarray([top_k], jnp.int32),
+                jnp.asarray([top_p], jnp.float32))[0])
+            draws.add(tok)
+            assert tok in support, (temp, top_k, top_p)
+        # all mass the device explores lives inside the mirror's support
+        assert draws <= support
+
+
 def test_engine_temperature_sampling_end_to_end():
     model, params = _model()
     prompt = np.array([1, 2, 3], np.int32)

@@ -1,0 +1,350 @@
+"""Speculative decoding: drafters, acceptance rule, verify step, engine
+equivalence (the tentpole guarantee: greedy spec output is byte-identical
+to plain decode), rollback hygiene."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import DecoderLM, ModelConfig, init_params
+from repro.models.common import spec_structs
+from repro.serve import (PagedServeEngine, SamplingParams, ServeRequest)
+from repro.serve.sampling import processed_probs
+from repro.spec import (DraftModelDrafter, NGramDrafter, SpecConfig,
+                        accept_draft)
+
+
+def _model(seed=0, **kw):
+    cfg = ModelConfig(name="s", family="dense", n_layers=2, d_model=32,
+                      n_heads=2, n_kv_heads=2, d_ff=64, vocab=64,
+                      head_dim=16, dtype="float32", remat=False, **kw)
+    model = DecoderLM(cfg)
+    params = init_params(model.param_specs(), jax.random.PRNGKey(seed),
+                         dtype_override=jnp.float32)
+    return model, params
+
+
+def _zeros(tree):
+    return jax.tree_util.tree_map(lambda s: jnp.zeros(s.shape, s.dtype),
+                                  spec_structs(tree))
+
+
+PROMPTS = [np.array([1, 2, 3, 1, 2, 3, 1, 2], np.int32),      # repetitive
+           np.array([7, 9, 11], np.int32),                     # short
+           np.arange(10, 30, dtype=np.int32) % 64]             # long
+
+
+def _run(model, params, spec, prompts=PROMPTS, new=12, **kw):
+    eng = PagedServeEngine(model, params, max_batch=2, max_seq=64,
+                           page_size=8, prefill_chunk=8, spec=spec, **kw)
+    reqs = [ServeRequest(prompt=p.copy(), max_new_tokens=new, rid=i)
+            for i, p in enumerate(prompts)]
+    eng.run(reqs)
+    return [r.out_tokens for r in reqs], eng
+
+
+# ----------------------------------------------------------------------------
+# n-gram drafter
+# ----------------------------------------------------------------------------
+def test_ngram_drafter_finds_repetition():
+    d = NGramDrafter(ngram_max=3)
+    h = np.array([5, 6, 7, 8, 5, 6, 7], np.int32)
+    prop = d.propose([h], k=4, sampling=[None])
+    # suffix [5,6,7] matched at position 0 -> continuation [8, 5, 6, 7]
+    assert list(prop.tokens[0][:prop.n[0]]) == [8, 5, 6, 7]
+    assert prop.probs is None
+
+
+def test_ngram_drafter_prefers_longest_then_most_recent():
+    d = NGramDrafter(ngram_max=3)
+    # suffix [2,3] occurs twice; the LATER occurrence's continuation wins
+    h = np.array([2, 3, 9, 1, 2, 3, 7, 4, 2, 3], np.int32)
+    prop = d.propose([h], k=2, sampling=[None])
+    assert list(prop.tokens[0][:prop.n[0]]) == [7, 4]
+
+
+def test_ngram_drafter_no_match_is_empty():
+    d = NGramDrafter()
+    prop = d.propose([np.array([1, 2, 3, 4, 5], np.int32)], k=4,
+                     sampling=[None])
+    assert prop.n[0] == 0
+    prop = d.propose([None, np.array([1], np.int32)], k=4,
+                     sampling=[None, None])
+    assert list(prop.n) == [0, 0]
+
+
+# ----------------------------------------------------------------------------
+# acceptance rule
+# ----------------------------------------------------------------------------
+def test_accept_draft_greedy_exact_match():
+    rng = np.random.default_rng(0)
+    logits = rng.standard_normal((4, 16))
+    tops = np.argmax(logits, axis=-1)
+    g = SamplingParams(temperature=0.0)
+    # full acceptance: drafts == argmax everywhere
+    n, emitted = accept_draft(logits, tops[:3], None, g, rng)
+    assert n == 3 and emitted == list(tops[:4])
+    # first mismatch stops the walk and emits the target's token
+    draft = tops[:3].copy()
+    draft[1] = (draft[1] + 1) % 16
+    n, emitted = accept_draft(logits, draft, None, g, rng)
+    assert n == 1 and emitted == [int(tops[0]), int(tops[1])]
+
+
+def test_accept_draft_pointmass_preserves_distribution():
+    """Prompt-lookup acceptance (q = point mass) must serve exactly the
+    target distribution: empirical frequencies of the FIRST emitted
+    token over many walks match p within sampling noise."""
+    rng_logits = np.random.default_rng(1)
+    logits = rng_logits.standard_normal((2, 8)) * 2.0
+    sp = SamplingParams(temperature=1.0)
+    p = processed_probs(logits[0], 1.0, 0, 1.0)
+    draft = np.array([3], np.int32)          # always propose token 3
+    rng = np.random.default_rng(2)
+    counts = np.zeros(8)
+    trials = 4000
+    for _ in range(trials):
+        n, emitted = accept_draft(logits, draft, None, sp, rng)
+        counts[emitted[0]] += 1
+    emp = counts / trials
+    assert np.abs(emp - p).max() < 0.03, (emp, p)
+
+
+def test_accept_draft_model_q_preserves_distribution():
+    """Full-q acceptance: draft tokens sampled from q, accepted with
+    min(1, p/q), residual on reject — first emitted token ~ p."""
+    rng_logits = np.random.default_rng(3)
+    logits = rng_logits.standard_normal((2, 8)) * 1.5
+    sp = SamplingParams(temperature=1.0)
+    p = processed_probs(logits[0], 1.0, 0, 1.0)
+    q = processed_probs(rng_logits.standard_normal(8) * 1.5, 1.0, 0, 1.0)
+    rng = np.random.default_rng(4)
+    counts = np.zeros(8)
+    trials = 4000
+    for _ in range(trials):
+        x = rng.choice(8, p=q)               # draft genuinely sampled ~ q
+        n, emitted = accept_draft(logits, np.array([x]), q[None, :], sp,
+                                  rng)
+        counts[emitted[0]] += 1
+    emp = counts / trials
+    assert np.abs(emp - p).max() < 0.03, (emp, p)
+
+
+def test_accept_draft_respects_truncation():
+    """A draft token outside the lane's top-k support must never be
+    emitted — acceptance judges against the PROCESSED distribution."""
+    logits = np.zeros((2, 8))
+    logits[0, :4] = 10.0                     # top-4 dominates
+    sp = SamplingParams(temperature=1.0, top_k=4)
+    rng = np.random.default_rng(0)
+    for _ in range(50):
+        n, emitted = accept_draft(logits, np.array([6]), None, sp, rng)
+        assert n == 0 and emitted[0] < 4
+
+
+# ----------------------------------------------------------------------------
+# verify step == sequential decode
+# ----------------------------------------------------------------------------
+@pytest.mark.parametrize("kw", [{}, {"local_window": 3, "local_pattern": 2,
+                                     "rope_theta_local": 10000.0}])
+def test_paged_verify_step_matches_sequential(kw):
+    model, params = _model(**kw)
+    toks = np.array([5, 9, 3, 17, 2, 41, 8, 30], np.int32)
+    tables = jnp.asarray([[3, 7, 1, 5, 0, 0, 0, 0]], jnp.int32)
+
+    pool = _zeros(model.paged_cache_specs(10, 4, jnp.float32))
+    seq = []
+    for t, tok in enumerate(toks):
+        lg, pool = model.paged_step(
+            params, pool, {"tokens": jnp.asarray([[tok]])}, tables,
+            jnp.asarray([t], jnp.int32), jnp.asarray([1], jnp.int32))
+        seq.append(np.asarray(lg[0, 0]))
+
+    pool2 = _zeros(model.paged_cache_specs(10, 4, jnp.float32))
+    lg, pool2 = model.paged_step(
+        params, pool2, {"tokens": jnp.asarray(toks[None, :3])}, tables,
+        jnp.asarray([0], jnp.int32), jnp.asarray([3], jnp.int32))
+    vg, pool2 = model.paged_verify_step(
+        params, pool2, {"tokens": jnp.asarray(toks[None, 3:])}, tables,
+        jnp.asarray([3], jnp.int32), jnp.asarray([5], jnp.int32))
+    for i in range(5):
+        np.testing.assert_allclose(np.asarray(vg[0, i]), seq[3 + i],
+                                   atol=1e-4, err_msg=f"window pos {i}")
+
+
+# ----------------------------------------------------------------------------
+# engine equivalence (the acceptance criterion)
+# ----------------------------------------------------------------------------
+def test_greedy_spec_ngram_byte_identical():
+    model, params = _model()
+    base, _ = _run(model, params, None)
+    out, eng = _run(model, params, SpecConfig(k=4, drafter="ngram"))
+    assert out == base
+    s = eng.summary()
+    assert s["spec_drafted"] > 0
+    assert eng.cache.allocator.n_free == eng.cache.allocator.n_pages
+
+
+def test_greedy_spec_draft_model_byte_identical():
+    """Equivalence holds for ANY draft model — here one with different
+    random weights, so most drafts are wrong and rollback is exercised
+    constantly."""
+    model, params = _model()
+    draft_model, draft_params = _model(seed=3)
+    base, _ = _run(model, params, None)
+    out, eng = _run(model, params,
+                    SpecConfig(k=3, drafter="model", draft_model=draft_model,
+                               draft_params=draft_params,
+                               draft_page_size=8))
+    assert out == base
+    assert eng.cache.allocator.n_free == eng.cache.allocator.n_pages
+    d = eng.spec.drafter
+    assert d.cache.allocator.n_free == d.cache.allocator.n_pages, \
+        "draft cache leaked pages"
+
+
+def test_spec_repetitive_accepts_multiple_tokens_per_step():
+    model, params = _model()
+    prompts = [np.array([1, 2, 3] * 6, np.int32)]
+    out, eng = _run(model, params, SpecConfig(k=4, drafter="ngram"),
+                    prompts=prompts, new=16)
+    s = eng.summary()
+    assert s["tokens_per_decode_step"] > 1.0
+    assert s["spec_acceptance_rate"] > 0.0
+
+
+def test_spec_per_request_opt_out_and_mixed_batch():
+    model, params = _model()
+    eng = PagedServeEngine(model, params, max_batch=2, max_seq=64,
+                           page_size=8, spec=SpecConfig(k=3))
+    on = ServeRequest(prompt=np.array([1, 2, 3, 1, 2, 3], np.int32),
+                      max_new_tokens=8, rid=0)
+    off = ServeRequest(prompt=np.array([4, 5, 6, 4, 5, 6], np.int32),
+                       max_new_tokens=8, rid=1, spec=False)
+    eng.run([on, off])
+    assert on.done and off.done
+    base = PagedServeEngine(model, params, max_batch=2, max_seq=64,
+                            page_size=8)
+    b_on = ServeRequest(prompt=np.array([1, 2, 3, 1, 2, 3], np.int32),
+                        max_new_tokens=8, rid=0)
+    b_off = ServeRequest(prompt=np.array([4, 5, 6, 4, 5, 6], np.int32),
+                         max_new_tokens=8, rid=1)
+    base.run([b_on, b_off])
+    assert on.out_tokens == b_on.out_tokens
+    assert off.out_tokens == b_off.out_tokens
+
+
+def test_spec_engine_eos_and_max_tokens_respected():
+    model, params = _model()
+    out, eng = _run(model, params, SpecConfig(k=4), new=5)
+    assert all(len(o) == 5 for o in out)
+    # eos inside an accepted window truncates the emission: pick the
+    # (prompt, token) whose FIRST occurrence in the baseline stream is
+    # deepest, so acceptance windows can overrun it
+    base, _ = _run(model, params, None, new=12)
+    j, eos, pos = max(
+        ((j, t, o.index(t)) for j, o in enumerate(base) for t in set(o)),
+        key=lambda x: x[2])
+    eng = PagedServeEngine(model, params, max_batch=2, max_seq=64,
+                           page_size=8, prefill_chunk=8, eos_id=eos,
+                           spec=SpecConfig(k=4))
+    reqs = [ServeRequest(prompt=PROMPTS[j].copy(), max_new_tokens=12,
+                         rid=0)]
+    eng.run(reqs)
+    assert reqs[0].out_tokens == base[j][:pos + 1], "stop AT eos, not after"
+
+
+def test_spec_stochastic_run_completes_and_rolls_back():
+    model, params = _model()
+    eng = PagedServeEngine(model, params, max_batch=2, max_seq=64,
+                           page_size=8, spec=SpecConfig(k=3))
+    reqs = [ServeRequest(prompt=np.array([1, 2, 3] * 4, np.int32),
+                         max_new_tokens=10, rid=i,
+                         sampling=SamplingParams(temperature=0.8, top_k=20,
+                                                 top_p=0.95))
+            for i in range(3)]
+    eng.run(reqs)
+    assert all(r.done and len(r.out_tokens) == 10 for r in reqs)
+    assert eng.cache.allocator.n_free == eng.cache.allocator.n_pages
+
+
+def test_spec_engine_preempts_and_recovers_when_pool_exhausts():
+    model, params = _model()
+    eng = PagedServeEngine(model, params, max_batch=2, max_seq=64,
+                           page_size=4, n_pages=8, prefill_chunk=8,
+                           spec=SpecConfig(k=4))
+    reqs = [ServeRequest(prompt=np.arange(1, 9, dtype=np.int32),
+                         max_new_tokens=10, rid=i) for i in range(2)]
+    eng.run(reqs)
+    assert all(r.done and len(r.out_tokens) >= 10 for r in reqs)
+    assert eng.cache.allocator.n_free == 8
+
+
+def test_draft_model_drafter_cache_survives_lane_reuse():
+    """More requests than lanes: the drafter must detect lane reuse via
+    its prefix check/release and never serve one request's cache rows to
+    another."""
+    model, params = _model()
+    draft_model, draft_params = _model(seed=5)
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, 64, int(n)).astype(np.int32)
+               for n in [3, 11, 7, 20, 5]]
+    base, _ = _run(model, params, None, prompts=prompts, new=6)
+    out, eng = _run(model, params,
+                    SpecConfig(k=2, drafter="model", draft_model=draft_model,
+                               draft_params=draft_params,
+                               draft_page_size=8),
+                    prompts=prompts, new=6)
+    assert out == base
+
+
+# ----------------------------------------------------------------------------
+# telemetry accounting
+# ----------------------------------------------------------------------------
+def test_tokens_per_decode_step_is_one_without_spec():
+    model, params = _model()
+    _, eng = _run(model, params, None)
+    s = eng.summary()
+    assert s["tokens_per_decode_step"] == pytest.approx(1.0)
+    assert s["decode_steps"] <= s["steps"]
+
+
+def test_spec_decode_counts_all_emitted_tokens():
+    model, params = _model()
+    out, eng = _run(model, params, SpecConfig(k=4))
+    t = eng.telemetry
+    assert t.decode_tokens == sum(len(o) for o in out) - len(out), \
+        "every request's first token comes from prefill, the rest decode"
+    assert t.decode_tokens > t.decode_lane_steps * 0, "sanity"
+    s = eng.summary()
+    assert s["spec_accepted"] <= s["spec_drafted"]
+
+
+def test_draft_model_drafter_skips_overlong_history():
+    """A history longer than the drafter's own max_seq drafts nothing
+    (no KeyError from the catch-up path)."""
+    model, params = _model()
+    d = DraftModelDrafter(model, params, max_batch=1, max_seq=8,
+                          page_size=8)
+    prop = d.propose([np.arange(10, dtype=np.int32)], 2, [None])
+    assert prop.n[0] == 0
+
+
+def test_spec_all_optout_batch_uses_plain_decode_width():
+    """A spec engine whose every lane opted out must serve correctly
+    (and rides the 1-wide decode graph on those steps)."""
+    model, params = _model()
+    eng = PagedServeEngine(model, params, max_batch=2, max_seq=64,
+                           page_size=8, spec=SpecConfig(k=4))
+    reqs = [ServeRequest(prompt=p.copy(), max_new_tokens=8, rid=i,
+                         spec=False) for i, p in enumerate(PROMPTS[:2])]
+    eng.run(reqs)
+    base = PagedServeEngine(model, params, max_batch=2, max_seq=64,
+                            page_size=8)
+    breqs = [ServeRequest(prompt=p.copy(), max_new_tokens=8, rid=i)
+             for i, p in enumerate(PROMPTS[:2])]
+    base.run(breqs)
+    assert [r.out_tokens for r in reqs] == [r.out_tokens for r in breqs]
+    s = eng.summary()
+    assert s["spec_drafted"] == 0
+    assert s["tokens_per_decode_step"] == pytest.approx(1.0)
