@@ -3,8 +3,11 @@ import json
 import os
 import time
 
-RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results",
-                           "benchmarks")
+# REPRO_RESULTS_DIR lets CI write bench output somewhere other than the
+# checkout's committed baselines (tools/check_bench.py compares the two)
+RESULTS_DIR = os.environ.get(
+    "REPRO_RESULTS_DIR",
+    os.path.join(os.path.dirname(__file__), "..", "results", "benchmarks"))
 
 
 def save_json(name, obj):

@@ -27,6 +27,7 @@ import numpy as np
 
 sys.path.insert(0, os.path.dirname(__file__))
 from common import save_json  # noqa: E402
+from serve_bench import warm_engine  # noqa: E402
 
 from repro.core import EdgeCIMSimulator, SpecKnob  # noqa: E402
 from repro.core.hw import HWConfig  # noqa: E402
@@ -71,6 +72,7 @@ def run_one(model, params, spec_cfg, *, workload: str, n_requests: int,
     reqs = make_requests(workload, n_requests, tokens)
     eng = PagedServeEngine(model, params, max_batch=batch, max_seq=max_seq,
                            page_size=8, prefill_chunk=16, spec=spec_cfg)
+    warm_engine(eng, vocab=VOCAB)
     t0 = time.monotonic()
     eng.run(reqs)
     wall = time.monotonic() - t0

@@ -34,6 +34,9 @@ def main():
                          "half-width smoke draft of the same arch)")
     ap.add_argument("--spec-k", type=int, default=4,
                     help="draft window (tokens per verify step)")
+    ap.add_argument("--no-prefix-cache", action="store_true",
+                    help="disable radix-trie prefix sharing of prompt "
+                         "KV pages (enabled by default)")
     args = ap.parse_args()
 
     import jax
@@ -86,7 +89,7 @@ def main():
         eng = PagedServeEngine(
             model, params, max_batch=args.batch, max_seq=args.max_seq,
             page_size=args.page_size, n_pages=args.pages or None,
-            spec=spec_cfg)
+            spec=spec_cfg, prefix_cache=not args.no_prefix_cache)
         sampling = SamplingParams(temperature=args.temperature,
                                   top_k=args.top_k, top_p=args.top_p)
         reqs = [ServeRequest(prompt=p, max_new_tokens=args.tokens, rid=i,
@@ -102,13 +105,21 @@ def main():
             spec_msg = (f", spec[{args.spec} k={args.spec_k}] "
                         f"acc {acc_txt} "
                         f"{m['tokens_per_decode_step']:.2f} tok/step")
+        prefix_msg = ""
+        if not args.no_prefix_cache:
+            hr = m["prefix_hit_rate"]
+            prefix_msg = (f", prefix hit "
+                          f"{hr*100:.0f}%" if np.isfinite(hr) else
+                          ", prefix hit n/a")
+            prefix_msg += (f" ({int(m['prefill_tokens_skipped'])} prefill "
+                           f"tokens skipped)")
         print(f"[serve] {int(m['tokens'])} tokens, "
               f"{eng.throughput():.0f} tok/s decode, "
               f"ttft p50 {m['ttft_p50_s']*1e3:.0f} ms / "
               f"p99 {m['ttft_p99_s']*1e3:.0f} ms, "
               f"tpot p50 {m['tpot_p50_s']*1e3:.1f} ms, "
               f"kv occupancy peak {m['kv_occupancy_peak']*100:.0f}%"
-              f"{spec_msg} ({jax.default_backend()} backend)")
+              f"{spec_msg}{prefix_msg} ({jax.default_backend()} backend)")
     else:
         eng = ServeEngine(model, params, n_slots=args.batch,
                           max_seq=args.max_seq,

@@ -5,10 +5,12 @@ package.  `ServeEngine`/`Request` remain as the seed-API shim.
 """
 from .engine import PagedServeEngine, Request, ServeEngine
 from .paged_cache import BlockAllocator, OutOfPagesError, PagedKVCache
+from .prefix import PrefixIndex
 from .sampling import SamplingParams, sample_tokens
 from .scheduler import Scheduler, ServeRequest
 from .telemetry import Telemetry
 
-__all__ = ["PagedServeEngine", "Request", "ServeEngine", "BlockAllocator",
-           "OutOfPagesError", "PagedKVCache", "SamplingParams",
-           "sample_tokens", "Scheduler", "ServeRequest", "Telemetry"]
+__all__ = ["PagedServeEngine", "PrefixIndex", "Request", "ServeEngine",
+           "BlockAllocator", "OutOfPagesError", "PagedKVCache",
+           "SamplingParams", "sample_tokens", "Scheduler", "ServeRequest",
+           "Telemetry"]

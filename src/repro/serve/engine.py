@@ -5,7 +5,13 @@ growing KV cache — and the memory that cache wastes is the edge
 bottleneck.  v2 replaces the seed's fixed-slot engine + dense
 (n_slots, max_seq) cache with:
 
-  allocator  (paged_cache.BlockAllocator) — free-list over KV pages
+  allocator  (paged_cache.BlockAllocator) — refcounted free-list over
+                                            KV pages (shared via prefix
+                                            cache / fork, copy-on-write)
+  prefix     (prefix.PrefixIndex)         — radix trie over committed
+                                            prompt pages; admission
+                                            adopts matched prefixes so
+                                            prefill skips them
   scheduler  (scheduler.Scheduler)        — admission control, priority,
                                             deadlines, chunked prefill
   engine     (this file)                  — dynamic decode batch against
@@ -43,6 +49,7 @@ from repro.models import DecoderLM
 from repro.models.common import spec_structs
 
 from .paged_cache import PagedKVCache
+from .prefix import PrefixIndex
 from .sampling import SamplingParams, sample_tokens
 from .scheduler import Scheduler, ServeRequest
 from .telemetry import Telemetry
@@ -54,7 +61,8 @@ class PagedServeEngine:
                  page_size: int = 16, n_pages: Optional[int] = None,
                  prefill_chunk: int = 16, kv_dtype=jnp.bfloat16,
                  eos_id: Optional[int] = None, seed: int = 0,
-                 spec: Optional[Any] = None, clock=time.monotonic):
+                 spec: Optional[Any] = None, prefix_cache: bool = True,
+                 clock=time.monotonic):
         assert model.cfg.embed_inputs, "engine serves token-input models"
         assert model.supports_paged(), (
             f"family {model.cfg.family!r} has no paged-KV path; use the "
@@ -70,6 +78,13 @@ class PagedServeEngine:
             n_pages = max_batch * (max_seq // page_size)
         self.cache = PagedKVCache(model, n_pages, page_size, max_seq,
                                   kv_dtype)
+        # prefix sharing: committed prompt pages live in a radix trie and
+        # are adopted by later requests with the same prefix (see
+        # prefix.py); allocation pressure evicts trie-only pages LRU
+        self.prefix: Optional[PrefixIndex] = None
+        if prefix_cache:
+            self.prefix = PrefixIndex(self.cache.allocator, page_size)
+            self.cache.prefix_index = self.prefix
         self.scheduler = Scheduler(max_batch,
                                    prefill_chunk=min(prefill_chunk, max_seq))
         self.telemetry = Telemetry()
@@ -180,6 +195,8 @@ class PagedServeEngine:
             lane = self.lanes.index(None)
             self.lanes[lane] = req
             self.telemetry.admit(req.eid, now)
+            if self.prefix is not None:
+                self.telemetry.prefix(req.prefix_cached)
 
         prefill_s = self._prefill_phase()
         if self.spec is not None:
@@ -202,12 +219,21 @@ class PagedServeEngine:
         tokens = np.zeros((self.max_batch, s), np.int32)
         n_new = np.zeros(self.max_batch, np.int32)
         finishing = False
-        for i in pre:
+        for i in list(pre):
             req = self.lanes[i]
             q = self.scheduler.prefill_quota(req)
+            # prompt pages were allocated at admission, but a forked /
+            # resubmitted lane may start mid-page on a shared page:
+            # copy-on-write it before the chunk lands
+            if not self.cache.prepare_write(req.eid, q):
+                self._preempt(i)
+                pre.remove(i)
+                continue
             tokens[i, :q] = req.prompt[req.prefill_done:req.prefill_done + q]
             n_new[i] = q
             finishing |= q == req.prefill_remaining
+        if not pre:
+            return 0.0
         lengths = self._lengths()
         tables = self._tables()
 
@@ -230,6 +256,11 @@ class PagedServeEngine:
             self.cache.seqs[req.eid].length += q
             self.telemetry.prefill_tokens += q
             if req.prefill_remaining == 0:
+                if self.prefix is not None:
+                    # prompt fully materialized: commit its full pages
+                    # so later requests with the same prefix skip them
+                    self.prefix.insert(np.asarray(req.prompt, np.int32),
+                                       self.cache.seqs[req.eid].pages)
                 self._emit(req, int(nxt[i]), now, decode=False)
                 self._maybe_finish(i, now)
         return dt
@@ -251,7 +282,8 @@ class PagedServeEngine:
             req = self.lanes[i]
             # the token we feed is the last emitted one; this decode call
             # itself writes its KV row at position seqs[rid].length
-            if not self.cache.ensure_room(req.eid, 1):
+            # (prepare_write also copy-on-writes a shared tail page)
+            if not self.cache.prepare_write(req.eid, 1):
                 self._preempt(i)
                 continue
             ready.append(i)
@@ -330,9 +362,9 @@ class PagedServeEngine:
                             self.max_seq
                             - self.cache.seqs[req.eid].length - 1,
                             req.max_new_tokens - len(req.out_tokens) - 1))
-            while nd > 0 and not self.cache.ensure_room(req.eid, 1 + nd):
+            while nd > 0 and not self.cache.prepare_write(req.eid, 1 + nd):
                 nd -= 1
-            if nd == 0 and not self.cache.ensure_room(req.eid, 1):
+            if nd == 0 and not self.cache.prepare_write(req.eid, 1):
                 self._preempt(i)
                 continue
             tokens[i, 0] = req.out_tokens[-1]
@@ -383,7 +415,13 @@ class PagedServeEngine:
 
     # ------------------------------------------------------------------
     def summary(self) -> Dict[str, float]:
-        return self.telemetry.summary()
+        s = self.telemetry.summary()
+        s["cow_copies"] = float(self.cache.cow_copies)
+        s["kv_pages_shared"] = float(self.cache.pages_shared)
+        if self.prefix is not None:
+            s["prefix_pages_resident"] = float(self.prefix.n_pages)
+            s["prefix_pages_evicted"] = float(self.prefix.pages_evicted)
+        return s
 
     def throughput(self) -> float:
         """Decode-graph token rate (matches summary's

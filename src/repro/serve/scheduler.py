@@ -18,6 +18,7 @@ from typing import Callable, List, Optional
 
 import numpy as np
 
+from .paged_cache import OutOfPagesError
 from .sampling import SamplingParams
 
 
@@ -41,7 +42,8 @@ class ServeRequest:
     rejected: bool = False                   # never ran: deadline/too big
     truncated: bool = False                  # evicted mid-generation
     prefill_done: int = 0                    # prompt tokens consumed
-    t_enqueue: float = 0.0
+    prefix_cached: int = 0                   # prompt tokens adopted from
+    t_enqueue: float = 0.0                   #   the prefix cache at admit
     eid: int = -1                            # engine-assigned unique id
 
     @property
@@ -80,9 +82,12 @@ class Scheduler:
     # -- admission ------------------------------------------------------
     def admit(self, now: float, n_running: int, cache) -> List[ServeRequest]:
         """Pop admissible requests: respects the lane budget and the
-        allocator (prompt pages + 1 growth page must be free).  Expired
-        requests are marked rejected and dropped.  Returns newly admitted
-        requests with their pages already allocated."""
+        allocator (fresh prompt pages + 1 growth page must be free or
+        reclaimable from the prefix cache).  Prompt prefixes resident in
+        the prefix index are adopted by refcount, so chunked prefill
+        starts at the first unmatched token.  Expired requests are
+        marked rejected and dropped.  Returns newly admitted requests
+        with their pages already allocated."""
         admitted: List[ServeRequest] = []
         deferred: List = []
         max_tokens = cache.max_pages * cache.page_size
@@ -104,13 +109,22 @@ class Scheduler:
                     req.rejected = True
                 req.done = True
                 continue
-            if not cache.allocator.can_alloc(need):
+            match = cache.probe_admit(req.prompt_len, req.prompt)
+            if match is None:
                 # keep it queued; lower-priority requests behind it may
                 # still fit, but skipping ahead would starve this one —
                 # stop admitting (head-of-line, by design)
                 deferred.append((prio, abs_dl, order, req))
                 break
-            cache.admit(req.eid, req.prompt_len)
+            try:
+                seq = cache.admit(req.eid, req.prompt_len, match=match)
+            except OutOfPagesError:
+                # the probe's evictable count was optimistic (e.g. a
+                # refcount-1 interior trie node shielded by shared
+                # children): wait, head-of-line, like any full pool
+                deferred.append((prio, abs_dl, order, req))
+                break
+            req.prefill_done = req.prefix_cached = seq.length
             admitted.append(req)
         for item in deferred:
             heapq.heappush(self._heap, item)

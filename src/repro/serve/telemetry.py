@@ -71,6 +71,9 @@ class Telemetry:
         self.prefill_tokens = 0
         self.spec_drafted = 0        # draft tokens sent to verification
         self.spec_accepted = 0       # draft tokens the target accepted
+        self.prefix_lookups = 0      # admissions probing the prefix cache
+        self.prefix_hits = 0         # admissions that adopted >= 1 page
+        self.prefill_tokens_skipped = 0   # prompt tokens never prefilled
         self.t_start: Optional[float] = None
         self.t_end: Optional[float] = None
 
@@ -121,6 +124,14 @@ class Telemetry:
         self.spec_drafted += drafted
         self.spec_accepted += accepted
 
+    def prefix(self, cached_tokens: int):
+        """One admission's prefix-cache outcome: `cached_tokens` prompt
+        tokens were adopted from resident pages (0 = miss)."""
+        self.prefix_lookups += 1
+        if cached_tokens > 0:
+            self.prefix_hits += 1
+            self.prefill_tokens_skipped += cached_tokens
+
     # -- rollup ---------------------------------------------------------
     def summary(self) -> Dict[str, float]:
         ttft = [t.ttft_s for t in self.traces.values()
@@ -148,6 +159,13 @@ class Telemetry:
             "spec_accepted": float(self.spec_accepted),
             "spec_acceptance_rate": (self.spec_accepted / self.spec_drafted
                                      if self.spec_drafted else float("nan")),
+            "prefix_lookups": float(self.prefix_lookups),
+            "prefix_hits": float(self.prefix_hits),
+            "prefix_hit_rate": (self.prefix_hits / self.prefix_lookups
+                                if self.prefix_lookups else float("nan")),
+            "prefill_tokens_skipped": float(self.prefill_tokens_skipped),
+            "ttft_mean_s": (float(np.mean(ttft)) if ttft
+                            else float("nan")),
             "ttft_p50_s": _pct(ttft, 50), "ttft_p99_s": _pct(ttft, 99),
             "tpot_p50_s": _pct(tpot, 50), "tpot_p99_s": _pct(tpot, 99),
             "queue_p50_s": _pct(queue, 50), "queue_p99_s": _pct(queue, 99),

@@ -1,0 +1,118 @@
+"""The CI benchmark regression gate (tools/check_bench.py): direction
+and tolerance semantics that bench-smoke relies on."""
+import importlib.util
+import os
+
+import pytest
+
+_spec = importlib.util.spec_from_file_location(
+    "check_bench", os.path.join(os.path.dirname(__file__), "..", "tools",
+                                "check_bench.py"))
+check_bench = importlib.util.module_from_spec(_spec)
+_spec.loader.exec_module(check_bench)
+
+TOLS = {"quality": 0.15, "timing": 1.0}
+
+
+def _row(**kw):
+    base = {"mix": "short", "batch": 2}
+    base.update(kw)
+    return base
+
+
+@pytest.mark.bench
+def test_identical_runs_pass():
+    rows = [_row(ttft_p50_s=0.1, tokens_per_s_decode=40.0,
+                 kv_savings=0.7)]
+    assert check_bench.check_file("b", rows, rows, TOLS) == []
+
+
+@pytest.mark.bench
+def test_timing_regression_beyond_tolerance_fails():
+    base = [_row(ttft_p50_s=0.1)]
+    ok = [_row(ttft_p50_s=0.19)]          # < 2x: inside timing tol
+    bad = [_row(ttft_p50_s=0.21)]         # > 2x
+    assert check_bench.check_file("b", base, ok, TOLS) == []
+    fails = check_bench.check_file("b", base, bad, TOLS)
+    assert len(fails) == 1 and "ttft_p50_s" in fails[0]
+
+
+@pytest.mark.bench
+def test_higher_is_better_direction():
+    base = [_row(tokens_per_s_decode=40.0, acceptance_rate=0.8)]
+    faster = [_row(tokens_per_s_decode=400.0, acceptance_rate=1.0)]
+    assert check_bench.check_file("b", base, faster, TOLS) == [], \
+        "improvement is never a regression"
+    worse = [_row(tokens_per_s_decode=40.0, acceptance_rate=0.5)]
+    fails = check_bench.check_file("b", base, worse, TOLS)
+    assert len(fails) == 1 and "acceptance_rate" in fails[0]
+
+
+@pytest.mark.bench
+def test_higher_better_timing_metric_can_fail_at_large_tol():
+    """The ratio band must gate throughput collapses even at loose
+    timing tolerance (an additive band never could for tol >= 1)."""
+    tols = {"quality": 0.15, "timing": 3.0}
+    base = [_row(tokens_per_s_decode=40.0, ttft_speedup=1.8)]
+    collapsed = [_row(tokens_per_s_decode=1.0, ttft_speedup=0.1)]
+    fails = check_bench.check_file("b", base, collapsed, tols)
+    assert len(fails) == 2
+    barely = [_row(tokens_per_s_decode=11.0, ttft_speedup=0.5)]
+    assert check_bench.check_file("b", base, barely, tols) == [], \
+        "within b/(1+tol) still passes"
+
+
+@pytest.mark.bench
+def test_missing_row_and_metric_fail():
+    base = [_row(mix="short", ttft_p50_s=0.1),
+            _row(mix="mixed", ttft_p50_s=0.1)]
+    cur = [_row(mix="short")]
+    fails = check_bench.check_file("b", base, cur, TOLS)
+    assert any("row missing" in f for f in fails)
+    assert any("disappeared" in f for f in fails)
+
+
+@pytest.mark.bench
+def test_nan_baseline_and_unknown_metrics_ignored():
+    base = [_row(acceptance_rate=float("nan"), n_pages=8,
+                 some_counter=3.0)]
+    cur = [_row(acceptance_rate=0.0, n_pages=99, some_counter=0.0)]
+    assert check_bench.check_file("b", base, cur, TOLS) == []
+
+
+@pytest.mark.bench
+def test_metric_degrading_to_nan_fails():
+    """A measurable baseline turning NaN (e.g. acceptance rate with
+    zero drafts) is a regression, not a skip."""
+    base = [_row(acceptance_rate=0.9)]
+    cur = [_row(acceptance_rate=float("nan"))]
+    fails = check_bench.check_file("b", base, cur, TOLS)
+    assert len(fails) == 1 and "NaN" in fails[0]
+
+
+@pytest.mark.bench
+def test_main_fails_when_current_json_missing(tmp_path):
+    """A committed baseline whose bench produced no JSON this run must
+    fail the gate, not silently drop out of the comparison set."""
+    import json
+    import sys
+    baseline, current = tmp_path / "base", tmp_path / "cur"
+    baseline.mkdir(), current.mkdir()
+    (baseline / "serve_bench.json").write_text(
+        json.dumps([_row(ttft_p50_s=0.1)]))
+    argv = ["check_bench", "--baseline", str(baseline),
+            "--current", str(current)]
+    old = sys.argv
+    try:
+        sys.argv = argv
+        assert check_bench.main() == 1
+    finally:
+        sys.argv = old
+
+
+@pytest.mark.bench
+def test_bool_quality_metric_gates():
+    base = [_row(outputs_byte_identical=True)]
+    cur = [_row(outputs_byte_identical=False)]
+    fails = check_bench.check_file("b", base, cur, TOLS)
+    assert len(fails) == 1 and "outputs_byte_identical" in fails[0]

@@ -22,7 +22,12 @@ def test_allocator_basic_invariants():
     freed = a.free(1)
     assert sorted(freed) == sorted(p1), "free returns exactly owner's pages"
     assert a.n_free == 6
-    assert a.free(1) == [], "double free is a no-op"
+    with pytest.raises(KeyError):
+        a.free(1)               # double free of an owner is an error
+    with pytest.raises(KeyError):
+        a.free(99)              # unknown owner is an error, not a no-op
+    with pytest.raises(KeyError):
+        a.free_pages(99, p2[:1])
 
 
 def test_allocator_exhaustion_raises_and_recovers():

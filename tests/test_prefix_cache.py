@@ -1,0 +1,477 @@
+"""Prefix sharing / copy-on-write: allocator refcounts, the radix-trie
+prefix index, fork + COW correctness, and engine-level prefix reuse.
+
+Hypothesis is not in the container's package set, so the COW invariants
+are driven with seeded random op sequences (same style as
+test_paged_cache.py).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import DecoderLM, ModelConfig, init_params
+from repro.serve import (BlockAllocator, PagedKVCache, PagedServeEngine,
+                         PrefixIndex, ServeRequest)
+from repro.serve.prefix import PREFIX_OWNER
+
+
+def _cache(n_pages=16, page_size=4, max_seq=32):
+    cfg = ModelConfig(name="s", family="dense", n_layers=2, d_model=32,
+                      n_heads=2, n_kv_heads=2, d_ff=64, vocab=64,
+                      head_dim=16, dtype="float32", remat=False)
+    return PagedKVCache(DecoderLM(cfg), n_pages, page_size, max_seq,
+                        kv_dtype=jnp.float32)
+
+
+def _model(seed=0):
+    cfg = ModelConfig(name="s", family="dense", n_layers=2, d_model=32,
+                      n_heads=2, n_kv_heads=2, d_ff=64, vocab=64,
+                      head_dim=16, dtype="float32", remat=False)
+    model = DecoderLM(cfg)
+    params = init_params(model.param_specs(), jax.random.PRNGKey(seed),
+                         dtype_override=jnp.float32)
+    return model, params
+
+
+# ----------------------------------------------------------------------------
+# allocator refcounts
+# ----------------------------------------------------------------------------
+def test_share_increfs_and_free_decrefs():
+    a = BlockAllocator(8)
+    pages = a.alloc(owner=1, n=3)
+    a.share(owner=2, pages=pages[:2])
+    assert [a.refcount(p) for p in pages] == [2, 2, 1]
+    assert a.n_free == 5, "sharing allocates nothing"
+    assert a.free(1) == [pages[2]], "only the unshared page is collected"
+    assert [a.refcount(p) for p in pages[:2]] == [1, 1]
+    assert sorted(a.free(2)) == sorted(pages[:2])
+    assert a.n_free == 8
+
+
+def test_share_of_free_page_is_an_error():
+    a = BlockAllocator(4)
+    with pytest.raises(ValueError):
+        a.share(owner=1, pages=[0])
+
+
+def test_free_pages_decref_collects_only_last_owner():
+    a = BlockAllocator(4)
+    (p,) = a.alloc(owner=1, n=1)
+    a.share(owner=2, pages=[p])
+    assert a.free_pages(1, [p]) == [], "other owner still holds it"
+    assert a.refcount(p) == 1 and a.n_free == 3
+    assert a.free_pages(2, [p]) == [p]
+    assert a.refcount(p) == 0 and a.n_free == 4
+
+
+def test_shared_random_ops_refcounts_never_negative_pages_conserved():
+    """alloc/share/free/free_pages interleavings against a shadow
+    ledger: refcount == number of holder entries, never negative, and
+    n_free + unique allocated == n_pages throughout."""
+    rng = np.random.default_rng(11)
+    for trial in range(10):
+        n_pages = int(rng.integers(4, 32))
+        a = BlockAllocator(n_pages)
+        held = {}                       # owner -> list of pages
+        for _ in range(300):
+            op = rng.random()
+            if op < 0.4 and a.n_free > 0:
+                owner = int(rng.integers(0, 6))
+                n = int(rng.integers(1, a.n_free + 1))
+                held.setdefault(owner, []).extend(a.alloc(owner, n))
+            elif op < 0.6 and held:
+                src = int(rng.choice(list(held)))
+                owner = int(rng.integers(0, 6))
+                take = [p for p in held[src]
+                        if p not in held.get(owner, [])]
+                if take:
+                    share = list(rng.choice(
+                        take, size=int(rng.integers(1, len(take) + 1)),
+                        replace=False))
+                    a.share(owner, share)
+                    held.setdefault(owner, []).extend(share)
+            elif op < 0.8 and held:
+                owner = int(rng.choice(list(held)))
+                got = a.free(owner)
+                mine = held.pop(owner)
+                others = {p for ps in held.values() for p in ps}
+                assert sorted(got) == sorted(
+                    [p for p in set(mine) if p not in others])
+            elif held:
+                owner = int(rng.choice(list(held)))
+                k = int(rng.integers(1, len(held[owner]) + 1))
+                drop = list(rng.choice(held[owner], size=k, replace=False))
+                # choice on a list with duplicates can repeat a page;
+                # free exactly the multiset we remove from the ledger
+                for p in drop:
+                    held[owner].remove(p)
+                a.free_pages(owner, drop)
+                if not held[owner]:
+                    held.pop(owner)
+            allocated = {p for ps in held.values() for p in ps}
+            assert a.n_free + len(allocated) == n_pages, "pages leaked"
+            for p in allocated:
+                want = sum(ps.count(p) for ps in held.values())
+                assert a.refcount(p) == want, "refcount drifted"
+                assert a.refcount(p) > 0
+
+
+# ----------------------------------------------------------------------------
+# prefix index (radix trie)
+# ----------------------------------------------------------------------------
+def test_prefix_index_match_insert_and_cap():
+    a = BlockAllocator(16)
+    idx = PrefixIndex(a, page_size=4)
+    prompt = np.arange(12, dtype=np.int32)
+    pages = a.alloc(owner=0, n=3)
+    assert idx.insert(prompt, pages) == 3
+    assert [a.refcount(p) for p in pages] == [2, 2, 2]
+
+    # full match, capped below the prompt tail
+    got_tokens, got_pages = idx.match(prompt)
+    assert got_tokens == 8 and got_pages == pages[:2], \
+        "match never covers the last token (prefill must emit logits)"
+    long = np.concatenate([prompt, np.arange(12, 20, dtype=np.int32)])
+    assert idx.match(long) == (12, pages)
+
+    # divergence mid-way matches only the shared prefix
+    fork = prompt.copy()
+    fork[5] = 63
+    t, p = idx.match(np.concatenate([fork, [1]]))
+    assert t == 4 and p == pages[:1]
+    # a prefix shorter than one full page never matches
+    assert idx.match(np.arange(4, dtype=np.int32)) == (0, [])
+
+
+def test_prefix_index_same_tokens_different_parent_do_not_collide():
+    """KV depends on the whole causal prefix: page tokens [4..7] under
+    two different first pages must resolve to different pages."""
+    a = BlockAllocator(16)
+    idx = PrefixIndex(a, page_size=4)
+    tail = np.arange(4, 8, dtype=np.int32)
+    p_a = a.alloc(owner=0, n=2)
+    p_b = a.alloc(owner=1, n=2)
+    idx.insert(np.concatenate([np.zeros(4, np.int32), tail]), p_a)
+    idx.insert(np.concatenate([np.ones(4, np.int32), tail]), p_b)
+    q = np.concatenate([np.ones(4, np.int32), tail, [9]])
+    assert idx.match(q) == (8, p_b)
+
+
+def test_prefix_index_insert_existing_node_keeps_original_page():
+    a = BlockAllocator(8)
+    idx = PrefixIndex(a, page_size=4)
+    prompt = np.arange(8, dtype=np.int32)
+    first = a.alloc(owner=0, n=2)
+    dup = a.alloc(owner=1, n=2)
+    assert idx.insert(prompt, first) == 2
+    assert idx.insert(prompt, dup) == 0, "duplicate content not adopted"
+    assert idx.match(np.concatenate([prompt, [1]]))[1] == first
+    assert [a.refcount(p) for p in dup] == [1, 1], "dup stays seq-owned"
+
+
+def test_prefix_index_lru_eviction_skips_shared_pages():
+    a = BlockAllocator(16)
+    idx = PrefixIndex(a, page_size=4)
+    p1 = a.alloc(owner=0, n=1)
+    p2 = a.alloc(owner=1, n=1)
+    idx.insert(np.arange(4, dtype=np.int32), p1)
+    idx.insert(np.arange(10, 14, dtype=np.int32), p2)
+    a.free(0)
+    a.free(1)                   # both pages now trie-only (refcount 1)
+    assert idx.n_pages == 2 and idx.n_evictable() == 2
+
+    # touch p1: p2 becomes LRU and is evicted first
+    idx.match(np.arange(5, dtype=np.int32))
+    assert idx.evict(1) == 1
+    assert idx.match(np.arange(10, 15, dtype=np.int32)) == (0, [])
+    assert idx.match(np.arange(5, dtype=np.int32)) == (4, p1)
+
+    # a page a live sequence shares is never pulled out from under it
+    a.share(owner=7, pages=p1)
+    assert idx.evict(1) == 0 and idx.n_pages == 1
+    a.free(7)
+    assert idx.evict(1) == 1 and idx.n_pages == 0
+    assert a.n_free == 16
+
+
+def test_prefix_index_evicts_leaf_first():
+    a = BlockAllocator(8)
+    idx = PrefixIndex(a, page_size=2)
+    pages = a.alloc(owner=0, n=3)
+    idx.insert(np.arange(6, dtype=np.int32), pages)
+    a.free(0)
+    assert idx.evict(1) == 1
+    # the deepest page went first; the 4-token prefix still matches
+    assert idx.match(np.arange(7, dtype=np.int32)) == (4, pages[:2])
+
+
+# ----------------------------------------------------------------------------
+# fork + copy-on-write
+# ----------------------------------------------------------------------------
+def _stamp_pages(c, pages, base):
+    """Give each page's pool rows a distinct constant so copies are
+    checkable."""
+    for j, p in enumerate(pages):
+        c.pools = jax.tree_util.tree_map(
+            lambda leaf, val=float(base + j), pg=p:
+                leaf.at[:, pg].set(val), c.pools)
+
+
+def _page_val(c, page):
+    leaf = jax.tree_util.tree_leaves(c.pools)[0]
+    return float(np.asarray(leaf[0, page]).ravel()[0])
+
+
+def test_fork_shares_pages_and_cow_on_unaligned_write():
+    c = _cache(n_pages=8, page_size=4)
+    a = c.admit(rid=0, prompt_len=6)            # 2 pages, tail half-full
+    a.length = 6
+    _stamp_pages(c, a.pages, base=10)
+
+    b = c.fork(new_rid=1, src_rid=0, prefix_len=6)
+    assert b.pages == a.pages and b.length == 6
+    assert [c.allocator.refcount(p) for p in a.pages] == [2, 2]
+    assert c.pages_shared == 2
+
+    # B's next write lands inside shared page 1 -> copy-on-write
+    assert c.prepare_write(1, 1)
+    assert c.cow_copies == 1
+    assert b.pages[0] == a.pages[0], "full prefix page stays shared"
+    assert b.pages[1] != a.pages[1], "tail page was copied"
+    assert _page_val(c, b.pages[1]) == _page_val(c, a.pages[1]), \
+        "copy carries the original rows"
+    assert [c.allocator.refcount(p) for p in a.pages] == [2, 1]
+    assert c.allocator.refcount(b.pages[1]) == 1
+
+    # A keeps writing its own tail page without further copies
+    assert c.prepare_write(0, 1) and c.cow_copies == 1
+    c.release(0)
+    c.release(1)
+    assert c.allocator.n_free == 8
+
+
+def test_fork_aligned_prefix_never_copies():
+    c = _cache(n_pages=8, page_size=4)
+    a = c.admit(rid=0, prompt_len=8)
+    a.length = 8
+    b = c.fork(new_rid=1, src_rid=0, prefix_len=8)
+    assert c.prepare_write(1, 3)                # writes start a new page
+    assert c.cow_copies == 0
+    assert b.pages[:2] == a.pages[:2] and len(b.pages) == 3
+
+
+def test_trim_decrefs_shared_pages_instead_of_freeing():
+    """Spec-decode rollback on a forked sequence must never free a page
+    the source still reads."""
+    c = _cache(n_pages=8, page_size=4)
+    a = c.admit(rid=0, prompt_len=8)
+    a.length = 8
+    b = c.fork(new_rid=1, src_rid=0, prefix_len=8)
+    assert c.ensure_room(1, 5)                  # b grows its own page 2
+    b.length = 13
+    c.trim(1, 3)                                # roll back INTO the share
+    assert b.pages == [a.pages[0]]
+    assert [c.allocator.refcount(p) for p in a.pages[:2]] == [2, 1], \
+        "trim decrefs the shared page; source still holds it"
+    assert a.length == 8, "source untouched"
+    c.release(1)
+    assert [c.allocator.refcount(p) for p in a.pages] == [1, 1]
+    c.release(0)
+    assert c.allocator.n_free == 8
+
+
+def test_cow_fork_trim_evict_interleavings_conserve_pages():
+    """Randomized fork/append/trim/evict/insert/release sequences on the
+    real cache + trie: refcounts match the holder ledger, total pages
+    are conserved, capacity covers length, block tables stay valid."""
+    rng = np.random.default_rng(3)
+    for trial in range(6):
+        page_size = int(rng.choice([2, 4]))
+        n_pages = int(rng.integers(8, 20))
+        c = _cache(n_pages=n_pages, page_size=page_size, max_seq=32)
+        idx = PrefixIndex(c.allocator, page_size)
+        c.prefix_index = idx
+        live, prompts, next_rid = {}, {}, 0
+        for _ in range(150):
+            op = rng.random()
+            if op < 0.25 or not live:
+                plen = int(rng.integers(1, 3 * page_size))
+                if c.can_admit(plen):
+                    prompt = rng.integers(0, 64, plen).astype(np.int32)
+                    try:
+                        seq = c.admit(next_rid, plen, prompt=prompt)
+                    except Exception:
+                        continue
+                    seq.length = plen
+                    live[next_rid] = seq
+                    prompts[next_rid] = prompt
+                    next_rid += 1
+            elif op < 0.4 and live:
+                src = int(rng.choice(list(live)))
+                cut = int(rng.integers(0, live[src].length + 1))
+                if c.allocator.can_alloc(1):   # room for a later COW
+                    seq = c.fork(next_rid, src, cut)
+                    live[next_rid] = seq
+                    prompts[next_rid] = prompts[src][:cut]
+                    next_rid += 1
+            elif op < 0.65 and live:
+                rid = int(rng.choice(list(live)))
+                seq = live[rid]
+                window = int(rng.integers(1, 5))
+                if c.prepare_write(rid, window):
+                    seq.length += window
+                    accepted = int(rng.integers(0, window + 1))
+                    c.trim(rid, seq.length - (window - accepted))
+            elif op < 0.8 and live:
+                rid = int(rng.choice(list(live)))
+                seq = live[rid]
+                n_full = min(len(prompts[rid]) // page_size,
+                             len(seq.pages))
+                if n_full:
+                    idx.insert(prompts[rid][:n_full * page_size],
+                               seq.pages[:n_full])
+                c.release(rid)
+                live.pop(rid)
+                prompts.pop(rid)
+            else:
+                idx.evict(int(rng.integers(1, 4)))
+
+            # invariants ------------------------------------------------
+            holders = {}
+            for rid, seq in live.items():
+                for p in seq.pages:
+                    holders[p] = holders.get(p, 0) + 1
+            for node in idx._walk():
+                holders[node.page] = holders.get(node.page, 0) + 1
+            assert c.allocator.n_free + len(holders) == n_pages, "leak"
+            for p, want in holders.items():
+                assert c.allocator.refcount(p) == want
+                assert c.allocator.refcount(p) > 0
+            for rid, seq in live.items():
+                assert seq.capacity(page_size) >= seq.length
+                tab = c.table_for(rid)
+                assert list(tab[:len(seq.pages)]) == seq.pages
+        for rid in list(live):
+            c.release(rid)
+        idx.evict(n_pages)
+        assert c.allocator.n_free == n_pages, "drain leaves pages behind"
+
+
+# ----------------------------------------------------------------------------
+# byte-identical decode through shared and copied pages
+# ----------------------------------------------------------------------------
+def test_forked_sequence_decode_is_byte_identical_to_unshared():
+    """A fork reading shared pages (and writing through COW) must
+    produce bit-for-bit the logits of an unshared sequence fed the
+    same tokens."""
+    model, params = _model()
+    toks = np.array([5, 9, 3, 17, 2, 41], np.int32)   # 6 tokens, ps 4
+
+    def prefill(c, rid, tokens):
+        seq = c.admit(rid, len(tokens), prompt=None)
+        tab = jnp.asarray(c.table_for(rid)[None, :])
+        lg, c.pools = model.paged_step(
+            params, c.pools, {"tokens": jnp.asarray(tokens[None, :])},
+            tab, jnp.asarray([seq.length], jnp.int32),
+            jnp.asarray([len(tokens)], jnp.int32))
+        seq.length += len(tokens)
+        return lg
+
+    def decode(c, rid, tok):
+        assert c.prepare_write(rid, 1)
+        seq = c.seqs[rid]
+        tab = jnp.asarray(c.table_for(rid)[None, :])
+        lg, c.pools = model.paged_step(
+            params, c.pools, {"tokens": jnp.asarray([[tok]])}, tab,
+            jnp.asarray([seq.length], jnp.int32),
+            jnp.asarray([1], jnp.int32))
+        seq.length += 1
+        return np.asarray(lg[0, 0])
+
+    c = _cache(n_pages=12, page_size=4)
+    prefill(c, 0, toks)
+    c.fork(new_rid=1, src_rid=0, prefix_len=6)   # unaligned: COW on write
+    forked = [decode(c, 1, 7), decode(c, 1, 22)]
+    assert c.cow_copies == 1
+
+    c2 = _cache(n_pages=12, page_size=4)
+    prefill(c2, 0, toks)
+    plain = [decode(c2, 0, 7), decode(c2, 0, 22)]
+
+    for f, p in zip(forked, plain):
+        np.testing.assert_array_equal(f, p)
+    # the source is unperturbed by the fork's writes
+    src_after = decode(c, 0, 7)
+    np.testing.assert_array_equal(src_after, plain[0])
+
+
+# ----------------------------------------------------------------------------
+# engine end-to-end
+# ----------------------------------------------------------------------------
+def test_engine_prefix_reuse_skips_prefill_and_outputs_match():
+    model, params = _model()
+    prompt = np.arange(1, 17, dtype=np.int32)    # 16 tokens, ps 4
+
+    def run(prefix_cache):
+        eng = PagedServeEngine(model, params, max_batch=1, max_seq=64,
+                               page_size=4, prefill_chunk=4,
+                               prefix_cache=prefix_cache)
+        reqs = [ServeRequest(prompt=prompt.copy(), max_new_tokens=6,
+                             rid=i) for i in range(2)]
+        eng.run(reqs)
+        return reqs, eng.summary()
+
+    base, mb = run(prefix_cache=False)
+    shared, ms = run(prefix_cache=True)
+    for b, s in zip(base, shared):
+        assert b.out_tokens == s.out_tokens, \
+            "prefix adoption must not change greedy output"
+    # request 2 matched 3 full pages (12 of 16 tokens; the last token is
+    # always recomputed, capping the match at 12)
+    assert ms["prefill_tokens_skipped"] == 12
+    assert ms["prefix_hit_rate"] == pytest.approx(0.5)
+    assert ms["prefill_tokens"] == mb["prefill_tokens"] - 12
+    assert mb["prefill_tokens_skipped"] == 0
+
+
+def test_engine_prefix_eviction_under_pressure_keeps_serving():
+    """Distinct prompts cycling through a small pool force trie
+    eviction on the admission path; everything completes and no page is
+    lost."""
+    model, params = _model()
+    rng = np.random.default_rng(0)
+    eng = PagedServeEngine(model, params, max_batch=2, max_seq=32,
+                           page_size=4, n_pages=10, prefill_chunk=8)
+    reqs = [ServeRequest(prompt=rng.integers(0, 64, 8).astype(np.int32),
+                         max_new_tokens=4, rid=i) for i in range(6)]
+    eng.run(reqs)
+    assert all(r.done and len(r.out_tokens) == 4 for r in reqs)
+    assert eng.prefix.pages_evicted > 0, "pressure must evict"
+    assert eng.cache.n_free_or_cached() == 10
+
+
+def test_engine_spec_decode_with_prefix_sharing_byte_identical():
+    """Spec-decode rollback over adopted prefix pages: trim must decref
+    shared pages, never free them, and greedy output stays identical to
+    the plain engine."""
+    from repro.spec import SpecConfig
+    model, params = _model()
+    prompt = np.array([1, 2, 3, 4] * 4, np.int32)   # draftable, 16 toks
+
+    def run(spec, prefix_cache):
+        eng = PagedServeEngine(model, params, max_batch=1, max_seq=64,
+                               page_size=4, prefill_chunk=8,
+                               spec=spec, prefix_cache=prefix_cache)
+        reqs = [ServeRequest(prompt=prompt.copy(), max_new_tokens=8,
+                             rid=i) for i in range(2)]
+        eng.run(reqs)
+        return [r.out_tokens for r in reqs], eng
+
+    base, _ = run(None, prefix_cache=False)
+    out, eng = run(SpecConfig(k=3, drafter="ngram"), prefix_cache=True)
+    assert out == base
+    m = eng.summary()
+    assert m["prefill_tokens_skipped"] > 0
+    assert m["spec_drafted"] > 0
+    assert eng.cache.n_free_or_cached() == eng.cache.allocator.n_pages

@@ -182,7 +182,7 @@ def test_greedy_spec_ngram_byte_identical():
     assert out == base
     s = eng.summary()
     assert s["spec_drafted"] > 0
-    assert eng.cache.allocator.n_free == eng.cache.allocator.n_pages
+    assert eng.cache.n_free_or_cached() == eng.cache.allocator.n_pages
 
 
 def test_greedy_spec_draft_model_byte_identical():
@@ -197,7 +197,7 @@ def test_greedy_spec_draft_model_byte_identical():
                                draft_params=draft_params,
                                draft_page_size=8))
     assert out == base
-    assert eng.cache.allocator.n_free == eng.cache.allocator.n_pages
+    assert eng.cache.n_free_or_cached() == eng.cache.allocator.n_pages
     d = eng.spec.drafter
     assert d.cache.allocator.n_free == d.cache.allocator.n_pages, \
         "draft cache leaked pages"
@@ -265,7 +265,7 @@ def test_spec_stochastic_run_completes_and_rolls_back():
             for i in range(3)]
     eng.run(reqs)
     assert all(r.done and len(r.out_tokens) == 10 for r in reqs)
-    assert eng.cache.allocator.n_free == eng.cache.allocator.n_pages
+    assert eng.cache.n_free_or_cached() == eng.cache.allocator.n_pages
 
 
 def test_spec_engine_preempts_and_recovers_when_pool_exhausts():
@@ -277,7 +277,7 @@ def test_spec_engine_preempts_and_recovers_when_pool_exhausts():
                          max_new_tokens=10, rid=i) for i in range(2)]
     eng.run(reqs)
     assert all(r.done and len(r.out_tokens) >= 10 for r in reqs)
-    assert eng.cache.allocator.n_free == 8
+    assert eng.cache.n_free_or_cached() == 8
 
 
 def test_draft_model_drafter_cache_survives_lane_reuse():

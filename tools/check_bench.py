@@ -1,0 +1,188 @@
+"""CI benchmark regression gate.
+
+Compares bench-smoke JSON output against the committed baselines in
+`results/benchmarks/` and fails (exit 1) when a metric regresses beyond
+tolerance — so a TTFT/TPOT, tokens/step, acceptance-rate, or
+prefix-cache regression can no longer merge silently.
+
+Rows are matched on their identity fields (workload/drafter/k for
+spec_bench, batch/mix/mode for serve_bench); metrics are classified as
+
+  quality  deterministic given seed + config (acceptance rate, tokens
+           per step, KV savings, prefill tokens skipped, hit rate) —
+           tight tolerance, and a DROPPED row is itself a failure
+  timing   machine-dependent (TTFT, TPOT, tokens/s, wall) — loose
+           tolerance sized for noisy shared CI runners
+
+Usage:
+  python tools/check_bench.py --current /tmp/bench-out \
+      [--baseline results/benchmarks] [--timing-tol 1.0]
+      [--quality-tol 0.15] [--update]
+
+`--update` rewrites the baselines from --current instead of checking
+(run locally after an intentional perf change, then commit).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import os
+import shutil
+import sys
+from typing import Dict, List, Tuple
+
+# identity fields: define WHICH row we compare, never gated themselves
+IDENTITY = ("mode", "mix", "workload", "drafter", "k", "batch",
+            "n_requests", "prefix_len")
+
+# (substring, direction, class); first match wins.  direction "higher"
+# means bigger is better.  Metrics matching nothing are informational.
+METRIC_RULES: List[Tuple[str, str, str]] = [
+    ("outputs_byte_identical", "higher", "quality"),
+    ("acceptance_rate", "higher", "quality"),
+    ("tokens_per_step", "higher", "quality"),
+    ("kv_savings", "higher", "quality"),
+    ("prefill_tokens_skipped", "higher", "quality"),
+    ("prefix_hit_rate", "higher", "quality"),
+    ("sim_speedup", "higher", "quality"),
+    ("ttft_speedup", "higher", "timing"),
+    ("tokens_per_s", "higher", "timing"),
+    ("ttft", "lower", "timing"),
+    ("tpot", "lower", "timing"),
+    ("queue", "lower", "timing"),
+    ("wall_s", "lower", "timing"),
+]
+
+
+def classify(name: str):
+    for pat, direction, klass in METRIC_RULES:
+        if pat in name:
+            return direction, klass
+    return None
+
+
+def row_key(row: Dict) -> Tuple:
+    return tuple((k, row[k]) for k in IDENTITY if k in row)
+
+
+def fmt(v: float) -> str:
+    return f"{v:.4g}"
+
+
+def check_file(name: str, baseline: List[Dict], current: List[Dict],
+               tols: Dict[str, float]) -> List[str]:
+    failures: List[str] = []
+    cur_by_key = {row_key(r): r for r in current}
+    for brow in baseline:
+        key = row_key(brow)
+        label = name + "[" + ",".join(f"{k}={v}" for k, v in key) + "]"
+        crow = cur_by_key.get(key)
+        if crow is None:
+            failures.append(f"{label}: row missing from current run")
+            continue
+        for metric, bval in brow.items():
+            rule = classify(metric)
+            if rule is None or not isinstance(bval, (int, float, bool)):
+                continue
+            direction, klass = rule
+            cval = crow.get(metric)
+            if cval is None:
+                failures.append(f"{label}.{metric}: metric disappeared")
+                continue
+            b, c = float(bval), float(cval)
+            if math.isnan(b):
+                continue
+            if math.isnan(c):
+                # a metric that WAS measurable degrading to NaN (e.g.
+                # acceptance rate with zero drafts) is a regression,
+                # not a skip
+                failures.append(
+                    f"{label}.{metric}: NaN vs baseline {fmt(b)}")
+                continue
+            tol = tols[klass]
+            # symmetric ratio band with a small absolute floor so
+            # near-zero baselines don't demand exact equality: tol=1.0
+            # tolerates a 2x-worse current in EITHER direction
+            # (lower-better: c <= 2b; higher-better: c >= b/2) — an
+            # additive band would make higher-is-better metrics
+            # ungateable at tol >= 1.0
+            bad = (c < b / (1.0 + tol) - 1e-9) if direction == "higher" \
+                else (c > b * (1.0 + tol) + 1e-9)
+            if bad:
+                arrow = "<" if direction == "higher" else ">"
+                failures.append(
+                    f"{label}.{metric}: {fmt(c)} {arrow} baseline "
+                    f"{fmt(b)} beyond {klass} tol {tol:.0%}")
+    return failures
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline",
+                    default=os.path.join(os.path.dirname(__file__), "..",
+                                         "results", "benchmarks"))
+    ap.add_argument("--current", required=True,
+                    help="directory holding this run's bench JSON")
+    ap.add_argument("--names", nargs="+", default=None,
+                    help="bench names to gate (default: every baseline "
+                         "JSON present in --current)")
+    ap.add_argument("--timing-tol", type=float, default=1.0,
+                    help="allowed relative worsening for timing metrics "
+                         "(1.0 = 2x worse still passes — 2x slower for "
+                         "lower-is-better, half throughput for "
+                         "higher-is-better; CI runners are noisy)")
+    ap.add_argument("--quality-tol", type=float, default=0.15,
+                    help="allowed relative worsening for deterministic "
+                         "quality metrics")
+    ap.add_argument("--update", action="store_true",
+                    help="overwrite baselines from --current")
+    args = ap.parse_args()
+
+    names = args.names
+    if names is None:
+        # every committed baseline is gated: a bench that stopped
+        # producing output must FAIL below, not silently drop out of
+        # the comparison set
+        names = sorted(f[:-5] for f in os.listdir(args.baseline)
+                       if f.endswith(".json"))
+    if not names:
+        print("check_bench: no baseline bench JSON found", file=sys.stderr)
+        return 1
+
+    if args.update:
+        for n in names:
+            src = os.path.join(args.current, n + ".json")
+            if not os.path.exists(src):
+                print(f"check_bench: {n}.json not in --current, baseline "
+                      "kept")
+                continue
+            shutil.copy(src, os.path.join(args.baseline, n + ".json"))
+            print(f"check_bench: baseline {n}.json updated")
+        return 0
+
+    tols = {"quality": args.quality_tol, "timing": args.timing_tol}
+    all_failures: List[str] = []
+    for n in names:
+        with open(os.path.join(args.baseline, n + ".json")) as f:
+            baseline = json.load(f)
+        cur_path = os.path.join(args.current, n + ".json")
+        if not os.path.exists(cur_path):
+            all_failures.append(f"{n}: bench produced no JSON this run")
+            print(f"check_bench: {n}: MISSING from current run [FAIL]")
+            continue
+        with open(cur_path) as f:
+            current = json.load(f)
+        fails = check_file(n, baseline, current, tols)
+        status = "FAIL" if fails else "ok"
+        print(f"check_bench: {n}: {len(baseline)} baseline rows, "
+              f"{len(fails)} regressions [{status}]")
+        all_failures.extend(fails)
+
+    for f in all_failures:
+        print(f"  REGRESSION {f}", file=sys.stderr)
+    return 1 if all_failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
