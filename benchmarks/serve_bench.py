@@ -14,6 +14,13 @@ cache off vs on: it checks greedy outputs are byte-identical, that
 prefill tokens were actually skipped, and reports the TTFT reduction —
 the paper's time-to-first-token axis on edge traffic.
 
+`--family {mamba2,xlstm,zamba}` benches the unified decode-state
+runtime on a recurrent or hybrid model instead: a mixed-length workload
+under continuous admission (per-lane StateArena slots, no equal-length
+lockstep grouping), gated on byte-identical greedy output vs serving
+each request alone.  Results land in `serve_bench_<family>.json` so CI
+gates every family row independently.
+
   PYTHONPATH=src python benchmarks/serve_bench.py [--scale 8] [--tokens 16]
 """
 import argparse
@@ -51,12 +58,43 @@ PROMPT_MIXES = {
 }
 
 
-def build_model(scale: int):
-    cfg = ModelConfig(name="bench", family="dense", n_layers=4,
-                      d_model=2048 // scale, n_heads=32 // scale,
-                      n_kv_heads=8 // min(scale, 8) or 1,
-                      d_ff=8192 // scale, vocab=2048, head_dim=64,
-                      dtype="float32", remat=False)
+def build_model(scale: int, family: str = "dense"):
+    from repro.models.config import SSMConfig, ZambaConfig
+    d = 2048 // scale
+    if family == "dense":
+        cfg = ModelConfig(name="bench", family="dense", n_layers=4,
+                          d_model=d, n_heads=32 // scale,
+                          n_kv_heads=8 // min(scale, 8) or 1,
+                          d_ff=8192 // scale, vocab=2048, head_dim=64,
+                          dtype="float32", remat=False)
+    elif family == "xlstm":
+        cfg = ModelConfig(name="bench-xlstm", family="xlstm", n_layers=4,
+                          d_model=d, n_heads=4, n_kv_heads=4,
+                          d_ff=4 * d, vocab=2048, head_dim=d // 4,
+                          dtype="float32", remat=False,
+                          ssm=SSMConfig(mlstm_heads=4, slstm_every=2))
+    elif family == "mamba2":
+        # pure-mamba shape: zamba config whose shared-attention period
+        # exceeds n_layers (zero attention groups -> StateArena only)
+        cfg = ModelConfig(name="bench-mamba2", family="zamba", n_layers=4,
+                          d_model=d, n_heads=4, n_kv_heads=2,
+                          d_ff=4 * d, vocab=2048, head_dim=d // 4,
+                          dtype="float32", remat=False,
+                          ssm=SSMConfig(d_state=32, head_dim=d // 2,
+                                        expand=2),
+                          zamba=ZambaConfig(shared_every=8, lora_rank=16,
+                                            shared_d_ff=4 * d))
+    elif family == "zamba":
+        cfg = ModelConfig(name="bench-zamba", family="zamba", n_layers=4,
+                          d_model=d, n_heads=4, n_kv_heads=2,
+                          d_ff=4 * d, vocab=2048, head_dim=d // 4,
+                          dtype="float32", remat=False,
+                          ssm=SSMConfig(d_state=32, head_dim=d // 2,
+                                        expand=2),
+                          zamba=ZambaConfig(shared_every=2, lora_rank=16,
+                                            shared_d_ff=4 * d))
+    else:
+        raise ValueError(family)
     model = DecoderLM(cfg)
     params = init_params(model.param_specs(), jax.random.PRNGKey(0),
                          dtype_override=jnp.float32)
@@ -154,6 +192,61 @@ def run_shared_prefix(model, params, *, batch: int, n_requests: int,
     }
 
 
+def run_family(model, params, *, family: str, batch: int, n_requests: int,
+               tokens: int, max_seq: int, page_size: int):
+    """Unified decode-state workload: mixed-length prompts under
+    continuous admission, gated on byte-identical greedy output vs
+    serving every request alone (same engine shape).  The identity gate
+    is the PR's correctness bar — continuous batching of recurrent
+    state must be invisible in the emitted tokens."""
+    rng = np.random.default_rng(0)
+    lens = rng.integers(4, 33, size=n_requests)
+
+    def engine():
+        return PagedServeEngine(model, params, max_batch=batch,
+                                max_seq=max_seq, page_size=page_size,
+                                prefill_chunk=16)
+
+    reqs = [ServeRequest(prompt=rng.integers(0, 2048, int(n)
+                                             ).astype(np.int32),
+                         max_new_tokens=tokens, rid=i)
+            for i, n in enumerate(lens)]
+    prompts = [r.prompt.copy() for r in reqs]
+    eng = engine()
+    warm_engine(eng)
+    t0 = time.monotonic()
+    eng.run(reqs)
+    wall = time.monotonic() - t0
+    m = eng.summary()
+
+    # reference: one engine, one request at a time (identical graph
+    # shapes; reused so the jitted step compiles once)
+    ref_eng = engine()
+    warm_engine(ref_eng)
+    identical = True
+    for req, prompt in zip(reqs, prompts):
+        solo = ServeRequest(prompt=prompt, max_new_tokens=tokens, rid=0)
+        ref_eng.run([solo])
+        identical &= req.out_tokens == solo.out_tokens
+    assert identical, (f"{family}: continuous batching changed greedy "
+                       "output vs single-request serving")
+
+    return {
+        "mode": "family", "family": family, "batch": batch,
+        "n_requests": n_requests,
+        "outputs_byte_identical": identical,
+        "wall_s": wall,
+        "tokens_per_s_wall": m["tokens"] / wall,
+        "tokens_per_s_decode": eng.throughput(),
+        "ttft_p50_s": m["ttft_p50_s"], "ttft_p99_s": m["ttft_p99_s"],
+        "tpot_p50_s": m["tpot_p50_s"], "tpot_p99_s": m["tpot_p99_s"],
+        "state_slot_occupancy_peak": m["state_slot_occupancy_peak"],
+        "state_bytes": m["state_bytes"],
+        "lane_steps": m[f"lane_steps_{model.cfg.family}"],
+        "kv_bytes_paged": eng.cache.kv_bytes(),
+    }
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--scale", type=int, default=8)
@@ -166,7 +259,32 @@ def main():
                     help="add the prefix-cache A/B workload")
     ap.add_argument("--prefix-len", type=int, default=64,
                     help="common prefix tokens for --shared-prefix")
+    ap.add_argument("--family", default="dense",
+                    choices=["dense", "mamba2", "xlstm", "zamba"],
+                    help="bench the unified decode-state runtime on a "
+                         "recurrent/hybrid family (writes "
+                         "serve_bench_<family>.json)")
     args = ap.parse_args()
+
+    if args.family != "dense":
+        model, params = build_model(args.scale, args.family)
+        print(f"model[{args.family}]: {model.n_params()/1e6:.1f}M params, "
+              f"backend={jax.default_backend()}")
+        rows = []
+        for batch in args.batches:
+            r = run_family(model, params, family=args.family, batch=batch,
+                           n_requests=args.requests, tokens=args.tokens,
+                           max_seq=args.max_seq, page_size=args.page_size)
+            rows.append(r)
+            print(f"{args.family},batch={batch}: "
+                  f"{r['tokens_per_s_decode']:.1f} tok/s decode, "
+                  f"ttft_p50 {r['ttft_p50_s']*1e3:.0f} ms, "
+                  f"tpot_p50 {r['tpot_p50_s']*1e3:.1f} ms, "
+                  f"state slots peak "
+                  f"{r['state_slot_occupancy_peak']*100:.0f}%, "
+                  f"outputs byte-identical")
+        save_json(f"serve_bench_{args.family}", rows)
+        return
 
     model, params = build_model(args.scale)
     print(f"model: {model.n_params()/1e6:.1f}M params, "

@@ -3,12 +3,40 @@
   PYTHONPATH=src python -m repro.launch.serve --arch gemma3-4b --smoke \
       --quant int4 --requests 8 --tokens 32
 
-Dense/moe architectures run on the paged-KV continuous-batching engine;
-recurrent families (xlstm/zamba) fall back to the slot shim.
+Every token-input family runs on the unified continuous-batching
+engine: attention layers on paged KV, recurrent layers (xlstm/zamba) on
+per-lane StateArena slots.  Prefix caching and speculative decoding are
+attention-only capabilities — `--spec` on a recurrent-state family is a
+hard error, and `--no-prefix-cache` is auto-implied for hybrid/
+recurrent families (see `check_capabilities`).
 """
 import argparse
 
 import numpy as np
+
+
+def check_capabilities(model, spec_mode: str, no_prefix_cache: bool):
+    """Validate CLI capability flags against the model's decode-state
+    layout; returns the `prefix_cache` flag for `PagedServeEngine`.
+
+    Prefix sharing and speculative decoding operate on attention KV
+    pages only.  A model with recurrent state layers cannot rewind or
+    adopt that state, so `--spec` raises a ValueError naming the
+    capability, and the prefix cache is auto-disabled (`--no-prefix-
+    cache` implied) rather than erroring — there is no affirmative
+    prefix flag to contradict.
+    """
+    from repro.serve.engine import capability_error
+    if model.supports_paged():
+        return not no_prefix_cache
+    if spec_mode != "off":
+        raise ValueError(f"--spec {spec_mode}: "
+                         + capability_error(model, "speculative-decoding"))
+    if not no_prefix_cache:
+        print(f"[serve] family {model.cfg.family!r} has recurrent state "
+              "layers: --no-prefix-cache implied (prefix sharing is an "
+              "attention-only capability)")
+    return False
 
 
 def main():
@@ -44,8 +72,7 @@ def main():
     from repro.configs import get_config, get_smoke_config
     from repro.models import DecoderLM, init_params
     from repro.quant import quantize_params, quantized_fraction
-    from repro.serve import (PagedServeEngine, Request, SamplingParams,
-                             ServeEngine, ServeRequest)
+    from repro.serve import PagedServeEngine, SamplingParams, ServeRequest
 
     cfg = (get_smoke_config(args.arch) if args.smoke
            else get_config(args.arch)).replace(dtype="float32", remat=False)
@@ -68,70 +95,64 @@ def main():
     if args.max_seq % args.page_size:
         raise SystemExit(f"--max-seq {args.max_seq} must be a multiple of "
                          f"--page-size {args.page_size}")
-    if model.supports_paged():
-        spec_cfg = None
-        if args.spec != "off":
-            from repro.spec import SpecConfig
-            if args.spec == "model":
-                dcfg = cfg.replace(name=cfg.name + "-draft", n_layers=1,
-                                   d_model=max(cfg.d_model // 2, 32),
-                                   d_ff=max(cfg.d_ff // 2, 64))
-                draft = DecoderLM(dcfg)
-                dparams = init_params(draft.param_specs(),
-                                      jax.random.PRNGKey(7),
-                                      dtype_override=jnp.float32)
-                spec_cfg = SpecConfig(k=args.spec_k, drafter="model",
-                                      draft_model=draft,
-                                      draft_params=dparams,
-                                      draft_page_size=args.page_size)
-            else:
-                spec_cfg = SpecConfig(k=args.spec_k, drafter="ngram")
-        eng = PagedServeEngine(
-            model, params, max_batch=args.batch, max_seq=args.max_seq,
-            page_size=args.page_size, n_pages=args.pages or None,
-            spec=spec_cfg, prefix_cache=not args.no_prefix_cache)
-        sampling = SamplingParams(temperature=args.temperature,
-                                  top_k=args.top_k, top_p=args.top_p)
-        reqs = [ServeRequest(prompt=p, max_new_tokens=args.tokens, rid=i,
-                             sampling=sampling)
-                for i, p in enumerate(prompts)]
-        eng.run(reqs)
-        m = eng.summary()
-        spec_msg = ""
-        if spec_cfg is not None:
-            acc = m["spec_acceptance_rate"]
-            acc_txt = (f"{acc*100:.0f}%" if np.isfinite(acc)
-                       else "n/a (0 drafted)")
-            spec_msg = (f", spec[{args.spec} k={args.spec_k}] "
-                        f"acc {acc_txt} "
-                        f"{m['tokens_per_decode_step']:.2f} tok/step")
-        prefix_msg = ""
-        if not args.no_prefix_cache:
-            hr = m["prefix_hit_rate"]
-            prefix_msg = (f", prefix hit "
-                          f"{hr*100:.0f}%" if np.isfinite(hr) else
-                          ", prefix hit n/a")
-            prefix_msg += (f" ({int(m['prefill_tokens_skipped'])} prefill "
-                           f"tokens skipped)")
-        print(f"[serve] {int(m['tokens'])} tokens, "
-              f"{eng.throughput():.0f} tok/s decode, "
-              f"ttft p50 {m['ttft_p50_s']*1e3:.0f} ms / "
-              f"p99 {m['ttft_p99_s']*1e3:.0f} ms, "
-              f"tpot p50 {m['tpot_p50_s']*1e3:.1f} ms, "
-              f"kv occupancy peak {m['kv_occupancy_peak']*100:.0f}%"
-              f"{spec_msg}{prefix_msg} ({jax.default_backend()} backend)")
-    else:
-        eng = ServeEngine(model, params, n_slots=args.batch,
-                          max_seq=args.max_seq,
-                          greedy=args.temperature <= 0,
-                          sampling=SamplingParams(
-                              temperature=args.temperature,
-                              top_k=args.top_k, top_p=args.top_p))
-        done = eng.run([Request(prompt=p, max_new_tokens=args.tokens, rid=i)
-                        for i, p in enumerate(prompts)])
-        print(f"[serve] {sum(len(r.out_tokens) for r in done)} tokens, "
-              f"{eng.throughput():.0f} tok/s decode "
-              f"({jax.default_backend()} backend, slot shim)")
+    prefix_cache = check_capabilities(model, args.spec, args.no_prefix_cache)
+    spec_cfg = None
+    if args.spec != "off":
+        from repro.spec import SpecConfig
+        if args.spec == "model":
+            dcfg = cfg.replace(name=cfg.name + "-draft", n_layers=1,
+                               d_model=max(cfg.d_model // 2, 32),
+                               d_ff=max(cfg.d_ff // 2, 64))
+            draft = DecoderLM(dcfg)
+            dparams = init_params(draft.param_specs(),
+                                  jax.random.PRNGKey(7),
+                                  dtype_override=jnp.float32)
+            spec_cfg = SpecConfig(k=args.spec_k, drafter="model",
+                                  draft_model=draft,
+                                  draft_params=dparams,
+                                  draft_page_size=args.page_size)
+        else:
+            spec_cfg = SpecConfig(k=args.spec_k, drafter="ngram")
+    eng = PagedServeEngine(
+        model, params, max_batch=args.batch, max_seq=args.max_seq,
+        page_size=args.page_size, n_pages=args.pages or None,
+        spec=spec_cfg, prefix_cache=prefix_cache)
+    sampling = SamplingParams(temperature=args.temperature,
+                              top_k=args.top_k, top_p=args.top_p)
+    reqs = [ServeRequest(prompt=p, max_new_tokens=args.tokens, rid=i,
+                         sampling=sampling)
+            for i, p in enumerate(prompts)]
+    eng.run(reqs)
+    m = eng.summary()
+    spec_msg = ""
+    if spec_cfg is not None:
+        acc = m["spec_acceptance_rate"]
+        acc_txt = (f"{acc*100:.0f}%" if np.isfinite(acc)
+                   else "n/a (0 drafted)")
+        spec_msg = (f", spec[{args.spec} k={args.spec_k}] "
+                    f"acc {acc_txt} "
+                    f"{m['tokens_per_decode_step']:.2f} tok/step")
+    prefix_msg = ""
+    if prefix_cache:
+        hr = m["prefix_hit_rate"]
+        prefix_msg = (f", prefix hit "
+                      f"{hr*100:.0f}%" if np.isfinite(hr) else
+                      ", prefix hit n/a")
+        prefix_msg += (f" ({int(m['prefill_tokens_skipped'])} prefill "
+                       f"tokens skipped)")
+    state_msg = ""
+    if eng.arena is not None:
+        state_msg = (f", state slots peak "
+                     f"{m['state_slot_occupancy_peak']*100:.0f}% "
+                     f"({int(m['state_bytes'])/1024:.0f} KiB arena)")
+    print(f"[serve] {int(m['tokens'])} tokens, "
+          f"{eng.throughput():.0f} tok/s decode, "
+          f"ttft p50 {m['ttft_p50_s']*1e3:.0f} ms / "
+          f"p99 {m['ttft_p99_s']*1e3:.0f} ms, "
+          f"tpot p50 {m['tpot_p50_s']*1e3:.1f} ms, "
+          f"kv occupancy peak {m['kv_occupancy_peak']*100:.0f}%"
+          f"{spec_msg}{prefix_msg}{state_msg} "
+          f"({jax.default_backend()} backend)")
 
 
 if __name__ == "__main__":

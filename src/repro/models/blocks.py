@@ -20,9 +20,10 @@ from .attention import (attention_specs, attn_decode, attn_forward,
 from .common import FSDP, NONE, TP, ParamSpec, layer_norm, rms_norm
 from .config import ModelConfig
 from .ffn import dense_ffn, dense_ffn_specs, ffn_forward, ffn_specs
-from .ssm import (mamba2_decode, mamba2_forward, mamba2_specs, mlstm_decode,
-                  mlstm_forward, mlstm_specs, slstm_decode, slstm_forward,
-                  slstm_specs)
+from .ssm import (mamba2_decode, mamba2_forward, mamba2_serve_step,
+                  mamba2_specs, mlstm_decode, mlstm_forward,
+                  mlstm_serve_step, mlstm_specs, slstm_decode,
+                  slstm_forward, slstm_serve_step, slstm_specs)
 
 Params = Dict[str, Any]
 
@@ -150,6 +151,18 @@ def slstm_block_decode(p, cfg, x, cache):
     return x + out, cache
 
 
+def mlstm_block_serve(p, cfg, x, cache, valid):
+    out, cache = mlstm_serve_step(p["cell"], cfg,
+                                  apply_norm(p["ln"], cfg, x), cache, valid)
+    return x + out, cache
+
+
+def slstm_block_serve(p, cfg, x, cache, valid):
+    out, cache = slstm_serve_step(p["cell"], cfg,
+                                  apply_norm(p["ln"], cfg, x), cache, valid)
+    return x + out, cache
+
+
 # ----------------------------------------------------------------------------
 # mamba block + zamba shared attention block
 # ----------------------------------------------------------------------------
@@ -164,6 +177,12 @@ def mamba_block(p, cfg, x):
 def mamba_block_decode(p, cfg, x, cache):
     out, cache = mamba2_decode(p["cell"], cfg, apply_norm(p["ln"], cfg, x),
                                cache)
+    return x + out, cache
+
+
+def mamba_block_serve(p, cfg, x, cache, valid):
+    out, cache = mamba2_serve_step(p["cell"], cfg,
+                                   apply_norm(p["ln"], cfg, x), cache, valid)
     return x + out, cache
 
 
@@ -218,6 +237,28 @@ def zamba_shared_block(shared: Params, lora: Params, cfg: ModelConfig,
     h = apply_norm(shared["ln_ffn"], cfg, x)
     f = dense_ffn(shared["ffn"], shared_cfg, h)
     return x + f, kv
+
+
+def zamba_shared_block_paged(shared: Params, lora: Params, cfg: ModelConfig,
+                             x: jax.Array, cache: Dict, tables: jax.Array,
+                             lengths: jax.Array, n_new: jax.Array
+                             ) -> Tuple[jax.Array, Dict]:
+    """Shared attn+MLP invocation against a paged KV pool (the hybrid
+    family's attention layers in the serve runtime): per-lane positions
+    from `lengths`, chunked-prefill masking from `n_new` — exactly the
+    `transformer_block_paged` contract, with zamba's LoRA-merged weights
+    and gated output projection."""
+    z = cfg.zamba
+    shared_cfg = cfg.replace(d_ff=z.shared_d_ff, moe=None)
+    attn_p = _zamba_attn_params(shared, lora)
+    h = apply_norm(shared["ln_attn"], cfg, x)
+    a, cache = attn_paged_step(attn_p, shared_cfg, h, cache, tables,
+                               lengths, n_new, jnp.bool_(False))
+    from repro.kernels.ops import qmatmul_xla as _qmm
+    x = x + _qmm(a, lora["out_proj"])
+    h = apply_norm(shared["ln_ffn"], cfg, x)
+    f = dense_ffn(shared["ffn"], shared_cfg, h)
+    return x + f, cache
 
 
 def zamba_shared_block_decode(shared: Params, lora: Params, cfg: ModelConfig,

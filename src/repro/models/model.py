@@ -26,14 +26,15 @@ from repro.kernels.ops import qmatmul_xla as qmm
 from repro.quant.qarray import QTensor, dequant_rows, maybe_dequantize as deq
 
 from .attention import empty_cache_spec, paged_cache_spec
-from .blocks import (mamba_block, mamba_block_decode, mamba_block_specs,
-                     mlstm_block, mlstm_block_decode, mlstm_block_specs,
-                     norm_specs, apply_norm, slstm_block, slstm_block_decode,
-                     slstm_block_specs, transformer_block,
+from .blocks import (mamba_block, mamba_block_decode, mamba_block_serve,
+                     mamba_block_specs, mlstm_block, mlstm_block_decode,
+                     mlstm_block_serve, mlstm_block_specs, norm_specs,
+                     apply_norm, slstm_block, slstm_block_decode,
+                     slstm_block_serve, slstm_block_specs, transformer_block,
                      transformer_block_decode, transformer_block_paged,
                      transformer_block_specs, zamba_lora_specs,
                      zamba_shared_block, zamba_shared_block_decode,
-                     zamba_shared_specs)
+                     zamba_shared_block_paged, zamba_shared_specs)
 from .common import (BATCH, FSDP, KV_SEQ, NONE, TP, ParamSpec,
                      cross_entropy_loss, init_params, param_count,
                      scan_layers, softcap, stack_specs)
@@ -360,12 +361,32 @@ class DecoderLM:
         return h, cache
 
     # ==================================================================
-    # paged decode / chunked batch prefill (the serve-v2 runtime path)
+    # unified decode-state serve step (the serve-v2 runtime path)
     # ==================================================================
     def supports_paged(self) -> bool:
-        """Paging applies to attention KV; recurrent families carry
-        constant-size per-sequence state instead (nothing to page)."""
+        """True when EVERY decode-state layer is paged attention KV —
+        the full paged feature set (prefix sharing, fork/COW,
+        speculative decoding) applies.  Families carrying recurrent
+        per-lane state (xlstm, zamba) serve through the same engine via
+        `serve_step` + a `StateArena`, but those capabilities stay off:
+        adopting or rolling back attention pages cannot adopt or roll
+        back a recurrent state."""
         return self.cfg.family in ("dense", "moe")
+
+    def has_recurrent_state(self) -> bool:
+        """Any layer carrying constant-size per-lane recurrent state
+        (conv buffers, SSM/LSTM cells) — served from a `StateArena`."""
+        return self.cfg.family in ("xlstm", "zamba")
+
+    def n_paged_layers(self) -> int:
+        """Attention layers backed by paged KV pools in `serve_step`
+        (zamba: one shared-block invocation per mamba group)."""
+        cfg = self.cfg
+        if cfg.family in ("dense", "moe"):
+            return cfg.n_layers
+        if cfg.family == "zamba":
+            return cfg.n_layers // cfg.zamba.shared_every
+        return 0
 
     def paged_step(self, params: Params, cache: Any,
                    inputs: Dict[str, jax.Array], tables: jax.Array,
@@ -381,9 +402,103 @@ class DecoderLM:
         Returns (logits (b, s, vocab), cache); the caller samples lane i
         from logits[i, n_new[i] - 1].  Per-lane positions mean one
         lane's writes can never touch another lane's pages.
+
+        Attention-only alias of `serve_step` (kept for the spec drafter
+        and kernel tests, which are paged-KV by construction).
         """
         return self._paged_forward(params, cache, inputs, tables, lengths,
                                    n_new, verify=False)
+
+    def serve_step(self, params: Params, cache: Any,
+                   inputs: Dict[str, jax.Array], tables: jax.Array,
+                   lengths: jax.Array, n_new: jax.Array):
+        """Family-agnostic engine step: one call advances a dynamic
+        batch for ANY family, s == 1 decode or s > 1 chunked prefill.
+
+        `cache` is the unified per-layer decode state from
+        `decode_state_specs`, flattened into one dict: paged KV page
+        pools for attention layers (addressed via `tables`/`lengths`,
+        exactly `paged_step`) and per-lane StateArena slots for
+        recurrent layers (row i of every arena leaf's batch axis is
+        lane i).  Recurrent layers derive a (b, s) validity mask from
+        `n_new` — masked positions update nothing, so one lane's
+        padding can never corrupt another lane's state and lanes may
+        enter/leave the batch at any chunk boundary (continuous
+        batching for every family).
+        """
+        cfg = self.cfg
+        if cfg.family in ("dense", "moe"):
+            return self._paged_forward(params, cache, inputs, tables,
+                                       lengths, n_new, verify=False)
+        h = self._embed(params, inputs)
+        h = constrain(h, "batch", None, "tp")
+        s = h.shape[1]
+        valid = jnp.arange(s, dtype=jnp.int32)[None, :] < n_new[:, None]
+        if cfg.family == "xlstm":
+            h, cache = self._serve_xlstm(params, h, cache, valid)
+        elif cfg.family == "zamba":
+            h, cache = self._serve_zamba(params, h, cache, tables, lengths,
+                                         n_new, valid)
+        else:
+            raise ValueError(cfg.family)
+        logits = self._logits(params, h)
+        return logits, cache
+
+    def _serve_xlstm(self, params, h, cache, valid):
+        cfg = self.cfg
+
+        def group_body(x, inp):
+            (mlstm_p, slstm_p), (mc, sc) = inp
+
+            def inner(xi, lp_c):
+                lp, c = lp_c
+                xi, c = mlstm_block_serve(lp, cfg, xi, c, valid)
+                return constrain(xi, "batch", None, "tp"), c
+
+            x, mc = scan_layers(inner, x, (mlstm_p, mc), cfg.unroll)
+            x, sc = slstm_block_serve(slstm_p, cfg, x, sc, valid)
+            return constrain(x, "batch", None, "tp"), (mc, sc)
+
+        h, (mc, sc) = scan_layers(
+            group_body, h,
+            ((params["mlstm"], params["slstm"]),
+             (cache["mlstm"], cache["slstm"])), cfg.unroll)
+        return h, dict(cache, mlstm=mc, slstm=sc)
+
+    def _serve_zamba(self, params, h, cache, tables, lengths, n_new, valid):
+        cfg = self.cfg
+        shared = params["shared"]
+        n_groups = self.n_paged_layers()
+
+        if n_groups:
+            def group_body(x, inp):
+                (mamba_p, lora_p), (mc, ac) = inp
+
+                def inner(xi, lp_c):
+                    lp, c = lp_c
+                    xi, c = mamba_block_serve(lp, cfg, xi, c, valid)
+                    return constrain(xi, "batch", None, "tp"), c
+
+                x, mc = scan_layers(inner, x, (mamba_p, mc), cfg.unroll)
+                x, ac = zamba_shared_block_paged(shared, lora_p, cfg, x, ac,
+                                                 tables, lengths, n_new)
+                return constrain(x, "batch", None, "tp"), (mc, ac)
+
+            h, (mc, ac) = scan_layers(
+                group_body, h,
+                ((params["mamba"], params["lora"]),
+                 (cache["mamba"], cache["attn"])), cfg.unroll)
+            cache = dict(cache, mamba=mc, attn=ac)
+
+        if "mamba_tail" in params:
+            def tail(xi, lp_c):
+                lp, c = lp_c
+                xi, c = mamba_block_serve(lp, cfg, xi, c, valid)
+                return constrain(xi, "batch", None, "tp"), c
+            h, tc = scan_layers(tail, h, (params["mamba_tail"],
+                                          cache["mamba_tail"]), cfg.unroll)
+            cache = dict(cache, mamba_tail=tc)
+        return h, cache
 
     def paged_verify_step(self, params: Params, cache: Any,
                           inputs: Dict[str, jax.Array], tables: jax.Array,
@@ -472,6 +587,44 @@ class DecoderLM:
             return out
 
         if cfg.family == "xlstm":
+            return self.arena_state_specs(batch)
+
+        if cfg.family == "zamba":
+            n_groups = cfg.n_layers // cfg.zamba.shared_every
+            a_one = {k: to_spec(v, attn_axes(v))
+                     for k, v in empty_cache_spec(cfg, batch, max_seq,
+                                                  kv_dtype).items()}
+            out = dict(self.arena_state_specs(batch))
+            out["attn"] = {k: stack(v, n_groups) for k, v in a_one.items()}
+            if "mamba" not in out:      # pure-mamba: zero-group stack so
+                mb_axes = {"state": (BATCH, TP, NONE, NONE),   # decode_step
+                           "conv": (BATCH, NONE, TP)}          # still scans
+                out["mamba"] = {
+                    k: stack(stack(to_spec(v, mb_axes[k]),
+                                   cfg.zamba.shared_every), 0)
+                    for k, v in mamba2_cache_spec(cfg, batch).items()}
+            return out
+
+        raise ValueError(cfg.family)
+
+    def arena_state_specs(self, batch: int) -> Any:
+        """ParamSpec pytree of the RECURRENT per-lane decode state for a
+        `batch`-lane StateArena ({} for attention-only families).  Row i
+        of every leaf's `BATCH` axis is lane i — the serve engine
+        gathers/scatters that axis for lane reset, host save/restore on
+        preemption, and admission into a running batch."""
+        cfg = self.cfg
+
+        def to_spec(struct, axes):
+            # conv ring buffers hold raw activation projections; the
+            # serve cells carry them at the promoted dtype (a scan carry
+            # is dtype-stable), so the arena starts there — zeros
+            # promote exactly, and the engine's jitted step never
+            # retraces on a dtype flip
+            dt = jnp.promote_types(struct.dtype, cfg.activation_dtype())
+            return ParamSpec(tuple(struct.shape), dt, axes, init="zeros")
+
+        if cfg.family == "xlstm":
             per = cfg.ssm.slstm_every
             n_groups = cfg.n_layers // per
             m_axes = {"C": (BATCH, NONE, TP, NONE), "n": (BATCH, NONE, TP),
@@ -483,9 +636,10 @@ class DecoderLM:
             s_one = {k: to_spec(v, s_axes[k])
                      for k, v in slstm_cache_spec(cfg, batch).items()}
             return {
-                "mlstm": {k: stack(stack(v, per - 1), n_groups)
+                "mlstm": {k: v.stacked(per - 1).stacked(n_groups)
                           for k, v in m_one.items()},
-                "slstm": {k: stack(v, n_groups) for k, v in s_one.items()},
+                "slstm": {k: v.stacked(n_groups)
+                          for k, v in s_one.items()},
             }
 
         if cfg.family == "zamba":
@@ -496,43 +650,65 @@ class DecoderLM:
                        "conv": (BATCH, NONE, TP)}
             m_one = {k: to_spec(v, mb_axes[k])
                      for k, v in mamba2_cache_spec(cfg, batch).items()}
-            a_one = {k: to_spec(v, attn_axes(v))
-                     for k, v in empty_cache_spec(cfg, batch, max_seq,
-                                                  kv_dtype).items()}
-            out = {
-                "mamba": {k: stack(stack(v, per), n_groups)
-                          for k, v in m_one.items()},
-                "attn": {k: stack(v, n_groups) for k, v in a_one.items()},
-            }
+            out = {}
+            if n_groups:
+                out["mamba"] = {k: v.stacked(per).stacked(n_groups)
+                                for k, v in m_one.items()}
             if n_tail:
-                out["mamba_tail"] = {k: stack(v, n_tail)
+                out["mamba_tail"] = {k: v.stacked(n_tail)
                                      for k, v in m_one.items()}
             return out
 
-        raise ValueError(cfg.family)
+        return {}
 
     def paged_cache_specs(self, n_pages: int, page_size: int,
                           kv_dtype=jnp.bfloat16) -> Any:
         """ParamSpec pytree for the paged KV pool: per-layer page pools
         stacked over layers (scan layout), shared by every sequence via
         block tables.  Total KV memory is n_pages * page_size rows —
-        sized to the WORKLOAD, not to n_slots * max_seq."""
+        sized to the WORKLOAD, not to n_slots * max_seq.  Families
+        without attention layers (xlstm, pure-mamba zamba) return {} —
+        their whole decode state lives in the StateArena instead."""
         cfg = self.cfg
-        assert self.supports_paged(), cfg.family
+        n_attn = self.n_paged_layers()
+        if n_attn == 0:
+            return {}
 
         def pool_axes(struct):
             if len(struct.shape) == 4:          # (n_pages, ps, g, hd)
                 return (NONE, NONE, TP, NONE)
             return (NONE, NONE, NONE)           # (n_pages, ps, r) MLA latent
 
-        one = paged_cache_spec(cfg, n_pages, page_size, kv_dtype)
+        pool_cfg = cfg
+        if cfg.family == "zamba":               # shared attn block's shape
+            pool_cfg = cfg.replace(d_ff=cfg.zamba.shared_d_ff, moe=None)
+        one = paged_cache_spec(pool_cfg, n_pages, page_size, kv_dtype)
         one_specs = {k: ParamSpec(tuple(v.shape), v.dtype, pool_axes(v),
                                   init="zeros") for k, v in one.items()}
         n_first = (cfg.moe.first_dense_layers
                    if (cfg.moe and cfg.moe.first_dense_layers) else 0)
-        out = {"attn": {k: v.stacked(cfg.n_layers - n_first)
+        if cfg.family == "zamba":
+            n_first = 0
+        out = {"attn": {k: v.stacked(n_attn - n_first)
                         for k, v in one_specs.items()}}
         if n_first:
             out["attn_first"] = {k: v.stacked(n_first)
                                  for k, v in one_specs.items()}
         return out
+
+    def decode_state_specs(self, max_batch: int, n_pages: int,
+                           page_size: int, kv_dtype=jnp.bfloat16) -> Any:
+        """Unified per-layer decode state for the serve runtime,
+        generalizing `paged_cache_specs`:
+
+          {"paged": per-layer KV page pools (attention layers; {} when
+                    the family has none),
+           "arena": per-lane recurrent-state slots, batch = max_batch
+                    ({} for attention-only families)}
+
+        The engine materializes both, flattens them into one cache dict
+        for `serve_step`, and owns the host-side bookkeeping (block
+        tables for "paged", lane reset/save/restore for "arena")."""
+        return {"paged": self.paged_cache_specs(n_pages, page_size,
+                                                kv_dtype),
+                "arena": self.arena_state_specs(max_batch)}

@@ -181,6 +181,67 @@ def mamba2_decode(p: Params, cfg: ModelConfig, x: jax.Array, cache: Dict,
     return qmm(y, p["out_proj"]), {"state": state, "conv": new_conv}
 
 
+def mamba2_serve_step(p: Params, cfg: ModelConfig, x: jax.Array,
+                      cache: Dict, valid: jax.Array
+                      ) -> Tuple[jax.Array, Dict]:
+    """Masked multi-token recurrence: up to `s` tokens per lane in ONE
+    device call (chunked recurrent prefill, or s == 1 batched decode).
+
+    x: (b, s, d); valid: (b, s) bool.  Lane i consumes its True
+    positions in order; state/conv updates at masked positions are
+    dropped, so a lane's final state equals the state after feeding its
+    valid tokens one at a time through `mamba2_decode` — the serving
+    engine's continuous-batching invariant (a padding token can never
+    corrupt a shorter lane's state, which is what forced the old slot
+    loop to group equal-length prompts).  Projections in and out of the
+    recurrence are batched over (b, s); only the O(1)-per-token state
+    update runs under the scan.
+    """
+    s_cfg = cfg.ssm
+    b, s, _ = x.shape
+    di, nh, ds = mamba2_dims(cfg)
+    hd = s_cfg.head_dim
+
+    proj = qmm(x, p["in_proj"])                               # (b,s,...)
+    z, xbc, dt_raw = _split_xbcdt(cfg, proj)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))  # (b,s,h)
+    A = -jnp.exp(p["a_log"].astype(jnp.float32))              # (h,)
+
+    def step(carry, inp):
+        state, conv = carry
+        xbc_t, dt_t, v_t = inp             # (b,cd), (b,h), (b,)
+        conv_buf = jnp.concatenate([conv, xbc_t[:, None, :]], axis=1)
+        xc = jnp.einsum("bkc,kc->bc", conv_buf, p["conv_w"]) + p["conv_b"]
+        xc = jax.nn.silu(xc)
+        xs = xc[:, :di].reshape(b, nh, hd)
+        B = xc[:, di:di + ds]
+        C = xc[:, di + ds:]
+        dA = jnp.exp(dt_t * A[None, :])
+        new_state = state * dA[:, :, None, None] + \
+            jnp.einsum("bh,bhp,bn->bhpn", dt_t, xs.astype(jnp.float32),
+                       B.astype(jnp.float32))
+        y = jnp.einsum("bhpn,bn->bhp", new_state, C.astype(jnp.float32))
+        y = y.astype(x.dtype) + xs * p["d_skip"].astype(x.dtype)[None, :,
+                                                                 None]
+        state = jnp.where(v_t[:, None, None, None], new_state, state)
+        conv = jnp.where(v_t[:, None, None], conv_buf[:, 1:, :], conv)
+        return (state, conv), y
+
+    # the conv ring buffer stores raw projections: promote it to their
+    # dtype up front — a lax.scan carry must be dtype-stable, unlike the
+    # eager `mamba2_decode` path (zeros promote exactly, so a cache
+    # initialized at either dtype decodes identically)
+    conv0 = cache["conv"].astype(jnp.promote_types(cache["conv"].dtype,
+                                                   xbc.dtype))
+    (state, conv), ys = jax.lax.scan(
+        step, (cache["state"], conv0),
+        (xbc.swapaxes(0, 1), dt.swapaxes(0, 1), valid.swapaxes(0, 1)))
+    y = ys.swapaxes(0, 1).reshape(b, s, di)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    return qmm(y, p["out_proj"]), {"state": state, "conv": conv}
+
+
 def mamba2_cache_spec(cfg: ModelConfig, batch: int):
     di, nh, ds = mamba2_dims(cfg)
     cd = di + 2 * ds
@@ -313,6 +374,42 @@ def mlstm_decode(p: Params, cfg: ModelConfig, x: jax.Array, cache: Dict
                  "conv": conv_buf[:, 1:, :]}
 
 
+def mlstm_serve_step(p: Params, cfg: ModelConfig, x: jax.Array,
+                     cache: Dict, valid: jax.Array
+                     ) -> Tuple[jax.Array, Dict]:
+    """Masked multi-token mLSTM step; see `mamba2_serve_step` for the
+    lane-masking contract (x: (b, s, d), valid: (b, s))."""
+    b, s, _ = x.shape
+    di, nh, dh = mlstm_dims(cfg)
+    up = qmm(x, p["up_proj"])
+    x_m, z = up[..., :di], up[..., di:]
+    o = jax.nn.sigmoid(qmm(x_m, p["w_o"]))
+
+    def step(carry, inp):
+        C, n, m, conv = carry
+        xm_t, v_t = inp                    # (b, di), (b,)
+        conv_buf = jnp.concatenate([conv, xm_t[:, None, :]], axis=1)
+        xc = jnp.einsum("bkc,kc->bc", conv_buf, p["conv_w"]) + p["conv_b"]
+        xc = jax.nn.silu(xc)
+        q, k, v, i_raw, f_raw = _mlstm_qkvif(p, cfg, xc)
+        (C2, n2, m2), h = _mlstm_cell(q, k, v, i_raw, f_raw, (C, n, m))
+        C = jnp.where(v_t[:, None, None, None], C2, C)
+        n = jnp.where(v_t[:, None, None], n2, n)
+        m = jnp.where(v_t[:, None], m2, m)
+        conv = jnp.where(v_t[:, None, None], conv_buf[:, 1:, :], conv)
+        return (C, n, m, conv), h
+
+    conv0 = cache["conv"].astype(jnp.promote_types(cache["conv"].dtype,
+                                                   x_m.dtype))
+    (C, n, m, conv), hs = jax.lax.scan(
+        step, (cache["C"], cache["n"], cache["m"], conv0),
+        (x_m.swapaxes(0, 1), valid.swapaxes(0, 1)))
+    h = hs.swapaxes(0, 1).reshape(b, s, di).astype(x.dtype)
+    h = rms_norm(h, p["hnorm"], cfg.norm_eps) * o
+    out = qmm(h * jax.nn.silu(z), p["down_proj"])
+    return out, {"C": C, "n": n, "m": m, "conv": conv}
+
+
 def mlstm_cache_spec(cfg: ModelConfig, batch: int):
     di, nh, dh = mlstm_dims(cfg)
     return {
@@ -411,6 +508,35 @@ def slstm_decode(p: Params, cfg: ModelConfig, x: jax.Array, cache: Dict
     h = jax.nn.gelu(up[..., :f_up]) * up[..., f_up:]
     return qmm(h, p["ffn_down"]), {"c": state[0], "n": state[1], "h": state[2],
                                "m": state[3]}
+
+
+def slstm_serve_step(p: Params, cfg: ModelConfig, x: jax.Array,
+                     cache: Dict, valid: jax.Array
+                     ) -> Tuple[jax.Array, Dict]:
+    """Masked multi-token sLSTM step; see `mamba2_serve_step` for the
+    lane-masking contract.  The recurrent gate matmul depends on h_prev
+    and stays in the scan; the FFN runs batched over (b, s)."""
+    b, s, d = x.shape
+
+    def step(carry, inp):
+        xt, v_t = inp
+        new, h = _slstm_cell(p, cfg, xt, carry)
+        new = tuple(
+            jnp.where(v_t.reshape((b,) + (1,) * (a.ndim - 1)), a2, a)
+            for a, a2 in zip(carry, new))
+        return new, h
+
+    state = (cache["c"], cache["n"], cache["h"], cache["m"])
+    state, hs = jax.lax.scan(
+        step, state, (x.swapaxes(0, 1).astype(jnp.float32),
+                      valid.swapaxes(0, 1)))
+    h = hs.swapaxes(0, 1).astype(x.dtype)
+    h = rms_norm(h, p["gnorm"], cfg.norm_eps)
+    up = qmm(h, p["ffn_up"])
+    f_up = up.shape[-1] // 2
+    h = jax.nn.gelu(up[..., :f_up]) * up[..., f_up:]
+    return qmm(h, p["ffn_down"]), {"c": state[0], "n": state[1],
+                                   "h": state[2], "m": state[3]}
 
 
 def slstm_cache_spec(cfg: ModelConfig, batch: int):

@@ -8,9 +8,10 @@ from .paged_cache import BlockAllocator, OutOfPagesError, PagedKVCache
 from .prefix import PrefixIndex
 from .sampling import SamplingParams, sample_tokens
 from .scheduler import Scheduler, ServeRequest
+from .state import StateArena
 from .telemetry import Telemetry
 
 __all__ = ["PagedServeEngine", "PrefixIndex", "Request", "ServeEngine",
            "BlockAllocator", "OutOfPagesError", "PagedKVCache",
            "SamplingParams", "sample_tokens", "Scheduler", "ServeRequest",
-           "Telemetry"]
+           "StateArena", "Telemetry"]

@@ -20,9 +20,19 @@ bottleneck.  v2 replaces the seed's fixed-slot engine + dense
   telemetry  (telemetry.Telemetry)        — TTFT/TPOT/queue percentiles,
                                             KV occupancy
 
+The cache layer is a unified per-layer DECODE STATE: attention layers
+keep paged KV pages, recurrent layers (mamba2 conv+SSM state, m/sLSTM
+cells) keep fixed-size per-lane slots in a pooled StateArena
+(serve/state.py).  Both are flattened into one cache dict for
+`DecoderLM.serve_step`, so admission, chunked prefill, per-lane
+sampling, deadlines, and preemption are IDENTICAL for every family —
+hybrid zamba interleaves paged attention layers with arena layers in
+one lane, and recurrent prefill is one masked-scan device call per
+chunk, not one call per token.
+
 Every step runs at most two jitted graphs with shape-stable arguments:
 one chunked BATCH PREFILL call (b = max_batch, s = prefill_chunk) and
-one decode call — `DecoderLM.paged_step` (b = max_batch, s = 1), or,
+one decode call — `DecoderLM.serve_step` (b = max_batch, s = 1), or,
 when the engine is built with a `repro.spec.SpecConfig`, one
 `paged_verify_step` (b = max_batch, s = k + 1) that verifies a drafted
 window and emits a variable number of tokens per lane (speculative
@@ -30,10 +40,12 @@ decoding; see repro/spec/).  Per-lane positions make one sequence's
 prefill unable to clobber another's cache rows (the seed
 `_prefill_slot` bug).
 
-The legacy slot engine survives only as `ServeEngine`, a compatibility
-shim: dense/moe families route to the paged runtime; recurrent families
-(xlstm/zamba — constant-size state, nothing to page) keep a slot loop
-that only admits into an idle batch.
+Prefix caching and speculative decoding remain attention-only
+capabilities: adopting or rolling back KV pages cannot adopt or roll
+back a recurrent state, so requesting either on a model with recurrent
+state layers raises a ValueError naming the capability (never silent
+state corruption).  `ServeEngine` + `Request` remain as the seed-API
+shim; every token-input family now routes to the paged runtime.
 """
 from __future__ import annotations
 
@@ -46,13 +58,27 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models import DecoderLM
-from repro.models.common import spec_structs
 
 from .paged_cache import PagedKVCache
 from .prefix import PrefixIndex
 from .sampling import SamplingParams, sample_tokens
 from .scheduler import Scheduler, ServeRequest
+from .state import StateArena
 from .telemetry import Telemetry
+
+
+# attention-only capability guards: one message source for the engine
+# and the launcher, so the policy and its wording cannot drift apart
+_CAPABILITY_REASONS = {
+    "speculative-decoding": "verify/rollback cannot rewind",
+    "prefix-cache": "page adoption cannot reproduce",
+}
+
+
+def capability_error(model: DecoderLM, capability: str) -> str:
+    return (f"capability {capability!r} requires a paged-attention-only "
+            f"model; family {model.cfg.family!r} carries recurrent "
+            f"per-lane state that {_CAPABILITY_REASONS[capability]}")
 
 
 class PagedServeEngine:
@@ -61,13 +87,22 @@ class PagedServeEngine:
                  page_size: int = 16, n_pages: Optional[int] = None,
                  prefill_chunk: int = 16, kv_dtype=jnp.bfloat16,
                  eos_id: Optional[int] = None, seed: int = 0,
-                 spec: Optional[Any] = None, prefix_cache: bool = True,
+                 spec: Optional[Any] = None,
+                 prefix_cache: Optional[bool] = None,
                  clock=time.monotonic):
         assert model.cfg.embed_inputs, "engine serves token-input models"
-        assert model.supports_paged(), (
-            f"family {model.cfg.family!r} has no paged-KV path; use the "
-            "ServeEngine shim")
         assert max_seq % page_size == 0, (max_seq, page_size)
+        # capability guards: prefix sharing and speculative decoding act
+        # on attention KV pages alone; a model with recurrent state
+        # layers cannot adopt or roll back that state, so asking is a
+        # hard error — never silent state corruption
+        if spec is not None and not model.supports_paged():
+            raise ValueError(capability_error(model,
+                                             "speculative-decoding"))
+        if prefix_cache is None:        # auto: on iff fully paged
+            prefix_cache = model.supports_paged()
+        elif prefix_cache and not model.supports_paged():
+            raise ValueError(capability_error(model, "prefix-cache"))
         self.model = model
         self.params = params
         self.max_batch = max_batch
@@ -76,8 +111,21 @@ class PagedServeEngine:
         self._clock = clock
         if n_pages is None:      # dense-equivalent worst case: never OOM
             n_pages = max_batch * (max_seq // page_size)
+        # unified per-layer decode state: paged KV pools for attention
+        # layers (block tables, COW, ...) plus a StateArena of per-lane
+        # slots for recurrent layers.  PagedKVCache doubles as the
+        # token-budget ledger for families with no attention at all
+        # (pools == {}): pages_needed gates admission and growth
+        # uniformly, so scheduler and preemption logic are
+        # family-agnostic.
+        state_specs = model.decode_state_specs(max_batch, n_pages,
+                                               page_size, kv_dtype)
         self.cache = PagedKVCache(model, n_pages, page_size, max_seq,
-                                  kv_dtype)
+                                  kv_dtype, specs=state_specs["paged"])
+        self.arena: Optional[StateArena] = (
+            StateArena(model, max_batch, specs=state_specs["arena"])
+            if model.has_recurrent_state() else None)
+        self._paged_keys = tuple(self.cache.pools)
         # prefix sharing: committed prompt pages live in a radix trie and
         # are adopted by later requests with the same prefix (see
         # prefix.py); allocation pressure evicts trie-only pages LRU
@@ -89,7 +137,7 @@ class PagedServeEngine:
                                    prefill_chunk=min(prefill_chunk, max_seq))
         self.telemetry = Telemetry()
         self.lanes: List[Optional[ServeRequest]] = [None] * max_batch
-        self._step_fn = jax.jit(model.paged_step, donate_argnums=(1,))
+        self._step_fn = jax.jit(model.serve_step, donate_argnums=(1,))
         self._key = jax.random.PRNGKey(seed)
         self._next_eid = 0
         if spec is not None:            # SpecConfig -> speculative decode
@@ -124,6 +172,27 @@ class PagedServeEngine:
         return requests
 
     # ------------------------------------------------------------------
+    def _dispatch(self, fn, tokens: np.ndarray, tables: np.ndarray,
+                  lengths: np.ndarray, n_new: np.ndarray):
+        """Run one jitted step: flatten paged pools + arena slots into
+        the unified cache dict (their key sets are disjoint by
+        construction), split the returned state back.  Returns
+        (logits, graph seconds)."""
+        state = dict(self.cache.pools)
+        if self.arena is not None:
+            state.update(self.arena.state)
+        t0 = time.monotonic()
+        logits, state = fn(
+            self.params, state, {"tokens": jnp.asarray(tokens)},
+            jnp.asarray(tables), jnp.asarray(lengths), jnp.asarray(n_new))
+        dt = time.monotonic() - t0
+        if self.arena is not None:
+            self.arena.state = {k: state[k] for k in self.arena.keys}
+            self.cache.pools = {k: state[k] for k in self._paged_keys}
+        else:
+            self.cache.pools = state
+        return logits, dt
+
     def _tables(self) -> np.ndarray:
         tab = np.zeros((self.max_batch, self.cache.max_pages), np.int32)
         for i, req in enumerate(self.lanes):
@@ -174,18 +243,29 @@ class PagedServeEngine:
                 self.spec.drafter.release(lane)
 
     def _preempt(self, lane: int) -> None:
-        """Pool exhausted mid-decode: evict this lane, requeue it with
-        (prompt + generated) as the new prompt — its KV is rebuilt by
-        prefill when pages free up."""
+        """Pool exhausted mid-decode: evict this lane and requeue it.
+
+        Pure-recurrent families snapshot the lane's StateArena slot to
+        host — constant-size, exact — and resume from it on re-admission
+        without re-prefilling a single token.  Families with attention
+        layers lose their KV pages at eviction, so they requeue with
+        (prompt + generated) as the new prompt and rebuild everything by
+        prefill when pages free up (a hybrid's restored mamba state
+        would be double-advanced by that rebuild, hence no snapshot)."""
         req = self.lanes[lane]
+        if self.arena is not None and self.model.n_paged_layers() == 0:
+            req.saved_state = self.arena.save_lane(lane)
+            req.saved_length = self.cache.seqs[req.eid].length
+            req.saved_prefill_done = req.prefill_done
+        else:
+            req.prompt = np.concatenate(
+                [np.asarray(req.prompt, np.int32),
+                 np.asarray(req.out_tokens, np.int32)])
+            req.prefill_done = 0
         self.cache.release(req.eid)
         self.lanes[lane] = None
         if self.spec is not None:
             self.spec.drafter.release(lane)
-        req.prompt = np.concatenate(
-            [np.asarray(req.prompt, np.int32),
-             np.asarray(req.out_tokens, np.int32)])
-        req.prefill_done = 0
         self.scheduler.submit(req, self._clock(), resubmit=True)
 
     # ------------------------------------------------------------------
@@ -195,6 +275,16 @@ class PagedServeEngine:
             lane = self.lanes.index(None)
             self.lanes[lane] = req
             self.telemetry.admit(req.eid, now)
+            if self.arena is not None:
+                if req.saved_state is not None:
+                    # resumed preemption: scatter the host snapshot back
+                    # and pick up exactly where the lane left off
+                    self.arena.restore_lane(lane, req.saved_state)
+                    self.cache.seqs[req.eid].length = req.saved_length
+                    req.prefill_done = req.saved_prefill_done
+                    req.saved_state = None
+                else:       # fresh admission must never inherit a dead
+                    self.arena.reset_lane(lane)     # lane's state
             if self.prefix is not None:
                 self.telemetry.prefix(req.prefix_cached)
 
@@ -203,9 +293,15 @@ class PagedServeEngine:
             decode_s, decode_lanes = self._decode_phase_spec()
         else:
             decode_s, decode_lanes = self._decode_phase()
+        # arena slots are engine lanes 1:1, so slot fill is running
+        # lanes over max_batch — sampled only when an arena exists
+        state_occ = (self.n_running / self.max_batch
+                     if self.arena is not None else None)
         self.telemetry.step(self.cache.occupancy(), self.n_running,
                             decode_s=decode_s, prefill_s=prefill_s,
-                            decode_lanes=decode_lanes)
+                            decode_lanes=decode_lanes,
+                            state_occupancy=state_occ,
+                            family=self.model.cfg.family)
 
     def _prefill_phase(self) -> float:
         """One chunked BATCH prefill call for every lane with prompt
@@ -234,14 +330,8 @@ class PagedServeEngine:
             finishing |= q == req.prefill_remaining
         if not pre:
             return 0.0
-        lengths = self._lengths()
-        tables = self._tables()
-
-        t0 = time.monotonic()
-        logits, self.cache.pools = self._step_fn(
-            self.params, self.cache.pools, {"tokens": jnp.asarray(tokens)},
-            jnp.asarray(tables), jnp.asarray(lengths), jnp.asarray(n_new))
-        dt = time.monotonic() - t0
+        logits, dt = self._dispatch(self._step_fn, tokens, self._tables(),
+                                    self._lengths(), n_new)
 
         if finishing:       # only sample when some lane ends its prompt
             last = jnp.take_along_axis(
@@ -296,14 +386,8 @@ class PagedServeEngine:
             req = self.lanes[i]
             tokens[i, 0] = req.out_tokens[-1]
             n_new[i] = 1
-        lengths = self._lengths()
-        tables = self._tables()
-
-        t0 = time.monotonic()
-        logits, self.cache.pools = self._step_fn(
-            self.params, self.cache.pools, {"tokens": jnp.asarray(tokens)},
-            jnp.asarray(tables), jnp.asarray(lengths), jnp.asarray(n_new))
-        dt = time.monotonic() - t0
+        logits, dt = self._dispatch(self._step_fn, tokens, self._tables(),
+                                    self._lengths(), n_new)
 
         nxt = self._sample_rows(logits[:, 0, :])
         now = self._clock()
@@ -383,12 +467,9 @@ class PagedServeEngine:
         step_fn = self._step_fn if plain else spec.verify_fn
         step_tokens = tokens[:, :1] if plain else tokens
 
-        t0 = time.monotonic()
-        logits, self.cache.pools = step_fn(
-            self.params, self.cache.pools,
-            {"tokens": jnp.asarray(step_tokens)},
-            jnp.asarray(tables), jnp.asarray(lengths), jnp.asarray(n_new))
-        dt = time.monotonic() - t0 + draft_s
+        logits, dt = self._dispatch(step_fn, step_tokens, tables, lengths,
+                                    n_new)
+        dt += draft_s
 
         logits_np = np.asarray(logits)
         now = self._clock()
@@ -418,6 +499,8 @@ class PagedServeEngine:
         s = self.telemetry.summary()
         s["cow_copies"] = float(self.cache.cow_copies)
         s["kv_pages_shared"] = float(self.cache.pages_shared)
+        if self.arena is not None:
+            s["state_bytes"] = float(self.arena.state_bytes())
         if self.prefix is not None:
             s["prefix_pages_resident"] = float(self.prefix.n_pages)
             s["prefix_pages_evicted"] = float(self.prefix.pages_evicted)
@@ -447,11 +530,12 @@ class Request:
 class ServeEngine:
     """Seed-API shim over the paged runtime.
 
-    Dense/moe models run on `PagedServeEngine` (n_slots -> max_batch,
-    worst-case page count so old workloads can never OOM).  Recurrent
-    families keep a minimal slot loop over `decode_step` that only
-    admits into an idle batch (their per-sequence state is constant-size;
-    interleaved admission needs per-lane state swap, out of scope here).
+    Every token-input family routes to `PagedServeEngine`
+    (n_slots -> max_batch, worst-case page count so old workloads can
+    never OOM): attention KV lives in paged pools, recurrent state in
+    per-lane StateArena slots, so recurrent families continuous-batch
+    like everyone else — the old lockstep slot loop (equal-prompt-length
+    grouping, one jitted call per prompt token) is gone.
     """
 
     def __init__(self, model: DecoderLM, params: Any, n_slots: int = 4,
@@ -463,98 +547,34 @@ class ServeEngine:
         self.max_seq = max_seq
         self.greedy = greedy
         self.sampling = sampling
-        self._paged = model.supports_paged()
-        if self._paged:
-            # largest page size dividing max_seq (any max_seq works, as
-            # the seed API allowed; page_size 1 = one token per page)
-            page_size = next(p for p in (16, 8, 4, 2, 1)
-                             if max_seq % p == 0)
-            self.engine = PagedServeEngine(
-                model, params, max_batch=n_slots, max_seq=max_seq,
-                page_size=page_size,
-                prefill_chunk=min(16, max_seq))
-        else:
-            self.engine = None
+        # largest page size dividing max_seq (any max_seq works, as
+        # the seed API allowed; page_size 1 = one token per page)
+        page_size = next(p for p in (16, 8, 4, 2, 1)
+                         if max_seq % p == 0)
+        self.engine = PagedServeEngine(
+            model, params, max_batch=n_slots, max_seq=max_seq,
+            page_size=page_size,
+            prefill_chunk=min(16, max_seq))
         self.stats: Dict[str, float] = {"tokens": 0, "steps": 0,
                                         "decode_s": 0.0}
 
     def run(self, requests: List[Request]) -> List[Request]:
         sampling = self.sampling if self.sampling is not None else \
             SamplingParams(temperature=0.0 if self.greedy else 1.0)
-        if self._paged:
-            sreqs = [ServeRequest(prompt=np.asarray(r.prompt, np.int32),
-                                  max_new_tokens=r.max_new_tokens,
-                                  rid=i, sampling=sampling)
-                     for i, r in enumerate(requests)]
-            self.engine.run(sreqs)
-            for r, sr in zip(requests, sreqs):
-                r.out_tokens = sr.out_tokens
-                r.done = sr.done
-            t = self.engine.telemetry
-            self.stats = {"tokens": t.tokens, "steps": t.steps,
-                          "decode_tokens": t.decode_tokens,
-                          "decode_s": t.decode_s}
-            return requests
-        return self._run_recurrent(requests, sampling)
+        sreqs = [ServeRequest(prompt=np.asarray(r.prompt, np.int32),
+                              max_new_tokens=r.max_new_tokens,
+                              rid=i, sampling=sampling)
+                 for i, r in enumerate(requests)]
+        self.engine.run(sreqs)
+        for r, sr in zip(requests, sreqs):
+            r.out_tokens = sr.out_tokens
+            r.done = sr.done
+        t = self.engine.telemetry
+        self.stats = {"tokens": t.tokens, "steps": t.steps,
+                      "decode_tokens": t.decode_tokens,
+                      "decode_s": t.decode_s}
+        return requests
 
     def throughput(self) -> float:
         n = self.stats.get("decode_tokens", self.stats["tokens"])
         return n / self.stats["decode_s"] if self.stats["decode_s"] else 0.0
-
-    # -- recurrent-family fallback --------------------------------------
-    def _run_recurrent(self, requests: List[Request],
-                       sampling: SamplingParams) -> List[Request]:
-        model, params = self.model, self.params
-        decode = jax.jit(model.decode_step)
-        key = jax.random.PRNGKey(0)
-        temp = jnp.full((self.n_slots,), sampling.temperature, jnp.float32)
-        topk = jnp.full((self.n_slots,), sampling.top_k, jnp.int32)
-        topp = jnp.full((self.n_slots,), sampling.top_p, jnp.float32)
-        # recurrent state has no padding mask, so only EQUAL-length
-        # prompts may share a lockstep batch (a pad token would corrupt
-        # the shorter lane's state); group by length, then chunk
-        by_len: Dict[int, List[Request]] = {}
-        for r in requests:
-            by_len.setdefault(len(r.prompt), []).append(r)
-        queue: List[List[Request]] = []
-        for _, group in sorted(by_len.items()):
-            for j in range(0, len(group), self.n_slots):
-                queue.append(group[j:j + self.n_slots])
-        while queue:
-            batch = queue.pop(0)
-            cache = jax.tree_util.tree_map(
-                lambda s: jnp.zeros(s.shape, s.dtype),
-                spec_structs(model.cache_specs(self.n_slots, self.max_seq)))
-            maxp = len(batch[0].prompt)
-            toks = np.zeros((self.n_slots, maxp), np.int32)
-            for i, r in enumerate(batch):
-                toks[i] = r.prompt
-            logits = None
-            for t in range(maxp):
-                logits, cache = decode(params, cache,
-                                       {"tokens": jnp.asarray(toks[:, t:t + 1])},
-                                       jnp.int32(t))
-            steps = max(r.max_new_tokens for r in batch)
-            t0 = time.monotonic()
-            last = None
-            for step in range(steps):
-                key, sub = jax.random.split(key)
-                nxt = np.asarray(sample_tokens(sub, logits[:, 0, :], temp,
-                                               topk, topp))
-                for i, r in enumerate(batch):
-                    if len(r.out_tokens) < r.max_new_tokens:
-                        r.out_tokens.append(int(nxt[i]))
-                        self.stats["tokens"] += 1
-                        self.stats["decode_tokens"] = \
-                            self.stats.get("decode_tokens", 0) + 1
-                last = nxt.reshape(-1, 1)
-                if step == steps - 1 or maxp + step + 1 >= self.max_seq:
-                    break
-                logits, cache = decode(params, cache,
-                                       {"tokens": jnp.asarray(last)},
-                                       jnp.int32(maxp + step))
-                self.stats["steps"] += 1
-            self.stats["decode_s"] += time.monotonic() - t0
-            for r in batch:
-                r.done = True
-        return requests

@@ -168,10 +168,19 @@ class PagedKVCache:
     allocation pressure reclaims refcount-1 trie pages LRU-first before
     giving up.  Writes go through `prepare_write`, which copy-on-writes
     any shared page in the write range.
+
+    For families with no attention layers at all (xlstm, pure-mamba
+    zamba) `pools` is {} and the cache degenerates to a host-side token
+    budget: pages still gate admission/growth/preemption, so the
+    scheduler and engine stay family-agnostic while the actual decode
+    state lives in the per-lane StateArena (serve/state.py).
     """
 
     def __init__(self, model, n_pages: int, page_size: int, max_seq: int,
-                 kv_dtype=jnp.bfloat16):
+                 kv_dtype=jnp.bfloat16, specs=None):
+        """`specs` takes a precomputed pool ParamSpec tree (the "paged"
+        half of `DecoderLM.decode_state_specs`); defaults to asking the
+        model directly."""
         assert max_seq % page_size == 0
         self.page_size = page_size
         self.max_pages = max_seq // page_size
@@ -180,7 +189,8 @@ class PagedKVCache:
         self.prefix_index = None            # set by the engine (optional)
         self.cow_copies = 0                 # pages copied on write
         self.pages_shared = 0               # pages adopted via share/fork
-        specs = model.paged_cache_specs(n_pages, page_size, kv_dtype)
+        if specs is None:
+            specs = model.paged_cache_specs(n_pages, page_size, kv_dtype)
         from repro.models.common import spec_structs
         self.pools = jax.tree_util.tree_map(
             lambda s: jnp.zeros(s.shape, s.dtype), spec_structs(specs))

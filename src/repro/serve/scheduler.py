@@ -14,7 +14,7 @@ from __future__ import annotations
 import heapq
 import itertools
 from dataclasses import dataclass, field
-from typing import Callable, List, Optional
+from typing import Any, Callable, List, Optional
 
 import numpy as np
 
@@ -45,6 +45,11 @@ class ServeRequest:
     prefix_cached: int = 0                   # prompt tokens adopted from
     t_enqueue: float = 0.0                   #   the prefix cache at admit
     eid: int = -1                            # engine-assigned unique id
+    # preempted recurrent state (StateArena host snapshot): restored on
+    # re-admission instead of re-prefilling prompt + generated tokens
+    saved_state: Any = None
+    saved_length: int = 0
+    saved_prefill_done: int = 0
 
     @property
     def prompt_len(self) -> int:
@@ -53,6 +58,14 @@ class ServeRequest:
     @property
     def prefill_remaining(self) -> int:
         return self.prompt_len - self.prefill_done
+
+    @property
+    def tokens_resident(self) -> int:
+        """Tokens the lane must hold at admission: the prompt, or — for
+        a preempted request resuming from a saved StateArena snapshot —
+        everything it had already consumed (admission's page budget must
+        cover the restored position, not just the prompt)."""
+        return max(self.prompt_len, self.saved_length)
 
 
 class Scheduler:
@@ -93,9 +106,9 @@ class Scheduler:
         max_tokens = cache.max_pages * cache.page_size
         while self._heap and n_running + len(admitted) < self.max_batch:
             prio, abs_dl, order, req = heapq.heappop(self._heap)
-            need = cache.pages_needed(req.prompt_len) + 1
+            need = cache.pages_needed(req.tokens_resident) + 1
             if (now > abs_dl or req.prompt_len == 0
-                    or req.prompt_len >= max_tokens
+                    or req.tokens_resident >= max_tokens
                     or need > cache.allocator.n_pages):
                 # expired in queue; empty prompt; prompt can never fit
                 # max_seq; or needs more pages than the pool HAS (not
@@ -109,7 +122,7 @@ class Scheduler:
                     req.rejected = True
                 req.done = True
                 continue
-            match = cache.probe_admit(req.prompt_len, req.prompt)
+            match = cache.probe_admit(req.tokens_resident, req.prompt)
             if match is None:
                 # keep it queued; lower-priority requests behind it may
                 # still fit, but skipping ahead would starve this one —
@@ -117,7 +130,7 @@ class Scheduler:
                 deferred.append((prio, abs_dl, order, req))
                 break
             try:
-                seq = cache.admit(req.eid, req.prompt_len, match=match)
+                seq = cache.admit(req.eid, req.tokens_resident, match=match)
             except OutOfPagesError:
                 # the probe's evictable count was optimistic (e.g. a
                 # refcount-1 interior trie node shielded by shared

@@ -1,0 +1,87 @@
+"""StateArena: pooled per-lane recurrent decode state.
+
+Attention layers page their KV because it GROWS with the sequence;
+recurrent layers (mamba2 conv+SSM state, m/sLSTM cells, zamba's
+interleaved mamba groups) carry CONSTANT-size per-sequence state, so
+the serving runtime pools it as fixed-size per-lane slots instead: one
+device-resident pytree (from `DecoderLM.arena_state_specs`) whose
+`BATCH` axis rows are engine lanes.  `serve_step` reads/writes the
+whole arena every call, masking out lanes with `n_new == 0`, which is
+what lets mixed-length recurrent requests enter and leave the running
+batch at any chunk boundary — continuous batching without the old
+equal-prompt-length lockstep grouping.
+
+Lane lifecycle (engine-driven):
+  admit (fresh)      -> reset_lane(lane): zero the slot
+  preempt            -> save_lane(lane):  gather the lane's rows to host
+  re-admit (resumed) -> restore_lane(lane, saved): scatter them back
+
+Save -> evict -> restore is bit-identical (property-tested): the slot
+holds raw arrays, no re-quantization or recompute, so a preempted
+pure-recurrent request resumes mid-generation without re-prefilling a
+single token.
+
+The lane axis differs per leaf (layer-stack dims are scanned in front
+of batch), so the arena records each leaf's `BATCH`-axis index from its
+ParamSpec at construction.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.common import BATCH, tree_map_specs
+
+
+class StateArena:
+    def __init__(self, model, max_batch: int, specs=None):
+        """`specs` takes a precomputed ParamSpec tree (the "arena" half
+        of `DecoderLM.decode_state_specs`); defaults to asking the model
+        directly."""
+        self.max_batch = max_batch
+        if specs is None:
+            specs = model.arena_state_specs(max_batch)
+        self._lane_axis = tree_map_specs(
+            lambda sp: sp.axes.index(BATCH), specs)
+        self.state: Dict[str, Any] = tree_map_specs(
+            lambda sp: jnp.zeros(sp.shape, sp.dtype), specs)
+        self.keys = tuple(self.state)
+
+    # -- lane ops -------------------------------------------------------
+    def _leaves(self):
+        leaves, treedef = jax.tree_util.tree_flatten(self.state)
+        axes = treedef.flatten_up_to(self._lane_axis)
+        return leaves, treedef, axes
+
+    def reset_lane(self, lane: int) -> None:
+        """Zero a lane's slot across every leaf (fresh admission must
+        never inherit a dead request's state)."""
+        leaves, treedef, axes = self._leaves()
+        out = [leaf.at[(slice(None),) * ax + (lane,)].set(0)
+               for leaf, ax in zip(leaves, axes)]
+        self.state = jax.tree_util.tree_unflatten(treedef, out)
+
+    def save_lane(self, lane: int) -> Any:
+        """Gather one lane's rows to host (numpy) for preemption — the
+        whole recurrent state of a sequence, a few small tensors."""
+        leaves, treedef, axes = self._leaves()
+        out = [np.asarray(jnp.take(leaf, lane, axis=ax))
+               for leaf, ax in zip(leaves, axes)]
+        return jax.tree_util.tree_unflatten(treedef, out)
+
+    def restore_lane(self, lane: int, saved: Any) -> None:
+        """Scatter a host snapshot back into a lane's slot."""
+        leaves, treedef, axes = self._leaves()
+        vals = treedef.flatten_up_to(saved)
+        out = [leaf.at[(slice(None),) * ax + (lane,)].set(
+                   jnp.asarray(v, leaf.dtype))
+               for leaf, ax, v in zip(leaves, axes, vals)]
+        self.state = jax.tree_util.tree_unflatten(treedef, out)
+
+    # -- accounting -----------------------------------------------------
+    def state_bytes(self) -> int:
+        return sum(leaf.size * leaf.dtype.itemsize
+                   for leaf in jax.tree_util.tree_leaves(self.state))

@@ -60,6 +60,8 @@ class Telemetry:
     def __init__(self):
         self.traces: Dict[int, RequestTrace] = {}
         self.occupancy_samples: List[float] = []
+        self.state_occupancy_samples: List[float] = []  # StateArena lanes
+        self.decode_family: Optional[str] = None     # labels lane_steps_*
         self.batch_samples: List[int] = []
         self.decode_s = 0.0
         self.prefill_s = 0.0
@@ -104,12 +106,19 @@ class Telemetry:
 
     # -- engine gauges --------------------------------------------------
     def step(self, occupancy: float, batch: int, decode_s: float = 0.0,
-             prefill_s: float = 0.0, decode_lanes: int = 0):
+             prefill_s: float = 0.0, decode_lanes: int = 0,
+             state_occupancy: Optional[float] = None,
+             family: Optional[str] = None):
         """`decode_lanes`: lanes the decode graph advanced this step (0
         on prefill-only steps) — the denominator of tokens-per-step,
         which `token` alone cannot provide once steps emit more than one
-        token."""
+        token.  `state_occupancy` is the StateArena lane-slot fill
+        (None when the model has no recurrent state); `family` labels
+        the `lane_steps_<family>` rollup (one engine serves one model,
+        so this is a label, not a second counter)."""
         self.occupancy_samples.append(occupancy)
+        if state_occupancy is not None:
+            self.state_occupancy_samples.append(state_occupancy)
         self.batch_samples.append(batch)
         self.decode_s += decode_s
         self.prefill_s += prefill_s
@@ -117,6 +126,8 @@ class Telemetry:
         if decode_lanes:
             self.decode_steps += 1
             self.decode_lane_steps += decode_lanes
+            if family is not None:
+                self.decode_family = family
 
     def spec(self, drafted: int, accepted: int):
         """One verify step's ledger: `drafted` tokens proposed across
@@ -173,6 +184,15 @@ class Telemetry:
                                   if self.occupancy_samples else 0.0),
             "kv_occupancy_peak": (float(np.max(self.occupancy_samples))
                                   if self.occupancy_samples else 0.0),
+            "state_slot_occupancy_mean": (
+                float(np.mean(self.state_occupancy_samples))
+                if self.state_occupancy_samples else float("nan")),
+            "state_slot_occupancy_peak": (
+                float(np.max(self.state_occupancy_samples))
+                if self.state_occupancy_samples else float("nan")),
             "batch_mean": (float(np.mean(self.batch_samples))
                            if self.batch_samples else 0.0),
+            **({f"lane_steps_{self.decode_family}":
+                float(self.decode_lane_steps)}
+               if self.decode_family is not None else {}),
         }

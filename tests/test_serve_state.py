@@ -1,0 +1,313 @@
+"""Unified per-layer decode state: continuous batching for recurrent and
+hybrid families.
+
+Invariants pinned here:
+  * `serve_step` == the lockstep `decode_step` reference, per logit,
+    for xlstm, hybrid zamba, and pure-mamba (chunked prefill included);
+  * mixed-length recurrent batches through `PagedServeEngine` produce
+    byte-identical greedy output to serving each request alone
+    (continuous admission, no equal-length grouping);
+  * recurrent prefill is ONE device call per chunk, not one per prompt
+    token (the old `_run_recurrent` regression);
+  * StateArena save -> evict -> restore is bit-identical mid-generation
+    (seeded-numpy property test; no hypothesis in this container);
+  * preempted pure-recurrent lanes resume from the host snapshot with
+    output identical to an unpreempted run;
+  * prefix-cache / speculative-decoding capability guards raise clear
+    ValueErrors on recurrent-state models (engine and launcher).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import DecoderLM, ModelConfig, init_params
+from repro.models.config import SSMConfig, ZambaConfig
+from repro.models.common import spec_structs
+from repro.serve import PagedServeEngine, ServeRequest, StateArena
+
+
+def _zeros(tree):
+    return jax.tree_util.tree_map(lambda s: jnp.zeros(s.shape, s.dtype),
+                                  spec_structs(tree))
+
+
+def _xlstm(n_layers=4):
+    cfg = ModelConfig(name="x", family="xlstm", n_layers=n_layers,
+                      d_model=32, n_heads=2, n_kv_heads=2, d_ff=64,
+                      vocab=64, head_dim=16, dtype="float32", remat=False,
+                      ssm=SSMConfig(mlstm_heads=2, slstm_every=2))
+    model = DecoderLM(cfg)
+    params = init_params(model.param_specs(), jax.random.PRNGKey(0),
+                         dtype_override=jnp.float32)
+    return model, params
+
+
+def _zamba(shared_every=2, n_layers=4):
+    """shared_every > n_layers gives the pure-mamba shape (zero shared
+    attention groups -> no paged layers at all)."""
+    cfg = ModelConfig(name="z", family="zamba", n_layers=n_layers,
+                      d_model=32, n_heads=2, n_kv_heads=1, d_ff=64,
+                      vocab=64, head_dim=16, dtype="float32", remat=False,
+                      ssm=SSMConfig(d_state=16, head_dim=16, expand=2),
+                      zamba=ZambaConfig(shared_every=shared_every,
+                                        lora_rank=4, shared_d_ff=64))
+    model = DecoderLM(cfg)
+    params = init_params(model.param_specs(), jax.random.PRNGKey(1),
+                         dtype_override=jnp.float32)
+    return model, params
+
+
+FAMILIES = {
+    "xlstm": _xlstm,
+    "zamba": _zamba,                                 # hybrid
+    "mamba2": lambda: _zamba(shared_every=8, n_layers=3),  # pure recurrent
+}
+
+
+# ----------------------------------------------------------------------------
+# serve_step == lockstep decode_step reference
+# ----------------------------------------------------------------------------
+def _serve_vs_decode(model, params, toks, chunk=4, atol=1e-4):
+    cache = _zeros(model.cache_specs(1, 32, jnp.float32))
+    dense = []
+    for t, tok in enumerate(toks):
+        lg, cache = model.decode_step(params, cache,
+                                      {"tokens": jnp.asarray([[tok]])},
+                                      jnp.int32(t))
+        dense.append(np.asarray(lg[0, 0]))
+
+    state = _zeros(model.decode_state_specs(1, 10, 4, jnp.float32))
+    served_cache = {**state["paged"], **state["arena"]}
+    tables = jnp.asarray([[3, 7, 1, 5, 0, 0, 0, 0]], jnp.int32)
+    lg, served_cache = model.serve_step(
+        params, served_cache, {"tokens": jnp.asarray(toks[None, :chunk])},
+        tables, jnp.asarray([0], jnp.int32), jnp.asarray([chunk], jnp.int32))
+    served = [np.asarray(lg[0, i]) for i in range(chunk)]
+    L = chunk
+    for tok in toks[chunk:]:
+        lg, served_cache = model.serve_step(
+            params, served_cache, {"tokens": jnp.asarray([[tok]])}, tables,
+            jnp.asarray([L], jnp.int32), jnp.asarray([1], jnp.int32))
+        served.append(np.asarray(lg[0, 0]))
+        L += 1
+    for i, (d, p) in enumerate(zip(dense, served)):
+        np.testing.assert_allclose(p, d, atol=atol,
+                                   err_msg=f"position {i}")
+
+
+@pytest.mark.parametrize("family", sorted(FAMILIES))
+def test_serve_step_matches_decode_step(family):
+    model, params = FAMILIES[family]()
+    toks = np.array([5, 9, 3, 17, 2, 41, 8], np.int32)
+    _serve_vs_decode(model, params, toks)
+
+
+# ----------------------------------------------------------------------------
+# continuous batching: mixed lengths == single-request, token for token
+# ----------------------------------------------------------------------------
+@pytest.mark.parametrize("family", sorted(FAMILIES))
+def test_mixed_length_batch_matches_single_request(family):
+    model, params = FAMILIES[family]()
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, 64, int(n)).astype(np.int32)
+               for n in [3, 11, 7, 20, 5]]          # > lanes, all unequal
+
+    def engine():
+        return PagedServeEngine(model, params, max_batch=2, max_seq=64,
+                                page_size=8, prefill_chunk=4)
+
+    eng = engine()
+    batch = [ServeRequest(prompt=p, max_new_tokens=6, rid=i)
+             for i, p in enumerate(prompts)]
+    eng.run(batch)
+    assert all(r.done and len(r.out_tokens) == 6 for r in batch)
+
+    for req, prompt in zip(batch, prompts):
+        solo = ServeRequest(prompt=prompt, max_new_tokens=6, rid=0)
+        engine().run([solo])
+        assert req.out_tokens == solo.out_tokens, (
+            f"lane output diverged from solo run for prompt len "
+            f"{len(prompt)}")
+
+    m = eng.summary()
+    assert m["state_slot_occupancy_peak"] == 1.0
+    assert m[f"lane_steps_{model.cfg.family}"] > 0
+    assert m["state_bytes"] > 0
+
+
+# ----------------------------------------------------------------------------
+# recurrent prefill is one device call per CHUNK, not per token
+# ----------------------------------------------------------------------------
+@pytest.mark.parametrize("family", ["xlstm", "mamba2"])
+def test_recurrent_prefill_one_call_per_chunk(family):
+    model, params = FAMILIES[family]()
+    chunk = 8
+    eng = PagedServeEngine(model, params, max_batch=1, max_seq=64,
+                           page_size=8, prefill_chunk=chunk)
+    shapes = []
+    orig = eng._step_fn
+
+    def counting(params_, cache_, inputs_, *rest):
+        shapes.append(inputs_["tokens"].shape)
+        return orig(params_, cache_, inputs_, *rest)
+
+    eng._step_fn = counting
+    prompt_len = 21
+    req = ServeRequest(prompt=np.arange(prompt_len, dtype=np.int32) % 64,
+                       max_new_tokens=3, rid=0)
+    eng.run([req])
+    prefill_calls = [s for s in shapes if s[1] == chunk]
+    n_chunks = -(-prompt_len // chunk)
+    assert len(prefill_calls) == n_chunks, (
+        f"{len(prefill_calls)} prefill calls for a {prompt_len}-token "
+        f"prompt at chunk {chunk}; want {n_chunks} (one per chunk, "
+        f"not one per token)")
+    assert {s[1] for s in shapes} <= {chunk, 1}, shapes
+
+
+# ----------------------------------------------------------------------------
+# StateArena lane ops: save -> evict -> restore is bit-identical
+# ----------------------------------------------------------------------------
+@pytest.mark.parametrize("family", sorted(FAMILIES))
+def test_state_arena_save_evict_restore_bit_identical(family):
+    """Seeded-numpy property test (no hypothesis in this container):
+    random lane traffic, then for each lane save -> clobber/reset ->
+    restore and require every leaf row back bit-for-bit."""
+    model, _ = FAMILIES[family]()
+    if not model.has_recurrent_state():
+        pytest.skip("attention-only")
+    rng = np.random.default_rng(42)
+    arena = StateArena(model, max_batch=3)
+    # fill the arena with random state (as if mid-generation)
+    arena.state = jax.tree_util.tree_map(
+        lambda leaf: jnp.asarray(
+            rng.standard_normal(leaf.shape).astype(leaf.dtype)),
+        arena.state)
+    for trial in range(10):
+        lane = int(rng.integers(0, 3))
+        other = (lane + 1) % 3
+        snap = arena.save_lane(lane)
+        other_before = arena.save_lane(other)
+        # evict: zero the lane, then scribble random state into it (a
+        # new request occupying the slot)
+        arena.reset_lane(lane)
+        scribble = jax.tree_util.tree_map(
+            lambda leaf: rng.standard_normal(leaf.shape).astype(
+                leaf.dtype), snap)
+        arena.restore_lane(lane, scribble)
+        # re-admit the preempted request: snapshot back, bit for bit
+        arena.restore_lane(lane, snap)
+        for a, b in zip(jax.tree_util.tree_leaves(snap),
+                        jax.tree_util.tree_leaves(arena.save_lane(lane))):
+            np.testing.assert_array_equal(a, b)
+        # lane ops never touch another lane's rows
+        for a, b in zip(jax.tree_util.tree_leaves(other_before),
+                        jax.tree_util.tree_leaves(arena.save_lane(other))):
+            np.testing.assert_array_equal(a, b)
+
+
+def test_state_arena_reset_zeroes_only_that_lane():
+    model, _ = _xlstm()
+    rng = np.random.default_rng(3)
+    arena = StateArena(model, max_batch=2)
+    arena.state = jax.tree_util.tree_map(
+        lambda leaf: jnp.asarray(
+            rng.standard_normal(leaf.shape).astype(leaf.dtype)),
+        arena.state)
+    keep = arena.save_lane(1)
+    arena.reset_lane(0)
+    for leaf in jax.tree_util.tree_leaves(arena.save_lane(0)):
+        assert not np.any(leaf), "reset lane must be zero"
+    for a, b in zip(jax.tree_util.tree_leaves(keep),
+                    jax.tree_util.tree_leaves(arena.save_lane(1))):
+        np.testing.assert_array_equal(a, b)
+
+
+# ----------------------------------------------------------------------------
+# preemption: pure-recurrent lanes resume from the host snapshot
+# ----------------------------------------------------------------------------
+@pytest.mark.parametrize("family", ["xlstm", "mamba2"])
+def test_preempted_recurrent_lane_resumes_identically(family):
+    model, params = FAMILIES[family]()
+    prompt = np.arange(1, 9, dtype=np.int32)
+
+    def run(n_pages):
+        eng = PagedServeEngine(model, params, max_batch=2, max_seq=64,
+                               page_size=4, n_pages=n_pages,
+                               prefill_chunk=8)
+        reqs = [ServeRequest(prompt=prompt.copy(), max_new_tokens=10,
+                             rid=i) for i in range(2)]
+        eng.run(reqs)
+        return reqs, eng
+
+    tight, eng = run(n_pages=8)        # both generations cannot coexist
+    assert all(r.done and len(r.out_tokens) >= 10 for r in tight)
+    assert eng.cache.n_free_or_cached() == 8, "pages leaked after drain"
+    roomy, _ = run(n_pages=None)       # worst-case pool: no preemption
+    for a, b in zip(tight, roomy):
+        assert a.out_tokens == b.out_tokens, (
+            "resume-from-snapshot diverged from the unpreempted run")
+
+
+# ----------------------------------------------------------------------------
+# capability guards
+# ----------------------------------------------------------------------------
+@pytest.mark.parametrize("family", ["xlstm", "zamba", "mamba2"])
+def test_spec_on_recurrent_model_raises_named_capability(family):
+    from repro.spec import SpecConfig
+    model, params = FAMILIES[family]()
+    with pytest.raises(ValueError, match="speculative-decoding"):
+        PagedServeEngine(model, params, max_batch=1, max_seq=32,
+                         page_size=8, spec=SpecConfig(k=2))
+
+
+@pytest.mark.parametrize("family", ["xlstm", "zamba", "mamba2"])
+def test_prefix_cache_on_recurrent_model_raises_named_capability(family):
+    model, params = FAMILIES[family]()
+    with pytest.raises(ValueError, match="prefix-cache"):
+        PagedServeEngine(model, params, max_batch=1, max_seq=32,
+                         page_size=8, prefix_cache=True)
+    # default (auto) quietly disables instead of raising
+    eng = PagedServeEngine(model, params, max_batch=1, max_seq=32,
+                           page_size=8)
+    assert eng.prefix is None
+
+
+def test_launch_capability_check():
+    from repro.launch.serve import check_capabilities
+    xl_model, _ = _xlstm(n_layers=2)
+    with pytest.raises(ValueError, match="speculative-decoding"):
+        check_capabilities(xl_model, "ngram", no_prefix_cache=False)
+    # hybrid/recurrent families auto-imply --no-prefix-cache
+    assert check_capabilities(xl_model, "off", no_prefix_cache=False) \
+        is False
+    za_model, _ = _zamba()
+    assert check_capabilities(za_model, "off", no_prefix_cache=False) \
+        is False
+    dense = DecoderLM(ModelConfig(name="d", family="dense", n_layers=1,
+                                  d_model=32, n_heads=2, n_kv_heads=2,
+                                  d_ff=64, vocab=64, head_dim=16,
+                                  dtype="float32", remat=False))
+    assert check_capabilities(dense, "off", no_prefix_cache=False) is True
+    assert check_capabilities(dense, "off", no_prefix_cache=True) is False
+
+
+# ----------------------------------------------------------------------------
+# telemetry
+# ----------------------------------------------------------------------------
+def test_state_slot_occupancy_absent_for_attention_only_models():
+    cfg = ModelConfig(name="d", family="dense", n_layers=2, d_model=32,
+                      n_heads=2, n_kv_heads=2, d_ff=64, vocab=64,
+                      head_dim=16, dtype="float32", remat=False)
+    model = DecoderLM(cfg)
+    params = init_params(model.param_specs(), jax.random.PRNGKey(0),
+                         dtype_override=jnp.float32)
+    eng = PagedServeEngine(model, params, max_batch=1, max_seq=32,
+                           page_size=8)
+    eng.run([ServeRequest(prompt=np.array([1, 2, 3], np.int32),
+                          max_new_tokens=3, rid=0)])
+    m = eng.summary()
+    assert np.isnan(m["state_slot_occupancy_peak"])
+    assert m["lane_steps_dense"] > 0
+    assert "state_bytes" not in m

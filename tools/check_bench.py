@@ -33,7 +33,7 @@ import sys
 from typing import Dict, List, Tuple
 
 # identity fields: define WHICH row we compare, never gated themselves
-IDENTITY = ("mode", "mix", "workload", "drafter", "k", "batch",
+IDENTITY = ("mode", "family", "mix", "workload", "drafter", "k", "batch",
             "n_requests", "prefix_len")
 
 # (substring, direction, class); first match wins.  direction "higher"
@@ -146,6 +146,12 @@ def main() -> int:
         # the comparison set
         names = sorted(f[:-5] for f in os.listdir(args.baseline)
                        if f.endswith(".json"))
+        if args.update:
+            # adopt benches that have no baseline yet (a new bench's
+            # first --update run commits its initial rows)
+            names = sorted(set(names)
+                           | {f[:-5] for f in os.listdir(args.current)
+                              if f.endswith(".json")})
     if not names:
         print("check_bench: no baseline bench JSON found", file=sys.stderr)
         return 1
