@@ -1,0 +1,187 @@
+"""Open-loop load benchmark for the streaming gateway (`repro.api`).
+
+Closed-loop benchmarks (serve_bench) measure the engine at its own
+pace; real edge traffic does not wait its turn.  This generator fires
+requests at the gateway with POISSON arrivals at a configured rate —
+open loop: a slow server does NOT slow the arrival process, so queueing
+delay shows up in the tail where it belongs (the coordinated-omission
+trap closed-loop generators fall into).
+
+Per rate it reports the streaming client's actual experience over real
+HTTP + SSE: TTFT and inter-token-latency percentiles (measured from
+intended arrival, so scheduler queue time counts), goodput, and how
+many requests were shed as 429s by the gateway's admission budget.
+
+  PYTHONPATH=src python benchmarks/api_bench.py --scale 32 --tokens 8 \
+      --requests 12 --rates 8 32
+"""
+import argparse
+import asyncio
+import json
+import os
+import sys
+import time
+
+import numpy as np
+
+sys.path.insert(0, os.path.dirname(__file__))
+from common import save_json  # noqa: E402
+from serve_bench import build_model, warm_engine  # noqa: E402
+
+from repro.api import Gateway  # noqa: E402
+from repro.api.protocol import DONE_SENTINEL  # noqa: E402
+from repro.serve import PagedServeEngine  # noqa: E402
+
+
+def _pct(vals, q):
+    return float(np.percentile(np.asarray(vals, np.float64), q)) \
+        if vals else float("nan")
+
+
+async def _drive_one(host, port, body: dict, t_arrival: float) -> dict:
+    """POST one streaming completion; parse SSE incrementally so TTFT
+    and inter-token gaps are timed as bytes actually land."""
+    out = {"status": 0, "ttft_s": None, "gaps": [], "tokens": 0,
+           "done_s": None}
+    payload = json.dumps(body).encode()
+    reader, writer = await asyncio.open_connection(host, port)
+    try:
+        writer.write((f"POST /v1/completions HTTP/1.1\r\nHost: bench\r\n"
+                      f"Content-Length: {len(payload)}\r\n\r\n"
+                      ).encode() + payload)
+        await writer.drain()
+        status_line = await reader.readline()
+        out["status"] = int(status_line.split()[1])
+        while (await reader.readline()) not in (b"\r\n", b""):
+            pass                                    # drain headers
+        if out["status"] != 200:
+            await reader.read()
+            return out
+        t_last = None
+        while True:
+            line = await reader.readline()
+            if not line:
+                break
+            line = line.strip()
+            if not line.startswith(b"data: "):
+                continue
+            data = line[len(b"data: "):]
+            if data.decode("utf-8", "replace") == DONE_SENTINEL:
+                break
+            event = json.loads(data)
+            now = time.monotonic()
+            if "token" in event:
+                out["tokens"] += 1
+                if out["ttft_s"] is None:
+                    out["ttft_s"] = now - t_arrival
+                elif t_last is not None:
+                    out["gaps"].append(now - t_last)
+                t_last = now
+        out["done_s"] = time.monotonic() - t_arrival
+    finally:
+        writer.close()
+        try:
+            await writer.wait_closed()
+        except (ConnectionError, OSError):
+            pass
+    return out
+
+
+async def run_rate(model, params, *, rate: float, n_requests: int,
+                   tokens: int, n: int, batch: int, max_seq: int,
+                   page_size: int, max_pending: int, prompt_lo: int,
+                   prompt_hi: int, seed: int = 0) -> dict:
+    eng = PagedServeEngine(model, params, max_batch=batch,
+                           max_seq=max_seq, page_size=page_size,
+                           prefill_chunk=16)
+    warm_engine(eng)        # compile prefill/decode BEFORE the driver
+    gw = Gateway(eng, max_pending=max_pending)      # owns stepping
+    host, port = await gw.start()
+    rng = np.random.default_rng(seed)
+    bodies = [{"prompt": [int(t) for t in
+                          rng.integers(0, model.cfg.vocab,
+                                       int(rng.integers(prompt_lo,
+                                                        prompt_hi + 1)))],
+               "max_tokens": tokens, "n": n, "stream": True,
+               "temperature": 0.0}
+              for _ in range(n_requests)]
+    gaps_s = rng.exponential(1.0 / rate, size=n_requests)
+
+    t0 = time.monotonic()
+    # intended arrival schedule, fixed up front: TTFT is measured from
+    # the INTENDED arrival, so event-loop lateness in firing a request
+    # counts against the server's tail instead of silently vanishing
+    # (the coordinated-omission trap)
+    arrivals = t0 + np.cumsum(gaps_s)
+    tasks = []
+    for body, t_arrival in zip(bodies, arrivals):
+        await asyncio.sleep(max(0.0, t_arrival - time.monotonic()))
+        tasks.append(asyncio.ensure_future(
+            _drive_one(host, port, body, float(t_arrival))))
+    results = await asyncio.gather(*tasks)
+    wall = time.monotonic() - t0
+    await gw.stop()
+
+    ok = [r for r in results if r["status"] == 200 and r["done_s"]]
+    ttft = [r["ttft_s"] for r in ok if r["ttft_s"] is not None]
+    gaps = [g for r in ok for g in r["gaps"]]
+    total_tokens = sum(r["tokens"] for r in ok)
+    return {
+        "mode": "open-loop", "rate": float(rate),
+        "n_requests": n_requests, "n": n, "batch": batch,
+        "completed": len(ok),
+        "rejected_429": sum(r["status"] == 429 for r in results),
+        "errors": sum(r["status"] not in (200, 429) for r in results),
+        "tokens": total_tokens,
+        "goodput_tokens_per_s": total_tokens / wall if wall else 0.0,
+        "wall_s": wall,
+        "ttft_p50_s": _pct(ttft, 50), "ttft_p95_s": _pct(ttft, 95),
+        "ttft_p99_s": _pct(ttft, 99),
+        "itl_p50_s": _pct(gaps, 50), "itl_p95_s": _pct(gaps, 95),
+        "itl_p99_s": _pct(gaps, 99),
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", type=int, default=8)
+    ap.add_argument("--tokens", type=int, default=16)
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--rates", type=float, nargs="+", default=[8.0, 32.0],
+                    help="mean Poisson arrival rates (requests/s)")
+    ap.add_argument("--n", type=int, default=1,
+                    help="parallel samples per request (KV fork)")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--max-seq", type=int, default=128)
+    ap.add_argument("--page-size", type=int, default=8)
+    ap.add_argument("--max-pending", type=int, default=64,
+                    help="gateway 429 threshold (samples in flight)")
+    ap.add_argument("--prompt-lo", type=int, default=4)
+    ap.add_argument("--prompt-hi", type=int, default=24)
+    args = ap.parse_args()
+
+    import jax
+    model, params = build_model(args.scale)
+    print(f"model: {model.n_params()/1e6:.1f}M params, "
+          f"backend={jax.default_backend()}")
+    print("rate_rps,completed,shed_429,goodput_tok/s,"
+          "ttft_p50_ms,ttft_p99_ms,itl_p50_ms,itl_p99_ms")
+    rows = []
+    for rate in args.rates:
+        r = asyncio.run(run_rate(
+            model, params, rate=rate, n_requests=args.requests,
+            tokens=args.tokens, n=args.n, batch=args.batch,
+            max_seq=args.max_seq, page_size=args.page_size,
+            max_pending=args.max_pending, prompt_lo=args.prompt_lo,
+            prompt_hi=args.prompt_hi))
+        rows.append(r)
+        print(f"{r['rate']:g},{r['completed']},{r['rejected_429']},"
+              f"{r['goodput_tokens_per_s']:.1f},"
+              f"{r['ttft_p50_s']*1e3:.0f},{r['ttft_p99_s']*1e3:.0f},"
+              f"{r['itl_p50_s']*1e3:.1f},{r['itl_p99_s']*1e3:.1f}")
+        assert r["errors"] == 0, f"gateway returned errors at rate {rate}"
+    save_json("api_bench", rows)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,20 @@
+"""Async streaming serving gateway over the paged runtime (stdlib-only).
+
+driver  (EngineDriver)  — the one thread that owns the engine; jobs +
+                          done-watchers cross the thread boundary
+gateway (Gateway)       — asyncio HTTP front door: SSE token streaming,
+                          n>1 parallel sampling via KV fork,
+                          cancellation on disconnect, 429 backpressure,
+                          /metrics
+protocol                — request schema + SSE / minimal HTTP framing
+
+See `repro/serve/README.md` ("Gateway") for the endpoint schema and
+semantics; `benchmarks/api_bench.py` drives it under open-loop load.
+"""
+from .driver import EngineDriver
+from .gateway import Gateway
+from .protocol import (CompletionRequest, ProtocolError, iter_sse,
+                       parse_completion, sse_event)
+
+__all__ = ["EngineDriver", "Gateway", "CompletionRequest",
+           "ProtocolError", "iter_sse", "parse_completion", "sse_event"]

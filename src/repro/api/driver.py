@@ -1,0 +1,154 @@
+"""EngineDriver: the one thread that owns a PagedServeEngine.
+
+`PagedServeEngine` is synchronous and single-threaded by contract —
+its step loop mutates block tables, lane lists, and device pools with
+no locking.  The gateway therefore never touches the engine from the
+asyncio event loop: everything crosses this boundary as a JOB — a
+callable executed on the driver thread between engine steps — and
+results come back on `concurrent.futures.Future`s.  Submissions,
+cancellations, and metrics snapshots are all jobs, so they serialize
+with `step()` for free and the engine needs no locks at all.
+
+The driver also closes the one gap the engine's callback API leaves
+for async callers: `ServeRequest.on_token` fires per token, but
+nothing fires on completion.  `watch(req, on_done)` registers a
+request; after every step (and every job drain) the driver sweeps its
+watchlist and invokes `on_done(req)` exactly once when `req.done`
+flips — cancellations, rejections, and clean finishes all land there.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from concurrent.futures import Future
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+
+class EngineDriver:
+    def __init__(self, engine, idle_wait_s: float = 0.05):
+        self.engine = engine
+        self._jobs: "queue.Queue[Tuple[Callable, Future]]" = queue.Queue()
+        self._watch: List[Tuple[Any, Callable]] = []
+        self._wake = threading.Event()
+        self._stop = threading.Event()
+        # guards the dead flag vs. job enqueue: without it a job could
+        # land in the queue after the thread's final drain and leave
+        # its Future unresolved forever
+        self._lock = threading.Lock()
+        self._dead = False
+        self._idle_wait_s = idle_wait_s
+        self._thread = threading.Thread(target=self._run,
+                                        name="engine-driver", daemon=True)
+        self.steps = 0
+        self.error: Optional[BaseException] = None   # fatal step failure
+
+    # -- lifecycle ------------------------------------------------------
+    def start(self) -> "EngineDriver":
+        self._thread.start()
+        return self
+
+    def stop(self, timeout: float = 10.0) -> None:
+        self._stop.set()
+        self._wake.set()
+        self._thread.join(timeout)
+
+    @property
+    def alive(self) -> bool:
+        return self._thread.is_alive()
+
+    # -- cross-thread API ----------------------------------------------
+    def call(self, fn: Callable[[Any], Any]) -> Future:
+        """Schedule `fn(engine)` on the driver thread (between steps);
+        returns a Future with its result or exception.  A job sent to a
+        driver that already died (fatal step error / stopped) fails
+        immediately instead of hanging its caller forever."""
+        fut: Future = Future()
+        with self._lock:
+            if self._dead:
+                fut.set_exception(RuntimeError(
+                    f"engine driver not running"
+                    f"{f' ({self.error!r})' if self.error else ''}"))
+                return fut
+            self._jobs.put((fn, fut))
+        self._wake.set()
+        return fut
+
+    def submit(self, reqs: List, on_done: Callable) -> Future:
+        """Submit requests in order on the engine thread (fork children
+        must follow their parent) and watch each for completion;
+        resolves to the engine-assigned eids."""
+        def job(engine):
+            eids = []
+            for r in reqs:
+                engine.submit(r)
+                self._watch.append((r, on_done))
+                eids.append(r.eid)
+            return eids
+        return self.call(job)
+
+    def cancel(self, eids: List[int]) -> Future:
+        """Cancel by engine id; resolves to the number actually
+        cancelled (watchers fire via the normal done sweep)."""
+        return self.call(
+            lambda engine: sum(bool(engine.cancel(e)) for e in eids))
+
+    # -- loop -----------------------------------------------------------
+    def _drain_jobs(self) -> None:
+        while True:
+            try:
+                fn, fut = self._jobs.get_nowait()
+            except queue.Empty:
+                return
+            if not fut.set_running_or_notify_cancel():
+                continue
+            try:
+                fut.set_result(fn(self.engine))
+            except BaseException as e:   # the loop must survive any job
+                fut.set_exception(e)
+
+    def _sweep_done(self) -> None:
+        if not self._watch:
+            return
+        still = []
+        for req, on_done in self._watch:
+            if req.done:
+                try:
+                    on_done(req)
+                except Exception:       # a dead client callback must
+                    pass                # never kill the serve loop
+            else:
+                still.append((req, on_done))
+        self._watch = still
+
+    def _run(self) -> None:
+        engine = self.engine
+        while not self._stop.is_set():
+            self._drain_jobs()
+            self._sweep_done()
+            if engine.busy:
+                try:
+                    engine.step()
+                except BaseException as e:
+                    # the engine's host/device state may be corrupt:
+                    # stop serving rather than limp on.  The recorded
+                    # error surfaces through /healthz (503), so a
+                    # liveness probe restarts the instance.
+                    self.error = e
+                    break
+                self.steps += 1
+            else:
+                self._wake.wait(self._idle_wait_s)
+                self._wake.clear()
+        # shutdown / fatal error: mark dead under the lock (new call()s
+        # now fail fast), drain whatever was already queued, and fail
+        # every request still in flight — a watcher left un-notified
+        # would hang its gateway handler forever and pin its inflight
+        # budget slot
+        with self._lock:
+            self._dead = True
+            self._drain_jobs()
+        for req, _ in self._watch:
+            if not req.done:
+                req.done = True
+                req.cancelled = True
+        self._sweep_done()

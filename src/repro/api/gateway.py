@@ -1,0 +1,335 @@
+"""Async streaming gateway over `PagedServeEngine` (stdlib asyncio).
+
+This is the online front door the offline runtime was missing: traffic
+arrives asynchronously, tokens stream back as they decode, and clients
+disconnect whenever they like — the regime where edge-inference
+latency/energy trade-offs actually bite.
+
+Threading model: the asyncio event loop owns sockets and parsing; the
+`EngineDriver` thread owns the engine.  A request crosses over exactly
+twice — submission (a driver job) and per-token fan-out
+(`loop.call_soon_threadsafe` into the request's asyncio.Queue) — so
+the engine stays lock-free and the event loop never blocks on jax.
+
+Endpoints:
+  POST /v1/completions   token-id prompt -> SSE token stream (or one
+                         JSON body with stream=false).  `n > 1` samples
+                         share the prompt's KV pages via
+                         `PagedKVCache.fork` (copy-on-write tails).
+  GET  /metrics          engine summary + latency histograms + gateway
+                         counters, strict JSON.
+  GET  /healthz          liveness.
+
+Overload: a bounded admission budget (`max_pending` samples in flight)
+turns excess load into HTTP 429 + `Retry-After` instead of an unbounded
+queue — open-loop arrivals cannot OOM the paged pool from the outside.
+
+Cancellation: a client that disconnects mid-stream (or mid-prefill)
+aborts its samples via `PagedServeEngine.cancel`, which frees KV pages
+and lanes and decrefs (never frees) shared prefix pages.
+"""
+from __future__ import annotations
+
+import asyncio
+import contextlib
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from .driver import EngineDriver
+from .protocol import (CompletionRequest, ProtocolError, error_response,
+                       http_response, json_response, parse_completion,
+                       read_http_request, sse_done, sse_event)
+
+_SSE_HEADERS = (b"HTTP/1.1 200 OK\r\n"
+                b"Content-Type: text/event-stream\r\n"
+                b"Cache-Control: no-cache\r\n"
+                b"Connection: close\r\n\r\n")
+
+
+def _finish_reason(req, eos_id: Optional[int]) -> str:
+    if req.cancelled:
+        return "cancelled"
+    if req.rejected:
+        return "rejected"
+    if req.truncated:
+        return "truncated"
+    if (eos_id is not None and req.out_tokens
+            and req.out_tokens[-1] == eos_id):
+        return "stop"
+    return "length"
+
+
+class Gateway:
+    """Serve an already-built engine.  The gateway takes ownership of
+    stepping it: nothing else may call `engine.step()`/`run()` while
+    the gateway is running."""
+
+    def __init__(self, engine, *, max_pending: int = 32, max_n: int = 8):
+        assert max_pending >= 0 and max_n >= 1
+        self.engine = engine
+        self.driver = EngineDriver(engine)
+        self.max_pending = max_pending
+        self.max_n = max_n
+        # n>1 rides PagedKVCache.fork, an attention-only capability;
+        # recurrent-state families serve n independent lanes instead
+        self._can_fork = engine.model.supports_paged()
+        self._inflight = 0              # event-loop thread only
+        self.counters: Dict[str, int] = {
+            "http_requests": 0, "accepted_samples": 0, "rejected_429": 0,
+            "bad_requests": 0, "disconnects": 0, "completed_samples": 0}
+        self._server: Optional[asyncio.AbstractServer] = None
+
+    # -- lifecycle ------------------------------------------------------
+    async def start(self, host: str = "127.0.0.1", port: int = 0
+                    ) -> Tuple[str, int]:
+        self.driver.start()
+        self._server = await asyncio.start_server(self._handle, host,
+                                                  port)
+        sock = self._server.sockets[0].getsockname()
+        return sock[0], sock[1]
+
+    async def stop(self) -> None:
+        if self._server is not None:
+            self._server.close()
+            await self._server.wait_closed()
+            self._server = None
+        # driver.stop() joins the engine thread (a mid-flight jitted
+        # step can take seconds): keep it off the event loop
+        await asyncio.get_running_loop().run_in_executor(
+            None, self.driver.stop)
+
+    async def serve_forever(self, host: str = "127.0.0.1",
+                            port: int = 8151) -> None:
+        h, p = await self.start(host, port)
+        print(f"[api] gateway listening on http://{h}:{p} "
+              f"(POST /v1/completions, GET /metrics)")
+        try:
+            await self._server.serve_forever()
+        finally:
+            await self.stop()
+
+    # -- connection handling -------------------------------------------
+    async def _handle(self, reader: asyncio.StreamReader,
+                      writer: asyncio.StreamWriter) -> None:
+        self.counters["http_requests"] += 1
+        try:
+            try:
+                method, path, _, body = await read_http_request(reader)
+            except ProtocolError as e:
+                self.counters["bad_requests"] += 1
+                writer.write(error_response(400, "Bad Request", e.message))
+                return
+            except (ConnectionError, asyncio.IncompleteReadError,
+                    asyncio.LimitOverrunError):
+                return
+            if method == "POST" and path == "/v1/completions":
+                await self._completions(body, reader, writer)
+            elif method == "GET" and path in ("/metrics", "/v1/metrics"):
+                writer.write(json_response(200, "OK",
+                                           await self._metrics()))
+            elif method == "GET" and path == "/healthz":
+                # a dead driver answers 503, not 200-with-false: a
+                # status-code liveness probe must see the failure
+                alive = self.driver.alive
+                body = {"ok": alive,
+                        "error": (repr(self.driver.error)
+                                  if self.driver.error else None)}
+                writer.write(json_response(200 if alive else 503,
+                                           "OK" if alive
+                                           else "Service Unavailable",
+                                           body))
+            else:
+                writer.write(error_response(404, "Not Found",
+                                            f"no route {method} {path}"))
+        except (ConnectionResetError, BrokenPipeError):
+            self.counters["disconnects"] += 1
+        finally:
+            with contextlib.suppress(Exception):
+                if not writer.is_closing():
+                    await writer.drain()
+                writer.close()
+                await writer.wait_closed()
+
+    # -- /v1/completions -----------------------------------------------
+    def _build_requests(self, creq: CompletionRequest, q: asyncio.Queue,
+                        loop) -> List:
+        from repro.serve import SamplingParams, ServeRequest
+        sampling = SamplingParams(temperature=creq.temperature,
+                                  top_k=creq.top_k, top_p=creq.top_p)
+
+        def on_token(rid: int, tok: int) -> None:     # driver thread
+            loop.call_soon_threadsafe(q.put_nowait, ("token", rid, tok))
+
+        prompt = np.asarray(creq.prompt, np.int32)
+        primary = ServeRequest(prompt=prompt,
+                               max_new_tokens=creq.max_tokens, rid=0,
+                               priority=creq.priority,
+                               deadline_s=creq.deadline_s,
+                               sampling=sampling, spec=creq.spec,
+                               on_token=on_token)
+        reqs = [primary]
+        for i in range(1, creq.n):
+            reqs.append(ServeRequest(
+                prompt=prompt.copy(), max_new_tokens=creq.max_tokens,
+                rid=i, priority=creq.priority, deadline_s=creq.deadline_s,
+                sampling=sampling, spec=creq.spec, on_token=on_token,
+                fork_from=primary if self._can_fork else None))
+        return reqs
+
+    async def _completions(self, body: bytes,
+                           reader: asyncio.StreamReader,
+                           writer: asyncio.StreamWriter) -> None:
+        try:
+            creq = parse_completion(body, vocab=self.engine.model.cfg.vocab,
+                                    max_n=self.max_n,
+                                    max_prompt_len=self.engine.max_seq)
+        except ProtocolError as e:
+            self.counters["bad_requests"] += 1
+            writer.write(error_response(400, "Bad Request", e.message))
+            return
+        if not self.driver.alive:
+            # fail fast: submitting to a dead engine thread would hang
+            # this handler forever and leak the inflight budget
+            writer.write(error_response(
+                503, "Service Unavailable", "engine driver not running"))
+            return
+        if self._inflight + creq.n > self.max_pending:
+            self.counters["rejected_429"] += 1
+            writer.write(error_response(
+                429, "Too Many Requests",
+                f"{self._inflight} samples in flight of {self.max_pending}"
+                " allowed; retry shortly", {"Retry-After": "1"}))
+            return
+
+        loop = asyncio.get_running_loop()
+        q: asyncio.Queue = asyncio.Queue()
+
+        def on_done(req) -> None:                     # driver thread
+            loop.call_soon_threadsafe(self._sample_done, q, req)
+
+        reqs = self._build_requests(creq, q, loop)
+        self._inflight += creq.n
+        self.counters["accepted_samples"] += creq.n
+        try:
+            eids = await asyncio.wrap_future(
+                self.driver.submit(reqs, on_done))
+        except RuntimeError:
+            self._inflight -= creq.n    # never submitted: restore the
+            self.counters["accepted_samples"] -= creq.n     # budget
+            writer.write(error_response(
+                503, "Service Unavailable", "engine driver not running"))
+            return
+        if creq.stream:
+            await self._stream_sse(creq, q, eids, reader, writer)
+        else:
+            await self._respond_json(creq, q, eids, reqs, writer)
+
+    def _sample_done(self, q: asyncio.Queue, req) -> None:
+        self._inflight -= 1
+        self.counters["completed_samples"] += 1
+        q.put_nowait(("done", req.rid, req))
+
+    async def _abort(self, eids: List[int]) -> None:
+        self.counters["disconnects"] += 1
+        try:
+            await asyncio.wrap_future(self.driver.cancel(eids))
+        except RuntimeError:
+            pass    # driver died: its requests died with it
+
+    async def _next_event(self, q: asyncio.Queue,
+                          reader: asyncio.StreamReader,
+                          eof_box: List) -> Optional[Tuple]:
+        """Next fan-out event, or None when the client went away.
+        `eof_box[0]` is the pending 1-byte read watching the client
+        socket: a read error or b'' (EOF — SSE clients hold their write
+        side open for the connection's life, so EOF means gone) is a
+        disconnect, while a stray trailing byte (e.g. a CRLF after the
+        body) just re-arms the watch instead of killing the stream."""
+        get = asyncio.ensure_future(q.get())
+        while True:
+            await asyncio.wait({get, eof_box[0]},
+                               return_when=asyncio.FIRST_COMPLETED)
+            if get.done():
+                return get.result()
+            try:
+                data = eof_box[0].result()
+            except (ConnectionError, OSError):
+                data = b""
+            if not data:
+                get.cancel()
+                with contextlib.suppress(asyncio.CancelledError):
+                    await get
+                return None
+            eof_box[0] = asyncio.ensure_future(reader.read(1))
+
+    async def _stream_sse(self, creq, q, eids, reader, writer) -> None:
+        writer.write(_SSE_HEADERS)
+        eof_box = [asyncio.ensure_future(reader.read(1))]
+        try:
+            await writer.drain()
+            remaining = creq.n
+            while remaining:
+                event = await self._next_event(q, reader, eof_box)
+                if event is None:       # client went away mid-stream:
+                    await self._abort(eids)   # abort the whole group
+                    return
+                kind, rid, payload = event
+                if kind == "token":
+                    writer.write(sse_event({"index": rid,
+                                            "token": payload}))
+                else:
+                    remaining -= 1
+                    writer.write(sse_event(
+                        {"index": rid,
+                         "finish_reason": _finish_reason(
+                             payload, self.engine.eos_id),
+                         "n_tokens": len(payload.out_tokens)}))
+                await writer.drain()
+            writer.write(sse_done())
+            await writer.drain()
+        except (ConnectionResetError, BrokenPipeError):
+            await self._abort(eids)
+        finally:
+            eof_box[0].cancel()
+            with contextlib.suppress(asyncio.CancelledError):
+                await eof_box[0]
+
+    async def _respond_json(self, creq, q, eids, reqs, writer) -> None:
+        """Non-streaming mode: there is nothing incremental to deliver,
+        so the client socket is NOT watched for EOF — a legal HTTP
+        half-close (shutdown of the write side after the request) must
+        not abort the work.  A truly-gone client surfaces as a failed
+        response write instead."""
+        try:
+            remaining = creq.n
+            while remaining:
+                kind, _, payload = await q.get()
+                if kind == "done":
+                    remaining -= 1
+            choices = [{"index": r.rid, "tokens": list(r.out_tokens),
+                        "finish_reason": _finish_reason(
+                            r, self.engine.eos_id)} for r in reqs]
+            writer.write(json_response(200, "OK", {
+                "choices": choices,
+                "usage": {"prompt_tokens": len(creq.prompt),
+                          "completion_tokens": sum(
+                              len(r.out_tokens) for r in reqs)}}))
+            await writer.drain()
+        except (ConnectionResetError, BrokenPipeError):
+            await self._abort(eids)
+
+    # -- /metrics -------------------------------------------------------
+    async def _metrics(self) -> Dict:
+        if not self.driver.alive:
+            return {"gateway": dict(self.counters), "engine": None,
+                    "error": "engine driver not running"}
+        snap = await asyncio.wrap_future(self.driver.call(
+            lambda eng: {"engine": eng.summary(),
+                         "histograms": eng.telemetry.histograms(),
+                         "n_running": eng.n_running,
+                         "n_queued": eng.scheduler.n_queued,
+                         "kv_pages_free": eng.cache.allocator.n_free}))
+        snap["gateway"] = {**self.counters, "inflight": self._inflight,
+                           "max_pending": self.max_pending}
+        return snap

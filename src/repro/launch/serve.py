@@ -62,9 +62,21 @@ def main():
                          "half-width smoke draft of the same arch)")
     ap.add_argument("--spec-k", type=int, default=4,
                     help="draft window (tokens per verify step)")
+    ap.add_argument("--spec-autok", action="store_true",
+                    help="autotune the per-step draft length 1..k from "
+                         "an EMA of the measured acceptance rate")
     ap.add_argument("--no-prefix-cache", action="store_true",
                     help="disable radix-trie prefix sharing of prompt "
                          "KV pages (enabled by default)")
+    ap.add_argument("--gateway", action="store_true",
+                    help="serve HTTP instead of the offline request "
+                         "sweep: SSE streaming POST /v1/completions + "
+                         "GET /metrics until Ctrl-C")
+    ap.add_argument("--host", default="127.0.0.1")
+    ap.add_argument("--port", type=int, default=8151)
+    ap.add_argument("--max-pending", type=int, default=32,
+                    help="gateway backpressure: samples in flight before "
+                         "new requests get 429 + Retry-After")
     args = ap.parse_args()
 
     import jax
@@ -110,13 +122,24 @@ def main():
             spec_cfg = SpecConfig(k=args.spec_k, drafter="model",
                                   draft_model=draft,
                                   draft_params=dparams,
-                                  draft_page_size=args.page_size)
+                                  draft_page_size=args.page_size,
+                                  autok=args.spec_autok)
         else:
-            spec_cfg = SpecConfig(k=args.spec_k, drafter="ngram")
+            spec_cfg = SpecConfig(k=args.spec_k, drafter="ngram",
+                                  autok=args.spec_autok)
     eng = PagedServeEngine(
         model, params, max_batch=args.batch, max_seq=args.max_seq,
         page_size=args.page_size, n_pages=args.pages or None,
         spec=spec_cfg, prefix_cache=prefix_cache)
+    if args.gateway:
+        import asyncio
+        from repro.api import Gateway
+        gw = Gateway(eng, max_pending=args.max_pending)
+        try:
+            asyncio.run(gw.serve_forever(args.host, args.port))
+        except KeyboardInterrupt:
+            print("[api] gateway stopped")
+        return
     sampling = SamplingParams(temperature=args.temperature,
                               top_k=args.top_k, top_p=args.top_p)
     reqs = [ServeRequest(prompt=p, max_new_tokens=args.tokens, rid=i,

@@ -72,6 +72,7 @@ from .telemetry import Telemetry
 _CAPABILITY_REASONS = {
     "speculative-decoding": "verify/rollback cannot rewind",
     "prefix-cache": "page adoption cannot reproduce",
+    "parallel-sampling": "forked KV pages cannot clone",
 }
 
 
@@ -158,11 +159,42 @@ class PagedServeEngine:
         return self.n_running > 0 or self.scheduler.n_queued > 0
 
     def submit(self, req: ServeRequest) -> None:
+        if req.fork_from is not None and not self.model.supports_paged():
+            raise ValueError(capability_error(self.model,
+                                              "parallel-sampling"))
         now = self._clock()
         req.eid = self._next_eid      # rid is the caller's label and may
         self._next_eid += 1           # collide; eid keys cache/telemetry
         self.telemetry.enqueue(req.eid, now)
         self.scheduler.submit(req, now)
+
+    def cancel(self, eid: int) -> bool:
+        """Abort a submitted request wherever it is in its lifecycle —
+        queued, mid-prefill, mid-decode, or preempted-with-snapshot.
+        Frees its KV pages and lane (decref: pages shared with the
+        prefix trie or a fork survive), releases drafter state, closes
+        the telemetry trace.  Returns False when `eid` is unknown or
+        already finished.  NOT thread-safe against a concurrent
+        `step()`: callers off the engine thread route through the
+        gateway's EngineDriver, which runs cancels between steps."""
+        now = self._clock()
+        queued = self.scheduler.cancel(eid)
+        if queued is not None:      # mid-queue (possibly preempted: any
+            queued.done = True      # saved arena snapshot dies with it)
+            queued.saved_state = None
+            self.telemetry.cancel(eid, now)
+            return True
+        for lane, req in enumerate(self.lanes):
+            if req is not None and req.eid == eid:
+                req.done = True
+                req.cancelled = True
+                self.cache.release(eid)
+                self.lanes[lane] = None
+                if self.spec is not None:
+                    self.spec.drafter.release(lane)
+                self.telemetry.cancel(eid, now)
+                return True
+        return False
 
     def run(self, requests: List[ServeRequest]) -> List[ServeRequest]:
         for r in requests:
@@ -237,6 +269,23 @@ class PagedServeEngine:
                 or seq.length >= self.max_seq):
             req.done = True
             self.telemetry.done(req.eid, now)
+            if self.prefix is not None and seq.length > req.prompt_len:
+                # generated-suffix caching: the finished lane's KV holds
+                # prompt + generated rows — commit the full pages past
+                # the prompt too, so a follow-up turn that extends this
+                # completion (chat history growing turn by turn) adopts
+                # them instead of re-prefilling.  Materialized tokens
+                # run to seq.length (the final emitted token was never
+                # fed back), and insert() only commits full pages.  The
+                # prompt of a preempted-then-resumed request already
+                # contains out_tokens[:prompt_folded] — appending past
+                # the fold cursor keeps trie keys equal to the actual
+                # page contents.
+                full = np.concatenate(
+                    [np.asarray(req.prompt, np.int32),
+                     np.asarray(req.out_tokens[req.prompt_folded:],
+                                np.int32)])[:seq.length]
+                self.prefix.insert(full, seq.pages)
             self.cache.release(req.eid)
             self.lanes[lane] = None
             if self.spec is not None:
@@ -258,10 +307,22 @@ class PagedServeEngine:
             req.saved_length = self.cache.seqs[req.eid].length
             req.saved_prefill_done = req.prefill_done
         else:
+            # fold only the tokens generated SINCE the last fold: on a
+            # second preemption out_tokens[:prompt_folded] are already
+            # part of the prompt, and re-appending them would rebuild
+            # (and re-serve) a history with duplicated runs
             req.prompt = np.concatenate(
                 [np.asarray(req.prompt, np.int32),
-                 np.asarray(req.out_tokens, np.int32)])
+                 np.asarray(req.out_tokens[req.prompt_folded:],
+                            np.int32)])
+            req.prompt_folded = len(req.out_tokens)
             req.prefill_done = 0
+        # a preempted fork child rebuilds (prompt + generated) by
+        # prefill: its new prompt has diverged from the parent's pages,
+        # so re-admitting through the fork path would adopt KV rows for
+        # tokens it never saw — sever the link (and its skip accounting)
+        req.fork_from = None
+        req.forked_tokens = 0
         self.cache.release(req.eid)
         self.lanes[lane] = None
         if self.spec is not None:
@@ -271,7 +332,9 @@ class PagedServeEngine:
     # ------------------------------------------------------------------
     def step(self) -> None:
         now = self._clock()
-        for req in self.scheduler.admit(now, self.n_running, self.cache):
+        for req in self.scheduler.admit(
+                now, self.n_running, self.cache,
+                on_reject=lambda r: self.telemetry.done(r.eid, now)):
             lane = self.lanes.index(None)
             self.lanes[lane] = req
             self.telemetry.admit(req.eid, now)
@@ -285,7 +348,11 @@ class PagedServeEngine:
                     req.saved_state = None
                 else:       # fresh admission must never inherit a dead
                     self.arena.reset_lane(lane)     # lane's state
-            if self.prefix is not None:
+            if req.fork_from is not None:   # admitted via fork (even a
+                # 1-token prompt sharing 0 pages): the trie was never
+                # probed, so this is not a prefix lookup/miss
+                self.telemetry.fork(req.forked_tokens)
+            elif self.prefix is not None:
                 self.telemetry.prefix(req.prefix_cached)
 
         prefill_s = self._prefill_phase()
@@ -410,8 +477,9 @@ class PagedServeEngine:
         non-speculative engine either way.
         """
         spec = self.spec
-        k = spec.cfg.k
-        dec = self._decode_ready()
+        k = spec.cfg.k              # verify graph width: ALWAYS k_max +
+        k_draft = spec.current_k()  # 1; autok only narrows how much the
+        dec = self._decode_ready()  # drafter proposes (no retrace)
         if not dec:
             return 0.0, 0
 
@@ -420,15 +488,18 @@ class PagedServeEngine:
         for i in dec:
             req = self.lanes[i]
             if req.spec:
+                # out_tokens past the preemption fold cursor: a resumed
+                # request's prompt already holds the earlier ones
                 histories[i] = np.concatenate(
                     [np.asarray(req.prompt, np.int32),
-                     np.asarray(req.out_tokens, np.int32)])
+                     np.asarray(req.out_tokens[req.prompt_folded:],
+                                np.int32)])
                 smp[i] = req.sampling
         # drafting is part of the decode budget speculation spends —
         # timing it keeps tokens_per_s_decode (and spec_bench's speedup
         # column) honest about what a model drafter costs
         t0 = time.monotonic()
-        prop = spec.drafter.propose(histories, k, smp)
+        prop = spec.drafter.propose(histories, k_draft, smp)
         draft_s = time.monotonic() - t0
 
         tokens = np.zeros((self.max_batch, k + 1), np.int32)
@@ -492,6 +563,7 @@ class PagedServeEngine:
                 self._emit(req, tok, now)
             self._maybe_finish(i, now)
         self.telemetry.spec(drafted, accepted)
+        spec.observe(drafted, accepted)
         return dt, len(ready)
 
     # ------------------------------------------------------------------
@@ -499,6 +571,8 @@ class PagedServeEngine:
         s = self.telemetry.summary()
         s["cow_copies"] = float(self.cache.cow_copies)
         s["kv_pages_shared"] = float(self.cache.pages_shared)
+        if self.spec is not None:
+            s["spec_k_now"] = float(self.spec.current_k())
         if self.arena is not None:
             s["state_bytes"] = float(self.arena.state_bytes())
         if self.prefix is not None:

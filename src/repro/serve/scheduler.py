@@ -35,15 +35,30 @@ class ServeRequest:
     #   engine still serves spec=False lanes, one token per step, in the
     #   same shape-stable verify call with an empty draft window)
     on_token: Optional[Callable[[int, int], None]] = None  # (rid, token)
+    # parallel sampling: a request carrying `fork_from` (a sibling
+    # ServeRequest over the SAME prompt, submitted first) adopts the
+    # parent's prompt KV pages via `PagedKVCache.fork` at admission and
+    # prefills only the final prompt token — n samples off one prompt
+    # share its pages copy-on-write.  If the parent is gone before the
+    # child admits (finished, cancelled, rejected) the child falls back
+    # to a plain admission (possibly a prefix-cache hit).
+    fork_from: Optional["ServeRequest"] = None
 
     # lifecycle (engine-owned)
     out_tokens: List[int] = field(default_factory=list)
     done: bool = False
     rejected: bool = False                   # never ran: deadline/too big
     truncated: bool = False                  # evicted mid-generation
+    cancelled: bool = False                  # aborted by the caller
     prefill_done: int = 0                    # prompt tokens consumed
     prefix_cached: int = 0                   # prompt tokens adopted from
     t_enqueue: float = 0.0                   #   the prefix cache at admit
+    forked_tokens: int = 0                   # prompt tokens adopted by fork
+    prompt_folded: int = 0                   # out_tokens already folded
+    #   into prompt by preemption rebuilds (out_tokens[:prompt_folded]
+    #   appear in prompt; concatenating past this cursor, never the
+    #   whole list, is what keeps a twice-preempted prompt and the
+    #   suffix-cache commit free of duplicated token runs)
     eid: int = -1                            # engine-assigned unique id
     # preempted recurrent state (StateArena host snapshot): restored on
     # re-admission instead of re-prefilling prompt + generated tokens
@@ -92,8 +107,23 @@ class Scheduler:
     def n_queued(self) -> int:
         return len(self._heap)
 
+    def cancel(self, eid: int) -> Optional[ServeRequest]:
+        """Remove a queued request by engine id; returns it (marked
+        cancelled) or None when it is not queued.  The heap is small
+        (bounded by admission backpressure), so an eager O(n) sweep
+        beats carrying tombstones through every admit pass."""
+        for i, (_, _, _, req) in enumerate(self._heap):
+            if req.eid == eid:
+                req.cancelled = True
+                self._heap[i] = self._heap[-1]
+                self._heap.pop()
+                heapq.heapify(self._heap)
+                return req
+        return None
+
     # -- admission ------------------------------------------------------
-    def admit(self, now: float, n_running: int, cache) -> List[ServeRequest]:
+    def admit(self, now: float, n_running: int, cache,
+              on_reject=None) -> List[ServeRequest]:
         """Pop admissible requests: respects the lane budget and the
         allocator (fresh prompt pages + 1 growth page must be free or
         reclaimable from the prefix cache).  Prompt prefixes resident in
@@ -106,6 +136,8 @@ class Scheduler:
         max_tokens = cache.max_pages * cache.page_size
         while self._heap and n_running + len(admitted) < self.max_batch:
             prio, abs_dl, order, req = heapq.heappop(self._heap)
+            if req.cancelled:       # cancelled while queued (belt and
+                continue            # braces next to the eager sweep)
             need = cache.pages_needed(req.tokens_resident) + 1
             if (now > abs_dl or req.prompt_len == 0
                     or req.tokens_resident >= max_tokens
@@ -121,6 +153,36 @@ class Scheduler:
                 else:
                     req.rejected = True
                 req.done = True
+                if on_reject is not None:   # let the engine close the
+                    on_reject(req)          # telemetry trace
+                continue
+            parent = req.fork_from
+            if parent is not None and (parent.done or parent.cancelled):
+                parent = req.fork_from = None   # parent gone: the child
+                #   admits on its own (prefix-cache hit if the parent's
+                #   prompt pages were committed before release)
+            if parent is not None:
+                pseq = cache.seqs.get(parent.eid)
+                if pseq is None or parent.prefill_remaining > 0:
+                    # parent queued / mid-prefill / preempted: wait
+                    # WITHOUT head-of-line blocking — a preempted parent
+                    # may sit BEHIND this child in the very same heap,
+                    # and blocking here would deadlock its re-admission
+                    deferred.append((prio, abs_dl, order, req))
+                    continue
+                # share every full prompt page plus the partial tail;
+                # the final prompt token is always re-prefilled so this
+                # lane samples its OWN first token from its own logits
+                # (COW copies the tail page on that write)
+                prefix_len = min(max(req.prompt_len - 1, 0), pseq.length)
+                try:
+                    cache.fork(req.eid, parent.eid, prefix_len)
+                except OutOfPagesError:
+                    deferred.append((prio, abs_dl, order, req))
+                    break
+                req.prefill_done = prefix_len
+                req.forked_tokens = prefix_len
+                admitted.append(req)
                 continue
             match = cache.probe_admit(req.tokens_resident, req.prompt)
             if match is None:

@@ -28,8 +28,10 @@ class RequestTrace:
     t_enqueue: float = 0.0
     t_admit: Optional[float] = None
     t_first_token: Optional[float] = None
+    t_last_token: Optional[float] = None
     t_done: Optional[float] = None
     n_tokens: int = 0
+    cancelled: bool = False
 
     @property
     def queue_s(self) -> Optional[float]:
@@ -56,9 +58,37 @@ def _pct(vals: List[float], q: float) -> float:
         if vals else float("nan")
 
 
+# log-spaced latency buckets: 100 us .. 10 s plus an overflow bin — wide
+# enough for a jitted CPU smoke run and a loaded TPU server alike
+_HIST_EDGES = np.logspace(-4, 1, 11)
+
+
+def _hist(vals: List[float]) -> Dict[str, List]:
+    """Fixed-bucket histogram of latency seconds: `edges_s` brackets
+    every count; the first bucket reaches down to 0 and the last is
+    unbounded above, so no sample is ever silently dropped."""
+    edges = [0.0] + list(_HIST_EDGES) + [float("inf")]
+    counts, _ = np.histogram(np.asarray(vals, np.float64)
+                             if vals else np.zeros(0), bins=edges)
+    return {"edges_s": [0.0] + [float(e) for e in _HIST_EDGES] + ["inf"],
+            "counts": [int(c) for c in counts]}
+
+
+# retention caps: the gateway turned the engine into a long-running
+# server, so per-request traces and per-token gap samples can no longer
+# grow with total traffic served.  Percentiles/histograms roll over the
+# most recent window; monotonic counters (requests, tokens, ...) are
+# kept separately and never pruned.  Offline runs and every test/bench
+# config sit far below both caps, so their rollups are exact.
+MAX_DONE_TRACES = 4096
+MAX_ITL_SAMPLES = 16384
+
+
 class Telemetry:
     def __init__(self):
         self.traces: Dict[int, RequestTrace] = {}
+        self.requests_total = 0
+        self._done_order: List[int] = []     # finished eids, oldest first
         self.occupancy_samples: List[float] = []
         self.state_occupancy_samples: List[float] = []  # StateArena lanes
         self.decode_family: Optional[str] = None     # labels lane_steps_*
@@ -76,14 +106,25 @@ class Telemetry:
         self.prefix_lookups = 0      # admissions probing the prefix cache
         self.prefix_hits = 0         # admissions that adopted >= 1 page
         self.prefill_tokens_skipped = 0   # prompt tokens never prefilled
+        self.fork_admissions = 0     # lanes admitted via PagedKVCache.fork
+        self.cancelled = 0           # requests aborted before completion
+        self.itl_samples: List[float] = []   # gaps between emitted tokens
         self.t_start: Optional[float] = None
         self.t_end: Optional[float] = None
 
     # -- request lifecycle ---------------------------------------------
     def enqueue(self, rid: int, now: float):
         self.traces[rid] = RequestTrace(rid=rid, t_enqueue=now)
+        self.requests_total += 1
         if self.t_start is None:
             self.t_start = now
+
+    def _retire(self, rid: int):
+        """Bound trace retention: finished traces past the window are
+        dropped oldest-first (live traces are never touched)."""
+        self._done_order.append(rid)
+        while len(self._done_order) > MAX_DONE_TRACES:
+            self.traces.pop(self._done_order.pop(0), None)
 
     def admit(self, rid: int, now: float):
         self.traces[rid].t_admit = now
@@ -94,6 +135,14 @@ class Telemetry:
         tr = self.traces[rid]
         if tr.t_first_token is None:
             tr.t_first_token = now
+        elif tr.t_last_token is not None:
+            # measured gap between consecutive emissions of one request
+            # (the streaming client's experience, unlike tpot's
+            # first-to-done mean)
+            self.itl_samples.append(max(now - tr.t_last_token, 0.0))
+            if len(self.itl_samples) > MAX_ITL_SAMPLES:
+                del self.itl_samples[:MAX_ITL_SAMPLES // 2]
+        tr.t_last_token = now
         tr.n_tokens += 1
         self.tokens += 1
         if decode:
@@ -103,6 +152,18 @@ class Telemetry:
     def done(self, rid: int, now: float):
         self.traces[rid].t_done = now
         self.t_end = now
+        self._retire(rid)
+
+    def cancel(self, rid: int, now: float):
+        """Request aborted (client disconnect / explicit cancel): the
+        trace closes so percentile rollups stay well-defined, and the
+        request is counted separately from clean completions."""
+        tr = self.traces[rid]
+        tr.t_done = now
+        tr.cancelled = True
+        self.cancelled += 1
+        self.t_end = now
+        self._retire(rid)
 
     # -- engine gauges --------------------------------------------------
     def step(self, occupancy: float, batch: int, decode_s: float = 0.0,
@@ -143,6 +204,14 @@ class Telemetry:
             self.prefix_hits += 1
             self.prefill_tokens_skipped += cached_tokens
 
+    def fork(self, cached_tokens: int):
+        """One admission served by `PagedKVCache.fork` (parallel
+        sampling): `cached_tokens` prompt tokens were adopted from the
+        parent lane instead of prefilled.  Kept out of the prefix-cache
+        hit rate — the trie was never probed."""
+        self.fork_admissions += 1
+        self.prefill_tokens_skipped += cached_tokens
+
     # -- rollup ---------------------------------------------------------
     def summary(self) -> Dict[str, float]:
         ttft = [t.ttft_s for t in self.traces.values()
@@ -155,7 +224,7 @@ class Telemetry:
                 if self.t_start is not None and self.t_end is not None
                 and self.t_end > self.t_start else 0.0)
         return {
-            "requests": float(len(self.traces)),
+            "requests": float(self.requests_total),
             "tokens": float(self.tokens),
             "prefill_tokens": float(self.prefill_tokens),
             "steps": float(self.steps),
@@ -175,11 +244,19 @@ class Telemetry:
             "prefix_hit_rate": (self.prefix_hits / self.prefix_lookups
                                 if self.prefix_lookups else float("nan")),
             "prefill_tokens_skipped": float(self.prefill_tokens_skipped),
+            "fork_admissions": float(self.fork_admissions),
+            "cancelled": float(self.cancelled),
             "ttft_mean_s": (float(np.mean(ttft)) if ttft
                             else float("nan")),
-            "ttft_p50_s": _pct(ttft, 50), "ttft_p99_s": _pct(ttft, 99),
-            "tpot_p50_s": _pct(tpot, 50), "tpot_p99_s": _pct(tpot, 99),
-            "queue_p50_s": _pct(queue, 50), "queue_p99_s": _pct(queue, 99),
+            "ttft_p50_s": _pct(ttft, 50), "ttft_p95_s": _pct(ttft, 95),
+            "ttft_p99_s": _pct(ttft, 99),
+            "tpot_p50_s": _pct(tpot, 50), "tpot_p95_s": _pct(tpot, 95),
+            "tpot_p99_s": _pct(tpot, 99),
+            "itl_p50_s": _pct(self.itl_samples, 50),
+            "itl_p95_s": _pct(self.itl_samples, 95),
+            "itl_p99_s": _pct(self.itl_samples, 99),
+            "queue_p50_s": _pct(queue, 50), "queue_p95_s": _pct(queue, 95),
+            "queue_p99_s": _pct(queue, 99),
             "kv_occupancy_mean": (float(np.mean(self.occupancy_samples))
                                   if self.occupancy_samples else 0.0),
             "kv_occupancy_peak": (float(np.max(self.occupancy_samples))
@@ -196,3 +273,14 @@ class Telemetry:
                 float(self.decode_lane_steps)}
                if self.decode_family is not None else {}),
         }
+
+    def histograms(self) -> Dict[str, Dict[str, List]]:
+        """Latency distributions as fixed log-spaced buckets (the
+        gateway `/metrics` payload: percentiles compress, histograms
+        compose across scrapes)."""
+        ttft = [t.ttft_s for t in self.traces.values()
+                if t.ttft_s is not None]
+        queue = [t.queue_s for t in self.traces.values()
+                 if t.queue_s is not None]
+        return {"ttft_s": _hist(ttft), "queue_s": _hist(queue),
+                "itl_s": _hist(self.itl_samples)}

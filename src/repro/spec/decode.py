@@ -37,6 +37,12 @@ class SpecConfig:
     draft_page_size: int = 16
     draft_chunk: int = 16            # draft-cache catch-up chunk width
     seed: int = 0
+    # drafter-k autotuning: an EMA of the measured acceptance rate
+    # scales how much the drafter proposes each step, between 1 and k.
+    # The verify graph stays (b, k + 1) — autok never retraces jit, it
+    # only stops paying draft cost speculation isn't earning back.
+    autok: bool = False
+    autok_beta: float = 0.3          # EMA weight of the newest step
 
 
 class SpecDecoder:
@@ -47,6 +53,9 @@ class SpecDecoder:
         self.verify_fn = jax.jit(model.paged_verify_step,
                                  donate_argnums=(1,))
         self.rng = np.random.default_rng(spec_cfg.seed)
+        # autok state: start the EMA mid-range so the first steps draft
+        # a middling window, then let measurement pull it either way
+        self._accept_ema = 0.5
         if spec_cfg.drafter == "ngram":
             self.drafter: Drafter = NGramDrafter(spec_cfg.ngram_max,
                                                  spec_cfg.ngram_min)
@@ -72,3 +81,22 @@ class SpecDecoder:
         """Delegate one lane's walk to the acceptance rule with the
         decoder's RNG (one stream for the whole engine, seeded)."""
         return accept_draft(p_logits, draft, q_probs, sampling, self.rng)
+
+    # -- drafter-k autotuning ------------------------------------------
+    def current_k(self) -> int:
+        """Tokens the drafter should propose this step: cfg.k when
+        autok is off, else 1..cfg.k scaled by the acceptance EMA (a
+        drafter being accepted everywhere earns the full window; one
+        being rejected stops burning draft compute on dead tokens)."""
+        if not self.cfg.autok or self.cfg.k == 1:
+            return self.cfg.k
+        return 1 + int(round(self._accept_ema * (self.cfg.k - 1)))
+
+    def observe(self, drafted: int, accepted: int) -> None:
+        """Fold one verify step's measured acceptance into the EMA
+        (steps that drafted nothing carry no signal and are skipped)."""
+        if not self.cfg.autok or drafted == 0:
+            return
+        beta = self.cfg.autok_beta
+        self._accept_ema = ((1.0 - beta) * self._accept_ema
+                            + beta * accepted / drafted)

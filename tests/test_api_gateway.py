@@ -1,0 +1,583 @@
+"""Gateway e2e over real sockets: SSE streaming byte-identical to the
+offline engine, n>1 parallel sampling via KV fork, disconnect
+cancellation leaving zero leaked pages, deterministic 429 backpressure,
+protocol validation, and the /metrics payload."""
+import asyncio
+import json
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import Gateway, iter_sse
+from repro.api.protocol import ProtocolError, parse_completion, sanitize
+from repro.models import DecoderLM, ModelConfig, init_params
+from repro.serve import PagedServeEngine, ServeRequest
+
+
+def _model():
+    cfg = ModelConfig(name="s", family="dense", n_layers=2, d_model=32,
+                      n_heads=2, n_kv_heads=2, d_ff=64, vocab=64,
+                      head_dim=16, dtype="float32", remat=False)
+    model = DecoderLM(cfg)
+    params = init_params(model.param_specs(), jax.random.PRNGKey(0),
+                         dtype_override=jnp.float32)
+    return model, params
+
+
+@pytest.fixture(scope="module")
+def model_params():
+    return _model()
+
+
+def _engine(model, params, **kw):
+    kw.setdefault("max_batch", 4)
+    kw.setdefault("max_seq", 64)
+    kw.setdefault("page_size", 8)
+    return PagedServeEngine(model, params, **kw)
+
+
+async def _raw_post(host, port, payload: bytes, path="/v1/completions"):
+    reader, writer = await asyncio.open_connection(host, port)
+    writer.write((f"POST {path} HTTP/1.1\r\nHost: t\r\n"
+                  f"Content-Length: {len(payload)}\r\n\r\n"
+                  ).encode() + payload)
+    await writer.drain()
+    data = await reader.read()
+    writer.close()
+    return data
+
+
+async def _post(host, port, body: dict):
+    return await _raw_post(host, port, json.dumps(body).encode())
+
+
+async def _get(host, port, path):
+    reader, writer = await asyncio.open_connection(host, port)
+    writer.write(f"GET {path} HTTP/1.1\r\nHost: t\r\n\r\n".encode())
+    await writer.drain()
+    data = await reader.read()
+    writer.close()
+    return data
+
+
+def _status(raw: bytes) -> int:
+    return int(raw.split(b"\r\n", 1)[0].split()[1])
+
+
+def _body(raw: bytes) -> bytes:
+    return raw.partition(b"\r\n\r\n")[2]
+
+
+def _stream_tokens(raw: bytes):
+    """index -> [tokens], plus finish events, from an SSE response."""
+    toks, fins = {}, {}
+    for e in iter_sse(_body(raw)):
+        if "token" in e:
+            toks.setdefault(e["index"], []).append(e["token"])
+        elif "finish_reason" in e:
+            fins[e["index"]] = e["finish_reason"]
+    return toks, fins
+
+
+# ----------------------------------------------------------------------------
+# e2e: streaming output is byte-identical to the offline engine
+# ----------------------------------------------------------------------------
+def test_gateway_sse_greedy_byte_identical_to_offline(model_params):
+    model, params = model_params
+    prompts = [np.array([1, 2, 3], np.int32),
+               np.array([5, 6, 7, 8, 9, 10, 11], np.int32),
+               np.array([40, 2, 9, 9], np.int32)]
+
+    offline = _engine(model, params)
+    reqs = [ServeRequest(prompt=p.copy(), max_new_tokens=6, rid=i)
+            for i, p in enumerate(prompts)]
+    offline.run(reqs)
+    ref = [r.out_tokens for r in reqs]
+
+    async def run():
+        gw = Gateway(_engine(model, params), max_pending=16)
+        host, port = await gw.start()
+        try:
+            # concurrent submission: continuous batching must not
+            # change any stream
+            raws = await asyncio.gather(*[
+                _post(host, port,
+                      {"prompt": [int(t) for t in p], "max_tokens": 6})
+                for p in prompts])
+        finally:
+            await gw.stop()
+        return raws
+
+    raws = asyncio.run(run())
+    for raw, want in zip(raws, ref):
+        assert _status(raw) == 200
+        toks, fins = _stream_tokens(raw)
+        assert toks[0] == want, "gateway stream diverged from offline"
+        assert fins[0] == "length"
+
+
+def test_gateway_json_mode_and_usage(model_params):
+    model, params = model_params
+
+    async def run():
+        gw = Gateway(_engine(model, params), max_pending=16)
+        host, port = await gw.start()
+        try:
+            raw = await _post(host, port, {"prompt": [1, 2, 3],
+                                           "max_tokens": 4,
+                                           "stream": False})
+        finally:
+            await gw.stop()
+        return raw
+
+    raw = asyncio.run(run())
+    assert _status(raw) == 200
+    out = json.loads(_body(raw))
+    assert len(out["choices"]) == 1
+    assert len(out["choices"][0]["tokens"]) == 4
+    assert out["usage"] == {"prompt_tokens": 3, "completion_tokens": 4}
+
+
+# ----------------------------------------------------------------------------
+# n>1 parallel sampling via PagedKVCache.fork
+# ----------------------------------------------------------------------------
+def test_gateway_parallel_sampling_forks_share_prompt_pages(model_params):
+    model, params = model_params
+
+    async def run():
+        gw = Gateway(_engine(model, params), max_pending=16)
+        host, port = await gw.start()
+        try:
+            raw = await _post(host, port, {
+                "prompt": list(range(1, 18)), "max_tokens": 8,
+                "temperature": 1.5, "n": 4})
+            metrics = json.loads(_body(await _get(host, port,
+                                                  "/metrics")))
+        finally:
+            await gw.stop()
+        return raw, metrics
+
+    raw, metrics = asyncio.run(run())
+    assert _status(raw) == 200
+    toks, fins = _stream_tokens(raw)
+    assert sorted(toks) == [0, 1, 2, 3], "all four samples streamed"
+    assert all(len(v) == 8 for v in toks.values())
+    assert set(fins.values()) == {"length"}
+    # prompt pages are fork-shared, and sampling diversifies the forks
+    eng = metrics["engine"]
+    assert eng["kv_pages_shared"] > 0
+    assert eng["fork_admissions"] == 3
+    assert eng["prefill_tokens_skipped"] >= 3 * 16
+    assert len({tuple(v) for v in toks.values()}) > 1, \
+        "temperature sampling must diversify the forked samples"
+
+
+def test_gateway_parallel_sampling_greedy_forks_match_primary(
+        model_params):
+    """Greedy n>1 is the sharpest correctness probe: every fork
+    re-prefills only the last prompt token over shared pages, so any
+    KV corruption from fork/COW shows up as a diverged stream."""
+    model, params = model_params
+
+    async def run():
+        gw = Gateway(_engine(model, params), max_pending=16)
+        host, port = await gw.start()
+        try:
+            raw = await _post(host, port, {
+                "prompt": list(range(1, 14)), "max_tokens": 6, "n": 3})
+        finally:
+            await gw.stop()
+        return raw
+
+    toks, _ = _stream_tokens(asyncio.run(run()))
+    assert toks[1] == toks[0] and toks[2] == toks[0], \
+        "greedy forks must reproduce the primary stream exactly"
+
+
+# ----------------------------------------------------------------------------
+# cancellation on client disconnect
+# ----------------------------------------------------------------------------
+def test_gateway_disconnect_mid_stream_frees_all_pages(model_params):
+    model, params = model_params
+
+    async def run():
+        eng = _engine(model, params, n_pages=32)
+        gw = Gateway(eng, max_pending=16)
+        host, port = await gw.start()
+        try:
+            payload = json.dumps({"prompt": [3, 4, 5, 6, 7, 8, 9, 10, 11],
+                                  "max_tokens": 50, "n": 2,
+                                  "temperature": 1.0}).encode()
+            reader, writer = await asyncio.open_connection(host, port)
+            writer.write((f"POST /v1/completions HTTP/1.1\r\nHost: t\r\n"
+                          f"Content-Length: {len(payload)}\r\n\r\n"
+                          ).encode() + payload)
+            await writer.drain()
+            await reader.read(256)          # a few SSE events arrived
+            writer.close()                  # hang up mid-generation
+            await writer.wait_closed()
+            for _ in range(100):            # wait for the abort to land
+                state = await asyncio.wrap_future(gw.driver.call(
+                    lambda e: (e.cache.n_free_or_cached(),
+                               e.cache.allocator.n_pages, e.n_running,
+                               e.scheduler.n_queued,
+                               e.telemetry.cancelled)))
+                if state[4] > 0 and state[2] == 0 and state[3] == 0:
+                    break
+                await asyncio.sleep(0.05)
+        finally:
+            await gw.stop()
+        return state
+
+    free_or_cached, n_pages, running, queued, cancelled = asyncio.run(run())
+    assert cancelled >= 1, "disconnect must cancel the in-flight samples"
+    assert running == 0 and queued == 0
+    assert free_or_cached == n_pages, \
+        "disconnect leaked KV pages (not free and not trie-reclaimable)"
+
+
+# ----------------------------------------------------------------------------
+# backpressure
+# ----------------------------------------------------------------------------
+def test_gateway_429_with_retry_after_when_saturated(model_params):
+    """Deterministic: park the engine thread on an event so the first
+    request pins the admission budget, then assert the second sheds."""
+    model, params = model_params
+
+    async def run():
+        gw = Gateway(_engine(model, params), max_pending=1)
+        host, port = await gw.start()
+        gate = threading.Event()
+        try:
+            gw.driver.call(lambda e: gate.wait(30))     # park the driver
+            first = asyncio.ensure_future(
+                _post(host, port, {"prompt": [1, 2], "max_tokens": 2}))
+            # the first request is accepted (inflight 1) before the
+            # second arrives — admission is event-loop-side state
+            for _ in range(200):
+                if gw.counters["accepted_samples"] == 1:
+                    break
+                await asyncio.sleep(0.01)
+            second = await _post(host, port,
+                                 {"prompt": [3, 4], "max_tokens": 2})
+            gate.set()
+            first_raw = await first
+        finally:
+            gate.set()
+            await gw.stop()
+        return first_raw, second
+
+    first_raw, second = asyncio.run(run())
+    assert _status(first_raw) == 200
+    assert _status(second) == 429
+    assert b"retry-after" in second.lower()
+    body = json.loads(_body(second))
+    assert "error" in body
+
+
+# ----------------------------------------------------------------------------
+# protocol validation + metrics payload
+# ----------------------------------------------------------------------------
+def test_parse_completion_rejects_malformed_bodies():
+    for bad, why in [
+            (b"", "not JSON"),
+            (b"[1,2]", "not an object"),
+            (b'{"prompt": "hi"}', "string prompt (no tokenizer)"),
+            (b'{"prompt": []}', "empty prompt"),
+            (b'{"prompt": [1, -2]}', "negative token"),
+            (b'{"prompt": [1, 99]}', "token out of vocab"),
+            (b'{"prompt": [1], "max_tokens": 0}', "zero budget"),
+            (b'{"prompt": [1], "n": 99}', "n beyond max_n"),
+            (b'{"prompt": [1], "temperature": -1}', "bad temperature"),
+            (b'{"prompt": [1], "top_p": 2.0}', "bad top_p"),
+            (b'{"prompt": [1], "deadline_s": 0}', "bad deadline")]:
+        with pytest.raises(ProtocolError):
+            parse_completion(bad, vocab=64, max_n=8)
+    req = parse_completion(b'{"prompt": [1, 2], "n": 2, "stream": false}',
+                           vocab=64)
+    assert req.n == 2 and req.stream is False
+
+
+def test_gateway_http_errors(model_params):
+    model, params = model_params
+
+    async def run():
+        gw = Gateway(_engine(model, params), max_pending=4)
+        host, port = await gw.start()
+        try:
+            bad = await _raw_post(host, port, b"not json")
+            missing = await _get(host, port, "/nope")
+            health = await _get(host, port, "/healthz")
+        finally:
+            await gw.stop()
+        return bad, missing, health
+
+    bad, missing, health = asyncio.run(run())
+    assert _status(bad) == 400
+    assert _status(missing) == 404
+    assert _status(health) == 200 and json.loads(_body(health))["ok"]
+
+
+def test_gateway_metrics_percentiles_and_histograms(model_params):
+    model, params = model_params
+
+    async def run():
+        gw = Gateway(_engine(model, params), max_pending=16)
+        host, port = await gw.start()
+        try:
+            for _ in range(2):
+                await _post(host, port, {"prompt": [1, 2, 3],
+                                         "max_tokens": 4})
+            raw = await _get(host, port, "/metrics")
+        finally:
+            await gw.stop()
+        return raw
+
+    m = json.loads(_body(asyncio.run(run())))   # strict JSON (no NaN)
+    eng = m["engine"]
+    for key in ("ttft_p50_s", "ttft_p95_s", "ttft_p99_s", "itl_p50_s",
+                "itl_p95_s", "itl_p99_s", "queue_p95_s", "cancelled",
+                "fork_admissions"):
+        assert key in eng, key
+    assert eng["ttft_p95_s"] is not None
+    hist = m["histograms"]
+    for name in ("ttft_s", "queue_s", "itl_s"):
+        h = hist[name]
+        assert len(h["counts"]) == len(h["edges_s"]) - 1
+    # every measured TTFT landed in some bucket
+    assert sum(hist["ttft_s"]["counts"]) == 2
+    assert m["gateway"]["accepted_samples"] == 2
+    assert m["gateway"]["inflight"] == 0
+
+
+def test_sanitize_strips_nonfinite():
+    out = sanitize({"a": float("nan"), "b": [1.0, float("inf")],
+                    "c": {"d": 2}})
+    assert out == {"a": None, "b": [1.0, None], "c": {"d": 2}}
+    json.dumps(out, allow_nan=False)        # must not raise
+
+
+def test_gateway_stray_trailing_byte_does_not_abort_stream(model_params):
+    """A client that sends a stray byte after the body (trailing CRLF,
+    half-baked pipelining) must still receive its full stream — only a
+    true EOF or a broken socket is a disconnect."""
+    model, params = model_params
+
+    async def run():
+        gw = Gateway(_engine(model, params), max_pending=8)
+        host, port = await gw.start()
+        try:
+            payload = json.dumps({"prompt": [1, 2, 3],
+                                  "max_tokens": 5}).encode()
+            reader, writer = await asyncio.open_connection(host, port)
+            writer.write((f"POST /v1/completions HTTP/1.1\r\nHost: t\r\n"
+                          f"Content-Length: {len(payload)}\r\n\r\n"
+                          ).encode() + payload + b"\r\n")   # stray bytes
+            await writer.drain()
+            raw = await reader.read()
+            writer.close()
+        finally:
+            await gw.stop()
+        return raw
+
+    raw = asyncio.run(run())
+    assert _status(raw) == 200
+    toks, fins = _stream_tokens(raw)
+    assert len(toks[0]) == 5 and fins[0] == "length"
+    assert b"[DONE]" in raw
+
+
+def test_gateway_healthz_503_when_driver_dead(model_params):
+    model, params = model_params
+
+    async def run():
+        gw = Gateway(_engine(model, params), max_pending=8)
+        host, port = await gw.start()
+        try:
+            ok = await _get(host, port, "/healthz")
+            gw.driver.stop()                    # engine thread gone
+            dead = await _get(host, port, "/healthz")
+        finally:
+            await gw.stop()
+        return ok, dead
+
+    ok, dead = asyncio.run(run())
+    assert _status(ok) == 200
+    assert _status(dead) == 503, \
+        "a dead engine driver must fail status-code liveness probes"
+
+
+def test_telemetry_retention_is_bounded():
+    """The gateway runs the engine indefinitely: traces and ITL samples
+    must not grow with total traffic served, while monotonic counters
+    keep exact totals."""
+    from repro.serve.telemetry import (MAX_DONE_TRACES, MAX_ITL_SAMPLES,
+                                       Telemetry)
+    t = Telemetry()
+    n = MAX_DONE_TRACES + 500
+    for rid in range(n):
+        t.enqueue(rid, float(rid))
+        t.token(rid, float(rid) + 0.1, decode=False)
+        for j in range(2, 6):
+            t.token(rid, float(rid) + 0.1 * j)
+        t.done(rid, float(rid) + 1.0)
+    assert len(t.traces) <= MAX_DONE_TRACES
+    assert len(t.itl_samples) <= MAX_ITL_SAMPLES
+    s = t.summary()
+    assert s["requests"] == float(n), "monotonic totals stay exact"
+    assert s["tokens"] == float(5 * n)
+    assert np.isfinite(s["ttft_p99_s"]) and np.isfinite(s["itl_p95_s"])
+
+
+def test_gateway_completions_503_when_driver_dead(model_params):
+    """A dead engine thread must fail requests fast (503), not hang
+    the handler and leak the admission budget."""
+    model, params = model_params
+
+    async def run():
+        gw = Gateway(_engine(model, params), max_pending=8)
+        host, port = await gw.start()
+        try:
+            gw.driver.stop()
+            raw = await _post(host, port, {"prompt": [1, 2],
+                                           "max_tokens": 2})
+            inflight = gw._inflight
+        finally:
+            await gw.stop()
+        return raw, inflight
+
+    raw, inflight = asyncio.run(run())
+    assert _status(raw) == 503
+    assert inflight == 0, "rejected request must not leak the budget"
+
+
+def test_gateway_malformed_framing_gets_400_not_crash(model_params):
+    model, params = model_params
+
+    async def run():
+        gw = Gateway(_engine(model, params), max_pending=8)
+        host, port = await gw.start()
+        out = []
+        try:
+            for raw_req in [
+                    b"POST /v1/completions HTTP/1.1\r\nHost: t\r\n"
+                    b"Content-Length: -1\r\n\r\n",
+                    b"GARBAGE\r\n\r\n",
+                    b"POST /v1/completions HTTP/1.1\r\nHost: t\r\n"
+                    b"Content-Length: 99999999999\r\n\r\n"]:
+                reader, writer = await asyncio.open_connection(host, port)
+                writer.write(raw_req)
+                await writer.drain()
+                out.append(await reader.read())
+                writer.close()
+            health = await _get(host, port, "/healthz")
+        finally:
+            await gw.stop()
+        return out, health
+
+    out, health = asyncio.run(run())
+    for raw in out:
+        assert _status(raw) == 400, raw[:80]
+    assert _status(health) == 200, "malformed framing must not kill it"
+
+
+def test_gateway_json_mode_survives_client_half_close(model_params):
+    """stream=false with a client that half-closes its write side after
+    the request (legal HTTP/1.1) must still produce the completion."""
+    model, params = model_params
+
+    async def run():
+        gw = Gateway(_engine(model, params), max_pending=8)
+        host, port = await gw.start()
+        try:
+            payload = json.dumps({"prompt": [2, 3, 4], "max_tokens": 3,
+                                  "stream": False}).encode()
+            reader, writer = await asyncio.open_connection(host, port)
+            writer.write((f"POST /v1/completions HTTP/1.1\r\nHost: t\r\n"
+                          f"Content-Length: {len(payload)}\r\n\r\n"
+                          ).encode() + payload)
+            await writer.drain()
+            writer.write_eof()          # half-close: still reading
+            raw = await reader.read()
+            writer.close()
+        finally:
+            await gw.stop()
+        return raw
+
+    raw = asyncio.run(run())
+    assert _status(raw) == 200
+    body = json.loads(_body(raw))
+    assert len(body["choices"][0]["tokens"]) == 3
+    assert body["choices"][0]["finish_reason"] == "length"
+
+
+def test_driver_fatal_step_error_fails_watchers_and_future_calls():
+    """A fatal engine.step() must not strand clients: watched requests
+    are failed (on_done fires, inflight budget releases) and later
+    driver.call()s fail fast instead of hanging forever."""
+    import time as _time
+    from types import SimpleNamespace
+
+    from repro.api import EngineDriver
+
+    class ExplodingEngine:
+        busy = True
+
+        def __init__(self):
+            self._eid = 0
+
+        def submit(self, r):
+            r.eid = self._eid
+            self._eid += 1
+
+        def step(self):
+            raise RuntimeError("device on fire")
+
+    drv = EngineDriver(ExplodingEngine())
+    req = SimpleNamespace(done=False, cancelled=False, rid=0, eid=-1)
+    fired = []
+    drv.submit([req], fired.append)
+    drv.start()
+    for _ in range(200):
+        if not drv.alive:
+            break
+        _time.sleep(0.01)
+    assert not drv.alive and isinstance(drv.error, RuntimeError)
+    assert req.done and req.cancelled, "in-flight request failed over"
+    assert fired == [req], "on_done fired exactly once"
+    with pytest.raises(RuntimeError):
+        drv.call(lambda e: None).result(timeout=5)
+
+
+def test_read_http_request_rejects_header_floods():
+    from repro.api.protocol import read_http_request
+
+    async def parse(raw: bytes):
+        reader = asyncio.StreamReader()
+        reader.feed_data(raw)
+        reader.feed_eof()
+        return await read_http_request(reader)
+
+    flood = (b"GET / HTTP/1.1\r\n"
+             + b"".join(b"x%d: y\r\n" % i for i in range(1000))
+             + b"\r\n")
+    with pytest.raises(ProtocolError, match="too many headers"):
+        asyncio.run(parse(flood))
+    # a normal request with plenty of headroom still parses
+    method, path, headers, body = asyncio.run(parse(
+        b"POST /p HTTP/1.1\r\nA: 1\r\nContent-Length: 2\r\n\r\nhi"))
+    assert (method, path, body) == ("POST", "/p", b"hi")
+    assert headers["a"] == "1"
+
+
+def test_parse_completion_spec_and_stream_are_strict_bools():
+    for key in ("stream", "spec"):
+        with pytest.raises(ProtocolError, match=key):
+            parse_completion(
+                json.dumps({"prompt": [1], key: "false"}).encode(),
+                vocab=64)
+    req = parse_completion(b'{"prompt": [1], "spec": false}', vocab=64)
+    assert req.spec is False and req.stream is True

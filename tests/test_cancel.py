@@ -1,0 +1,200 @@
+"""Engine abort hardening: `PagedServeEngine.cancel` mid-queue,
+mid-prefill, mid-decode, and under random abort interleavings — page
+and lane conservation throughout (seeded-random property style, same as
+tests/test_prefix_cache.py; hypothesis is not in the container)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import DecoderLM, ModelConfig, init_params
+from repro.serve import PagedServeEngine, SamplingParams, ServeRequest
+
+
+def _model():
+    cfg = ModelConfig(name="s", family="dense", n_layers=2, d_model=32,
+                      n_heads=2, n_kv_heads=2, d_ff=64, vocab=64,
+                      head_dim=16, dtype="float32", remat=False)
+    model = DecoderLM(cfg)
+    params = init_params(model.param_specs(), jax.random.PRNGKey(0),
+                         dtype_override=jnp.float32)
+    return model, params
+
+
+MODEL, PARAMS = _model()
+
+
+def _engine(**kw):
+    kw.setdefault("max_batch", 2)
+    kw.setdefault("max_seq", 64)
+    kw.setdefault("page_size", 4)
+    return PagedServeEngine(MODEL, PARAMS, **kw)
+
+
+def _drained(eng):
+    return (eng.cache.n_free_or_cached() == eng.cache.allocator.n_pages
+            and all(r is None for r in eng.lanes)
+            and eng.scheduler.n_queued == 0)
+
+
+def test_cancel_queued_request_never_runs():
+    eng = _engine(max_batch=1)
+    a = ServeRequest(prompt=np.array([1, 2, 3], np.int32),
+                     max_new_tokens=4, rid=0)
+    b = ServeRequest(prompt=np.array([4, 5, 6], np.int32),
+                     max_new_tokens=4, rid=1)
+    eng.submit(a)
+    eng.submit(b)                   # queued behind a (one lane)
+    assert eng.cancel(b.eid)
+    while eng.busy:
+        eng.step()
+    assert a.done and len(a.out_tokens) == 4
+    assert b.cancelled and b.out_tokens == []
+    assert _drained(eng)
+    assert eng.summary()["cancelled"] == 1.0
+
+
+def test_cancel_mid_prefill_frees_pages_and_lane():
+    eng = _engine(prefill_chunk=4)
+    req = ServeRequest(prompt=np.arange(20, dtype=np.int32),
+                       max_new_tokens=8, rid=0)
+    eng.submit(req)
+    eng.step()                      # admitted; one 4-token chunk done
+    assert 0 < req.prefill_done < req.prompt_len, "mid-prefill"
+    assert eng.cancel(req.eid)
+    assert req.cancelled and not eng.busy
+    assert _drained(eng)
+    # engine still serves new traffic on the freed lane
+    nxt = ServeRequest(prompt=np.array([7, 8, 9], np.int32),
+                       max_new_tokens=3, rid=1)
+    eng.run([nxt])
+    assert nxt.done and len(nxt.out_tokens) == 3
+
+
+def test_cancel_mid_decode_keeps_partial_output_and_frees_pages():
+    eng = _engine()
+    req = ServeRequest(prompt=np.array([1, 2, 3], np.int32),
+                       max_new_tokens=50, rid=0)
+    eng.submit(req)
+    for _ in range(4):
+        eng.step()
+    assert len(req.out_tokens) >= 2, "decoding started"
+    got = list(req.out_tokens)
+    assert eng.cancel(req.eid)
+    assert req.out_tokens == got, "partial output stands"
+    assert _drained(eng)
+    assert not eng.cancel(req.eid), "double-cancel reports unknown"
+
+
+def test_cancel_unknown_and_finished_ids_return_false():
+    eng = _engine()
+    req = ServeRequest(prompt=np.array([1, 2], np.int32),
+                       max_new_tokens=2, rid=0)
+    eng.run([req])
+    assert not eng.cancel(req.eid), "finished request is not cancellable"
+    assert not eng.cancel(12345)
+
+
+def test_cancel_fork_parent_falls_back_children_complete():
+    """Canceling the parent mid-prefill must not strand fork children:
+    they fall back to plain admission and still finish."""
+    eng = _engine(max_batch=4, prefill_chunk=4)
+    prompt = np.arange(1, 18, dtype=np.int32)
+    parent = ServeRequest(prompt=prompt.copy(), max_new_tokens=6, rid=0)
+    kids = [ServeRequest(prompt=prompt.copy(), max_new_tokens=6, rid=i,
+                         fork_from=parent) for i in (1, 2)]
+    eng.submit(parent)
+    for k in kids:
+        eng.submit(k)
+    eng.step()                      # parent admitted, mid-prefill
+    assert eng.cancel(parent.eid)
+    while eng.busy:
+        eng.step()
+    assert all(k.done and len(k.out_tokens) == 6 for k in kids)
+    assert _drained(eng)
+
+
+def test_random_abort_interleavings_conserve_pages_and_lanes():
+    """The acceptance bar: any interleaving of submissions and aborts —
+    queued, mid-prefill, mid-decode, preempted, fork parents and
+    children, prefix cache on and off — ends with every page free or
+    trie-reclaimable and every lane empty."""
+    rng = np.random.default_rng(7)
+    for trial in range(4):
+        prefix_cache = bool(trial % 2)
+        eng = _engine(max_batch=2, max_seq=32, page_size=4,
+                      n_pages=int(rng.integers(10, 16)),
+                      prefill_chunk=4, prefix_cache=prefix_cache,
+                      seed=trial)
+        n_pages = eng.cache.allocator.n_pages
+        reqs, pending = [], []
+        for i in range(int(rng.integers(6, 10))):
+            prompt = rng.integers(0, 64, int(rng.integers(2, 14))
+                                  ).astype(np.int32)
+            r = ServeRequest(prompt=prompt, rid=i,
+                             max_new_tokens=int(rng.integers(2, 10)),
+                             sampling=SamplingParams(
+                                 temperature=float(rng.choice([0.0, 1.0]))))
+            if reqs and rng.random() < 0.3:
+                r.prompt = reqs[-1].prompt.copy()    # forkable sibling
+                r.fork_from = reqs[-1]
+            reqs.append(r)
+            pending.append(r)
+        for _ in range(400):
+            if pending and (rng.random() < 0.4 or not eng.busy):
+                eng.submit(pending.pop(0))
+            elif eng.busy:
+                eng.step()
+            live = [r for r in reqs if r.eid >= 0 and not r.done]
+            if live and rng.random() < 0.25:
+                victim = live[int(rng.integers(0, len(live)))]
+                eng.cancel(victim.eid)
+            # conservation INVARIANT mid-flight, not just at drain:
+            # free + uniquely-held == total
+            alloc = eng.cache.allocator
+            held = {p for pages in alloc._held.values() for p in pages}
+            assert alloc.n_free + len(held) == n_pages, \
+                (trial, "pages leaked mid-flight")
+            if not pending and not eng.busy:
+                break
+        while eng.busy:
+            eng.step()
+        assert _drained(eng), (trial, "pages/lanes leaked at drain")
+        for r in reqs:
+            assert r.done
+            assert r.cancelled or r.rejected or r.truncated \
+                or len(r.out_tokens) > 0
+
+
+def test_preempted_fork_child_rebuilds_instead_of_readopting():
+    """Regression: a fork child preempted mid-decode requeues with
+    (prompt + generated) as its new prompt, which has DIVERGED from the
+    parent's pages (the parent samples its own continuation) — so
+    preemption must sever `fork_from`.  Re-admitting through the fork
+    path would adopt parent KV rows for tokens the child never saw:
+    observable as a second fork admission, and as silent KV corruption.
+    The greedy child must also stay identical to an unshared run."""
+    prompt = np.arange(1, 9, dtype=np.int32)        # 8 tokens, ps 4
+
+    def run(fork):
+        # fits both prompts but not both full generations -> preemption
+        eng = _engine(max_batch=2, max_seq=64, page_size=4, n_pages=8,
+                      prefill_chunk=8)
+        parent = ServeRequest(prompt=prompt.copy(), max_new_tokens=30,
+                              rid=0,
+                              sampling=SamplingParams(temperature=5.0))
+        child = ServeRequest(prompt=prompt.copy(), max_new_tokens=12,
+                             rid=1, fork_from=parent if fork else None)
+        eng.run([parent, child])
+        assert _drained(eng)
+        return parent, child, eng
+
+    _, base_child, _ = run(fork=False)
+    parent, child, eng = run(fork=True)
+    assert len(child.prompt) > 8, \
+        "scenario must preempt the child (prompt rebuilt with output)"
+    assert child.fork_from is None and child.forked_tokens == 0, \
+        "preemption must sever the fork link"
+    assert eng.telemetry.fork_admissions == 1, \
+        "a preempted child must rebuild by prefill, not re-fork"
+    assert child.out_tokens == base_child.out_tokens, \
+        "preempted fork child diverged from unshared serving"

@@ -475,3 +475,92 @@ def test_engine_spec_decode_with_prefix_sharing_byte_identical():
     assert m["prefill_tokens_skipped"] > 0
     assert m["spec_drafted"] > 0
     assert eng.cache.n_free_or_cached() == eng.cache.allocator.n_pages
+
+
+def test_generated_suffix_cached_for_follow_up_turns():
+    """A follow-up turn that extends a prior completion (chat history
+    grows turn by turn) must adopt the GENERATED pages too, not just
+    the original prompt's — and stay byte-identical to a cold engine."""
+    model, params = _model()
+    prompt = np.arange(1, 13, dtype=np.int32)       # 12 tokens, ps 4
+
+    eng = PagedServeEngine(model, params, max_batch=1, max_seq=64,
+                           page_size=4, prefill_chunk=4)
+    first = ServeRequest(prompt=prompt.copy(), max_new_tokens=9, rid=0)
+    eng.run([first])
+    # follow-up: the full first turn (prompt + completion) plus new text
+    history = np.concatenate([prompt,
+                              np.asarray(first.out_tokens, np.int32)])
+    follow_prompt = np.concatenate(
+        [history, np.array([50, 51, 52], np.int32)])
+    follow = ServeRequest(prompt=follow_prompt.copy(), max_new_tokens=4,
+                          rid=1)
+    eng.run([follow])
+    m = eng.summary()
+    # prompt-only caching would cap the match at the 12 prompt tokens'
+    # 3 full pages; suffix caching extends it across generated pages
+    # (the final emitted token was never materialized, so the cached
+    # history is 12 + 9 - 1 = 20 tokens = 5 full pages)
+    assert m["prefill_tokens_skipped"] >= 20
+
+    cold = PagedServeEngine(model, params, max_batch=1, max_seq=64,
+                            page_size=4, prefill_chunk=4,
+                            prefix_cache=False)
+    ref = ServeRequest(prompt=follow_prompt.copy(), max_new_tokens=4,
+                       rid=0)
+    cold.run([ref])
+    assert follow.out_tokens == ref.out_tokens, \
+        "suffix adoption changed greedy output"
+
+
+def test_generated_suffix_not_committed_when_prefix_cache_off():
+    model, params = _model()
+    eng = PagedServeEngine(model, params, max_batch=1, max_seq=64,
+                           page_size=4, prefix_cache=False)
+    req = ServeRequest(prompt=np.arange(8, dtype=np.int32),
+                       max_new_tokens=6, rid=0)
+    eng.run([req])
+    assert eng.prefix is None
+    assert eng.cache.allocator.n_free == eng.cache.allocator.n_pages
+
+
+def test_preempted_request_commits_only_true_history_keys():
+    """Regression: a preempted-then-resumed request folds generated
+    tokens into its prompt; the suffix-cache commit (and a second
+    preemption's rebuild) must append out_tokens past the fold cursor,
+    never the whole list — otherwise the trie gains keys with
+    duplicated token runs whose pages hold different KV (silent wrong
+    adoption for any prompt matching the poisoned key)."""
+    from repro.serve import SamplingParams
+    model, params = _model()
+    prompt = np.arange(1, 9, dtype=np.int32)        # 8 tokens, ps 4
+    # fits both prompts but not both generations -> preemption; sampled
+    # (non-repetitive) outputs make a duplicated run observable — the
+    # tiny model's greedy stream is a constant token, which would mask
+    # the poisoning this test exists to catch
+    eng = PagedServeEngine(model, params, max_batch=2, max_seq=64,
+                           page_size=4, n_pages=8, prefill_chunk=8,
+                           seed=3)
+    reqs = [ServeRequest(prompt=prompt.copy(), max_new_tokens=20, rid=i,
+                         sampling=SamplingParams(temperature=2.0))
+            for i in range(2)]
+    eng.run(reqs)
+    assert all(r.done and len(r.out_tokens) >= 20 for r in reqs)
+    assert any(r.prompt_folded > 0 for r in reqs), \
+        "scenario must actually preempt someone"
+    histories = [list(prompt) + r.out_tokens for r in reqs]
+
+    # no rebuilt prompt carries a duplicated run...
+    for r in reqs:
+        assert list(r.prompt) == \
+            list(prompt) + r.out_tokens[:r.prompt_folded]
+    # ...and every trie path spells a prefix of a TRUE served history
+    def paths(node, acc):
+        for child in node.children.values():
+            key = acc + list(child.key)
+            yield key
+            yield from paths(child, key)
+
+    for key in paths(eng.prefix.root, []):
+        assert any(key == h[:len(key)] for h in histories), \
+            f"trie key {key} is not a prefix of any served history"

@@ -348,3 +348,53 @@ def test_spec_all_optout_batch_uses_plain_decode_width():
     s = eng.summary()
     assert s["spec_drafted"] == 0
     assert s["tokens_per_decode_step"] == pytest.approx(1.0)
+
+
+# ----------------------------------------------------------------------------
+# drafter-k autotuning (EMA of measured acceptance)
+# ----------------------------------------------------------------------------
+def test_autok_adapts_up_and_down():
+    """Perfect acceptance drives the draft window to k_max; constant
+    rejection drives it to 1; recovery pulls it back up."""
+    from repro.spec.decode import SpecDecoder
+    model, _ = _model()
+    dec = SpecDecoder(model, SpecConfig(k=6, autok=True, autok_beta=0.5),
+                      max_batch=2, max_seq=64)
+    start = dec.current_k()
+    assert 1 < start < 6, "autok starts mid-window"
+    for _ in range(12):
+        dec.observe(drafted=8, accepted=8)
+    assert dec.current_k() == 6, "full acceptance earns the full window"
+    for _ in range(12):
+        dec.observe(drafted=8, accepted=0)
+    assert dec.current_k() == 1, "rejection stops paying draft cost"
+    for _ in range(12):
+        dec.observe(drafted=4, accepted=4)
+    assert dec.current_k() == 6, "k recovers when acceptance returns"
+    # steps that drafted nothing carry no signal
+    k = dec.current_k()
+    dec.observe(drafted=0, accepted=0)
+    assert dec.current_k() == k
+
+
+def test_autok_off_pins_k_and_engine_ignores_observations():
+    from repro.spec.decode import SpecDecoder
+    model, _ = _model()
+    dec = SpecDecoder(model, SpecConfig(k=4), max_batch=2, max_seq=64)
+    for _ in range(10):
+        dec.observe(drafted=8, accepted=0)
+    assert dec.current_k() == 4
+
+
+def test_autok_greedy_byte_identical_and_summary_reports_k():
+    """autok narrows only how much is DRAFTED — the accept rule is
+    untouched, so greedy output stays byte-identical; the live k lands
+    in the engine summary."""
+    model, params = _model()
+    base, _ = _run(model, params, None)
+    out, eng = _run(model, params,
+                    SpecConfig(k=4, drafter="ngram", autok=True))
+    assert out == base
+    s = eng.summary()
+    assert 1.0 <= s["spec_k_now"] <= 4.0
+    assert eng.cache.n_free_or_cached() == eng.cache.allocator.n_pages

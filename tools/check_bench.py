@@ -34,7 +34,7 @@ from typing import Dict, List, Tuple
 
 # identity fields: define WHICH row we compare, never gated themselves
 IDENTITY = ("mode", "family", "mix", "workload", "drafter", "k", "batch",
-            "n_requests", "prefix_len")
+            "n_requests", "prefix_len", "rate", "n")
 
 # (substring, direction, class); first match wins.  direction "higher"
 # means bigger is better.  Metrics matching nothing are informational.
@@ -46,10 +46,13 @@ METRIC_RULES: List[Tuple[str, str, str]] = [
     ("prefill_tokens_skipped", "higher", "quality"),
     ("prefix_hit_rate", "higher", "quality"),
     ("sim_speedup", "higher", "quality"),
+    ("completed", "higher", "quality"),
     ("ttft_speedup", "higher", "timing"),
-    ("tokens_per_s", "higher", "timing"),
+    ("goodput", "higher", "timing"),    # before tokens_per_s: it also
+    ("tokens_per_s", "higher", "timing"),   # substring-matches goodput_*
     ("ttft", "lower", "timing"),
     ("tpot", "lower", "timing"),
+    ("itl", "lower", "timing"),
     ("queue", "lower", "timing"),
     ("wall_s", "lower", "timing"),
 ]
