@@ -1,4 +1,5 @@
-"""Open-loop load benchmark for the streaming gateway (`repro.api`).
+"""Open-loop load benchmark for the streaming gateway (`repro.api`),
+with a data-parallel fleet axis (`repro.fleet`).
 
 Closed-loop benchmarks (serve_bench) measure the engine at its own
 pace; real edge traffic does not wait its turn.  This generator fires
@@ -7,13 +8,26 @@ open loop: a slow server does NOT slow the arrival process, so queueing
 delay shows up in the tail where it belongs (the coordinated-omission
 trap closed-loop generators fall into).
 
-Per rate it reports the streaming client's actual experience over real
-HTTP + SSE: TTFT and inter-token-latency percentiles (measured from
-intended arrival, so scheduler queue time counts), goodput, and how
-many requests were shed as 429s by the gateway's admission budget.
+Per (replicas, policy, rate) cell it reports the streaming client's
+actual experience over real HTTP + SSE: TTFT and inter-token-latency
+percentiles (measured from intended arrival, so scheduler queue time
+counts), goodput, how many requests were shed as 429s by the fleet's
+admission budget, and — for the fleet — the engine-level prefix hit
+rate plus the router's affinity hit counters.
+
+Two workloads:
+  uniform        pairwise-independent random prompts (the scaling
+                 story: goodput vs replica count at fixed offered load)
+  shared-prefix  two waves; wave 2 repeats wave 1's prompts after one
+                 parity-flip unique prompt, so deterministic rr
+                 alternation lands every repeat on the OPPOSITE replica
+                 (engine prefix hit rate ~0) while prefix-affinity
+                 routes it to the holder of its committed KV pages
+                 (hit rate > 0, prefill skipped).  Repeats are asserted
+                 token-identical to their originals (greedy).
 
   PYTHONPATH=src python benchmarks/api_bench.py --scale 32 --tokens 8 \
-      --requests 12 --rates 8 32
+      --requests 12 --rates 8 32 --replicas 1 2 --policies least-loaded
 """
 import argparse
 import asyncio
@@ -30,6 +44,7 @@ from serve_bench import build_model, warm_engine  # noqa: E402
 
 from repro.api import Gateway  # noqa: E402
 from repro.api.protocol import DONE_SENTINEL  # noqa: E402
+from repro.fleet import FleetRouter  # noqa: E402
 from repro.serve import PagedServeEngine  # noqa: E402
 
 
@@ -42,7 +57,7 @@ async def _drive_one(host, port, body: dict, t_arrival: float) -> dict:
     """POST one streaming completion; parse SSE incrementally so TTFT
     and inter-token gaps are timed as bytes actually land."""
     out = {"status": 0, "ttft_s": None, "gaps": [], "tokens": 0,
-           "done_s": None}
+           "done_s": None, "out_tokens": []}
     payload = json.dumps(body).encode()
     reader, writer = await asyncio.open_connection(host, port)
     try:
@@ -72,6 +87,7 @@ async def _drive_one(host, port, body: dict, t_arrival: float) -> dict:
             now = time.monotonic()
             if "token" in event:
                 out["tokens"] += 1
+                out["out_tokens"].append(event["token"])
                 if out["ttft_s"] is None:
                     out["ttft_s"] = now - t_arrival
                 elif t_last is not None:
@@ -87,48 +103,102 @@ async def _drive_one(host, port, body: dict, t_arrival: float) -> dict:
     return out
 
 
-async def run_rate(model, params, *, rate: float, n_requests: int,
-                   tokens: int, n: int, batch: int, max_seq: int,
-                   page_size: int, max_pending: int, prompt_lo: int,
-                   prompt_hi: int, seed: int = 0) -> dict:
-    eng = PagedServeEngine(model, params, max_batch=batch,
-                           max_seq=max_seq, page_size=page_size,
-                           prefill_chunk=16)
-    warm_engine(eng)        # compile prefill/decode BEFORE the driver
-    gw = Gateway(eng, max_pending=max_pending)      # owns stepping
-    host, port = await gw.start()
-    rng = np.random.default_rng(seed)
-    bodies = [{"prompt": [int(t) for t in
-                          rng.integers(0, model.cfg.vocab,
-                                       int(rng.integers(prompt_lo,
-                                                        prompt_hi + 1)))],
-               "max_tokens": tokens, "n": n, "stream": True,
-               "temperature": 0.0}
-              for _ in range(n_requests)]
-    gaps_s = rng.exponential(1.0 / rate, size=n_requests)
-
-    t0 = time.monotonic()
-    # intended arrival schedule, fixed up front: TTFT is measured from
-    # the INTENDED arrival, so event-loop lateness in firing a request
-    # counts against the server's tail instead of silently vanishing
-    # (the coordinated-omission trap)
-    arrivals = t0 + np.cumsum(gaps_s)
+async def _fire_wave(host, port, bodies, rate, rng):
+    """Open-loop Poisson wave with a coordinated-omission-safe intended
+    arrival schedule fixed up front: TTFT is measured from the INTENDED
+    arrival, so event-loop lateness in firing a request counts against
+    the server's tail instead of silently vanishing."""
+    gaps_s = rng.exponential(1.0 / rate, size=len(bodies))
+    arrivals = time.monotonic() + np.cumsum(gaps_s)
     tasks = []
     for body, t_arrival in zip(bodies, arrivals):
         await asyncio.sleep(max(0.0, t_arrival - time.monotonic()))
         tasks.append(asyncio.ensure_future(
             _drive_one(host, port, body, float(t_arrival))))
-    results = await asyncio.gather(*tasks)
+    return await asyncio.gather(*tasks)
+
+
+def _distinct_prompts(rng, count, length, vocab):
+    seen, out = set(), []
+    while len(out) < count:
+        p = [int(t) for t in rng.integers(0, vocab, length)]
+        if tuple(p) not in seen:        # pairwise distinct: no
+            seen.add(tuple(p))          # accidental cross-prompt hits
+            out.append(p)
+    return out
+
+
+async def run_rate(model, params, *, rate: float, n_requests: int,
+                   tokens: int, n: int, batch: int, max_seq: int,
+                   page_size: int, max_pending: int, prompt_lo: int,
+                   prompt_hi: int, replicas: int = 1,
+                   policy: str = "least-loaded",
+                   shared_prefix: bool = False, seed: int = 0) -> dict:
+    engines = []
+    for _ in range(replicas):
+        eng = PagedServeEngine(model, params, max_batch=batch,
+                               max_seq=max_seq, page_size=page_size,
+                               prefill_chunk=16)
+        warm_engine(eng)    # compile prefill/decode BEFORE the driver
+        engines.append(eng)
+    # max_pending is PER REPLICA: the fleet's admission capacity scales
+    # with the fleet, which is the scaling story being measured
+    router = FleetRouter(engines, policy=policy, max_pending=max_pending)
+    gw = Gateway(router)
+    host, port = await gw.start()
+    rng = np.random.default_rng(seed)
+
+    def body(prompt):
+        return {"prompt": prompt, "max_tokens": tokens, "n": n,
+                "stream": True, "temperature": 0.0}
+
+    pairs_checked = pairs_identical = 0
+    t0 = time.monotonic()
+    if shared_prefix:
+        # wave 1: k distinct prompts (k even keeps rr's parity flip
+        # deterministic); wave 2: ONE unique prompt, then wave 1 again —
+        # under rr every repeat lands on the opposite replica, under
+        # prefix-affinity on the holder of its committed pages
+        k = max(2, (n_requests // 2) & ~1)
+        length = max(prompt_hi, 2 * page_size + page_size // 2)
+        originals = _distinct_prompts(rng, k + 1, length,
+                                      model.cfg.vocab)
+        wave1, odd = originals[:k], originals[k]
+        first = await _fire_wave(host, port, [body(p) for p in wave1],
+                                 rate, rng)
+        second = await _fire_wave(
+            host, port, [body(odd)] + [body(p) for p in wave1], rate,
+            rng)
+        results = first + second
+        for orig, rep in zip(first, second[1:]):
+            if orig["status"] == 200 and rep["status"] == 200:
+                pairs_checked += 1
+                pairs_identical += \
+                    orig["out_tokens"] == rep["out_tokens"]
+        assert pairs_identical == pairs_checked, \
+            "a prefix-adopted repeat diverged from its original stream"
+    else:
+        bodies = [body([int(t) for t in
+                        rng.integers(0, model.cfg.vocab,
+                                     int(rng.integers(prompt_lo,
+                                                      prompt_hi + 1)))])
+                  for _ in range(n_requests)]
+        results = await _fire_wave(host, port, bodies, rate, rng)
     wall = time.monotonic() - t0
+    metrics = await gw._metrics()
     await gw.stop()
 
     ok = [r for r in results if r["status"] == 200 and r["done_s"]]
     ttft = [r["ttft_s"] for r in ok if r["ttft_s"] is not None]
     gaps = [g for r in ok for g in r["gaps"]]
     total_tokens = sum(r["tokens"] for r in ok)
+    eng_agg = metrics["engine"] or {}
+    fleet = metrics["fleet"]
     return {
         "mode": "open-loop", "rate": float(rate),
-        "n_requests": n_requests, "n": n, "batch": batch,
+        "workload": "shared-prefix" if shared_prefix else "uniform",
+        "replicas": replicas, "policy": policy,
+        "n_requests": len(results), "n": n, "batch": batch,
         "completed": len(ok),
         "rejected_429": sum(r["status"] == 429 for r in results),
         "errors": sum(r["status"] not in (200, 429) for r in results),
@@ -139,6 +209,14 @@ async def run_rate(model, params, *, rate: float, n_requests: int,
         "ttft_p99_s": _pct(ttft, 99),
         "itl_p50_s": _pct(gaps, 50), "itl_p95_s": _pct(gaps, 95),
         "itl_p99_s": _pct(gaps, 99),
+        "prefix_hit_rate": float(eng_agg.get("prefix_hit_rate",
+                                             float("nan"))),
+        "prefill_tokens_skipped": float(
+            eng_agg.get("prefill_tokens_skipped", 0.0)),
+        "affinity_hits": fleet.get("affinity_hits"),
+        "affinity_misses": fleet.get("affinity_misses"),
+        "pairs_checked": pairs_checked,
+        "pairs_identical": pairs_identical,
     }
 
 
@@ -155,32 +233,54 @@ def main():
     ap.add_argument("--max-seq", type=int, default=128)
     ap.add_argument("--page-size", type=int, default=8)
     ap.add_argument("--max-pending", type=int, default=64,
-                    help="gateway 429 threshold (samples in flight)")
+                    help="fleet 429 threshold (samples in flight PER "
+                         "replica)")
     ap.add_argument("--prompt-lo", type=int, default=4)
     ap.add_argument("--prompt-hi", type=int, default=24)
+    ap.add_argument("--replicas", type=int, nargs="+", default=[1],
+                    help="fleet sizes to sweep (data-parallel engine "
+                         "replicas behind one gateway)")
+    ap.add_argument("--policies", nargs="+", default=["least-loaded"],
+                    choices=["rr", "least-loaded", "prefix"],
+                    help="dispatch policies to sweep")
+    ap.add_argument("--shared-prefix", action="store_true",
+                    help="two-wave repeated-prompt workload (prefix "
+                         "affinity A/B) instead of uniform random")
+    ap.add_argument("--out", default="api_bench",
+                    help="results/benchmarks/<out>.json basename")
     args = ap.parse_args()
 
     import jax
     model, params = build_model(args.scale)
     print(f"model: {model.n_params()/1e6:.1f}M params, "
           f"backend={jax.default_backend()}")
-    print("rate_rps,completed,shed_429,goodput_tok/s,"
-          "ttft_p50_ms,ttft_p99_ms,itl_p50_ms,itl_p99_ms")
+    print("replicas,policy,rate_rps,completed,shed_429,goodput_tok/s,"
+          "ttft_p50_ms,ttft_p99_ms,itl_p50_ms,itl_p99_ms,prefix_hit")
     rows = []
-    for rate in args.rates:
-        r = asyncio.run(run_rate(
-            model, params, rate=rate, n_requests=args.requests,
-            tokens=args.tokens, n=args.n, batch=args.batch,
-            max_seq=args.max_seq, page_size=args.page_size,
-            max_pending=args.max_pending, prompt_lo=args.prompt_lo,
-            prompt_hi=args.prompt_hi))
-        rows.append(r)
-        print(f"{r['rate']:g},{r['completed']},{r['rejected_429']},"
-              f"{r['goodput_tokens_per_s']:.1f},"
-              f"{r['ttft_p50_s']*1e3:.0f},{r['ttft_p99_s']*1e3:.0f},"
-              f"{r['itl_p50_s']*1e3:.1f},{r['itl_p99_s']*1e3:.1f}")
-        assert r["errors"] == 0, f"gateway returned errors at rate {rate}"
-    save_json("api_bench", rows)
+    for replicas in args.replicas:
+        for policy in args.policies:
+            for rate in args.rates:
+                r = asyncio.run(run_rate(
+                    model, params, rate=rate, n_requests=args.requests,
+                    tokens=args.tokens, n=args.n, batch=args.batch,
+                    max_seq=args.max_seq, page_size=args.page_size,
+                    max_pending=args.max_pending,
+                    prompt_lo=args.prompt_lo, prompt_hi=args.prompt_hi,
+                    replicas=replicas, policy=policy,
+                    shared_prefix=args.shared_prefix))
+                rows.append(r)
+                hit = r["prefix_hit_rate"]
+                print(f"{replicas},{policy},{r['rate']:g},"
+                      f"{r['completed']},{r['rejected_429']},"
+                      f"{r['goodput_tokens_per_s']:.1f},"
+                      f"{r['ttft_p50_s']*1e3:.0f},"
+                      f"{r['ttft_p99_s']*1e3:.0f},"
+                      f"{r['itl_p50_s']*1e3:.1f},"
+                      f"{r['itl_p99_s']*1e3:.1f},"
+                      f"{hit if np.isfinite(hit) else float('nan'):.2f}")
+                assert r["errors"] == 0, \
+                    f"gateway returned errors at rate {rate}"
+    save_json(args.out, rows)
 
 
 if __name__ == "__main__":

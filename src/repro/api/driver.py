@@ -25,8 +25,14 @@ from typing import Any, Callable, Dict, List, Optional, Tuple
 
 
 class EngineDriver:
-    def __init__(self, engine, idle_wait_s: float = 0.05):
+    def __init__(self, engine, idle_wait_s: float = 0.05, tap=None):
+        """`tap(engine)`, when given, runs on the driver thread once per
+        loop iteration (after the step / job drain): the fleet replica
+        uses it to publish an occupancy + prefix-fingerprint snapshot
+        that the router reads lock-free per dispatch.  A tap exception
+        never kills the serve loop."""
         self.engine = engine
+        self._tap = tap
         self._jobs: "queue.Queue[Tuple[Callable, Future]]" = queue.Queue()
         self._watch: List[Tuple[Any, Callable]] = []
         self._wake = threading.Event()
@@ -92,6 +98,37 @@ class EngineDriver:
         return self.call(
             lambda engine: sum(bool(engine.cancel(e)) for e in eids))
 
+    def extract_queued(self) -> Future:
+        """Fleet drain: pull every not-yet-started request out of the
+        engine's scheduler queue AND this driver's watchlist, so the
+        router can resubmit them (with their original on_done watchers)
+        on a healthy replica.  Runs as a job, so it serializes with
+        step() like everything else.  The pulled requests' telemetry
+        traces are forgotten here — they re-enqueue (and count) where
+        they land — and any fork link is severed: engine ids are
+        per-engine, so adopting parent KV across replicas would adopt
+        an unrelated sequence's pages.  Resolves to [(req, on_done)]."""
+        def job(engine):
+            pulled = engine.scheduler.drain_queue()
+            by_id = {id(r): r for r in pulled}
+            out, still = [], []
+            for req, cb in self._watch:
+                if id(req) in by_id:
+                    out.append((req, cb))
+                else:
+                    still.append((req, cb))
+            self._watch = still
+            watched = {id(r) for r, _ in out}
+            for req in pulled:
+                engine.telemetry.forget(req.eid)
+                req.eid = -1
+                req.fork_from = None
+                req.forked_tokens = 0
+                if id(req) not in watched:      # submitted without a
+                    out.append((req, None))     # watcher: still re-home
+            return out
+        return self.call(job)
+
     # -- loop -----------------------------------------------------------
     def _drain_jobs(self) -> None:
         while True:
@@ -120,6 +157,14 @@ class EngineDriver:
                 still.append((req, on_done))
         self._watch = still
 
+    def _run_tap(self) -> None:
+        if self._tap is None:
+            return
+        try:
+            self._tap(self.engine)
+        except Exception:       # a broken snapshot publisher must
+            pass                # never take the engine down
+
     def _run(self) -> None:
         engine = self.engine
         while not self._stop.is_set():
@@ -136,7 +181,13 @@ class EngineDriver:
                     self.error = e
                     break
                 self.steps += 1
+                # publish AFTER the step but BEFORE the next sweep
+                # fires done-watchers: by the time a client sees its
+                # completion, the fleet snapshot (incl. any prefix
+                # pages this step committed) is already visible
+                self._run_tap()
             else:
+                self._run_tap()
                 self._wake.wait(self._idle_wait_s)
                 self._wake.clear()
         # shutdown / fatal error: mark dead under the lock (new call()s

@@ -1,32 +1,44 @@
-"""Async streaming gateway over `PagedServeEngine` (stdlib asyncio).
+"""Async streaming gateway over a fleet of `PagedServeEngine` replicas.
 
 This is the online front door the offline runtime was missing: traffic
 arrives asynchronously, tokens stream back as they decode, and clients
 disconnect whenever they like — the regime where edge-inference
 latency/energy trade-offs actually bite.
 
-Threading model: the asyncio event loop owns sockets and parsing; the
-`EngineDriver` thread owns the engine.  A request crosses over exactly
-twice — submission (a driver job) and per-token fan-out
+Threading model: the asyncio event loop owns sockets, parsing, and
+ROUTING; each replica's `EngineDriver` thread owns its engine.  A
+request crosses over exactly twice — submission (a driver job on the
+replica the router picked) and per-token fan-out
 (`loop.call_soon_threadsafe` into the request's asyncio.Queue) — so
-the engine stays lock-free and the event loop never blocks on jax.
+every engine stays lock-free and the event loop never blocks on jax.
+
+The gateway itself holds no engine state: it speaks only to a
+`repro.fleet.FleetRouter` (a single engine is wrapped in a one-replica
+fleet, which keeps the classic `Gateway(engine)` construction — and
+its semantics — unchanged).  Scale-out is `Gateway(FleetRouter([...]))`
+with a dispatch policy; see repro/fleet/.
 
 Endpoints:
   POST /v1/completions   token-id prompt -> SSE token stream (or one
                          JSON body with stream=false).  `n > 1` samples
                          share the prompt's KV pages via
-                         `PagedKVCache.fork` (copy-on-write tails).
-  GET  /metrics          engine summary + latency histograms + gateway
+                         `PagedKVCache.fork` (copy-on-write tails) and
+                         always land on ONE replica.  `logprobs=true`
+                         adds per-token logprob + entropy.
+  GET  /metrics          fleet-aggregated engine summary + latency
+                         histograms + per-replica breakdown + gateway
                          counters, strict JSON.
-  GET  /healthz          liveness.
+  GET  /healthz          liveness: 200 while >= 1 replica serves, 503
+                         only when the whole fleet is down.
 
-Overload: a bounded admission budget (`max_pending` samples in flight)
-turns excess load into HTTP 429 + `Retry-After` instead of an unbounded
-queue — open-loop arrivals cannot OOM the paged pool from the outside.
+Overload: admission is fleet-level load shedding — a request is 429'd
+(honest Retry-After from the least-loaded replica's measured decode
+rate) only when EVERY live replica is at its per-replica pending cap,
+so open-loop arrivals cannot OOM any paged pool from the outside.
 
 Cancellation: a client that disconnects mid-stream (or mid-prefill)
-aborts its samples via `PagedServeEngine.cancel`, which frees KV pages
-and lanes and decrefs (never frees) shared prefix pages.
+aborts its samples on whichever replica currently owns them, which
+frees KV pages and lanes and decrefs (never frees) shared prefix pages.
 """
 from __future__ import annotations
 
@@ -36,7 +48,6 @@ from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
-from .driver import EngineDriver
 from .protocol import (CompletionRequest, ProtocolError, error_response,
                        http_response, json_response, parse_completion,
                        read_http_request, sse_done, sse_event)
@@ -61,29 +72,58 @@ def _finish_reason(req, eos_id: Optional[int]) -> str:
 
 
 class Gateway:
-    """Serve an already-built engine.  The gateway takes ownership of
-    stepping it: nothing else may call `engine.step()`/`run()` while
-    the gateway is running."""
+    """Serve an already-built engine or fleet.  The gateway takes
+    ownership of stepping: nothing else may call `engine.step()`/`run()`
+    on any replica while the gateway is running."""
 
-    def __init__(self, engine, *, max_pending: int = 32, max_n: int = 8):
+    def __init__(self, engine_or_router, *, max_pending: int = 32,
+                 max_n: int = 8):
         assert max_pending >= 0 and max_n >= 1
-        self.engine = engine
-        self.driver = EngineDriver(engine)
-        self.max_pending = max_pending
+        # deferred: repro.fleet pulls in repro.api.driver, whose package
+        # __init__ imports this module — a top-level import would cycle
+        from repro.fleet import FleetRouter
+        if isinstance(engine_or_router, FleetRouter):
+            self.router = engine_or_router
+        else:       # classic single-engine construction: a fleet of one
+            self.router = FleetRouter([engine_or_router],
+                                      policy="least-loaded",
+                                      max_pending=max_pending)
         self.max_n = max_n
         # n>1 rides PagedKVCache.fork, an attention-only capability;
         # recurrent-state families serve n independent lanes instead
-        self._can_fork = engine.model.supports_paged()
-        self._inflight = 0              # event-loop thread only
+        self._can_fork = self.engine.model.supports_paged()
         self.counters: Dict[str, int] = {
             "http_requests": 0, "accepted_samples": 0, "rejected_429": 0,
             "bad_requests": 0, "disconnects": 0, "completed_samples": 0}
         self._server: Optional[asyncio.AbstractServer] = None
 
+    # -- single-engine compatibility surface ---------------------------
+    @property
+    def engine(self):
+        """Replica 0's engine: model metadata (vocab, max_seq, eos) is
+        identical fleet-wide by FleetRouter's construction contract."""
+        return self.router.replicas[0].engine
+
+    @property
+    def driver(self):
+        """Replica 0's driver (the classic one-engine handle; fleet
+        code should address `router.replicas[i].driver`)."""
+        return self.router.replicas[0].driver
+
+    @property
+    def _inflight(self) -> int:
+        return sum(rep.pending for rep in self.router.replicas)
+
+    @property
+    def max_pending(self) -> int:
+        """Fleet admission capacity in samples (sum of per-replica
+        caps)."""
+        return sum(rep.max_pending for rep in self.router.replicas)
+
     # -- lifecycle ------------------------------------------------------
     async def start(self, host: str = "127.0.0.1", port: int = 0
                     ) -> Tuple[str, int]:
-        self.driver.start()
+        self.router.start()
         self._server = await asyncio.start_server(self._handle, host,
                                                   port)
         sock = self._server.sockets[0].getsockname()
@@ -94,16 +134,18 @@ class Gateway:
             self._server.close()
             await self._server.wait_closed()
             self._server = None
-        # driver.stop() joins the engine thread (a mid-flight jitted
+        # router.stop() joins every engine thread (a mid-flight jitted
         # step can take seconds): keep it off the event loop
         await asyncio.get_running_loop().run_in_executor(
-            None, self.driver.stop)
+            None, self.router.stop)
 
     async def serve_forever(self, host: str = "127.0.0.1",
                             port: int = 8151) -> None:
         h, p = await self.start(host, port)
         print(f"[api] gateway listening on http://{h}:{p} "
-              f"(POST /v1/completions, GET /metrics)")
+              f"(POST /v1/completions, GET /metrics; "
+              f"{len(self.router.replicas)} replica(s), "
+              f"policy={self.router.policy.name})")
         try:
             await self._server.serve_forever()
         finally:
@@ -129,12 +171,18 @@ class Gateway:
                 writer.write(json_response(200, "OK",
                                            await self._metrics()))
             elif method == "GET" and path == "/healthz":
-                # a dead driver answers 503, not 200-with-false: a
-                # status-code liveness probe must see the failure
-                alive = self.driver.alive
+                # fleet liveness: 200 while any replica serves (a probe
+                # must not kill a gateway that is degraded, not down);
+                # 503 — never 200-with-false — once the whole fleet is
+                # dead, so a status-code probe sees the failure
+                alive = self.router.alive
+                errors = {str(rep.id): repr(rep.error)
+                          for rep in self.router.replicas
+                          if rep.error is not None}
                 body = {"ok": alive,
-                        "error": (repr(self.driver.error)
-                                  if self.driver.error else None)}
+                        "n_live": self.router.n_live,
+                        "n_replicas": len(self.router.replicas),
+                        "error": errors or None}
                 writer.write(json_response(200 if alive else 503,
                                            "OK" if alive
                                            else "Service Unavailable",
@@ -157,9 +205,20 @@ class Gateway:
         from repro.serve import SamplingParams, ServeRequest
         sampling = SamplingParams(temperature=creq.temperature,
                                   top_k=creq.top_k, top_p=creq.top_p)
+        reqs_by_rid: Dict[int, object] = {}
 
-        def on_token(rid: int, tok: int) -> None:     # driver thread
-            loop.call_soon_threadsafe(q.put_nowait, ("token", rid, tok))
+        if creq.logprobs:
+            def on_token(rid: int, tok: int) -> None:  # driver thread
+                # _emit appended this token's (logprob, entropy) just
+                # before calling us, so the tail entry is ours — capture
+                # it NOW (driver thread), not when the queue drains
+                lp, ent = reqs_by_rid[rid].out_logprobs[-1]
+                loop.call_soon_threadsafe(q.put_nowait,
+                                          ("token", rid, (tok, lp, ent)))
+        else:
+            def on_token(rid: int, tok: int) -> None:  # driver thread
+                loop.call_soon_threadsafe(q.put_nowait,
+                                          ("token", rid, tok))
 
         prompt = np.asarray(creq.prompt, np.int32)
         primary = ServeRequest(prompt=prompt,
@@ -167,14 +226,18 @@ class Gateway:
                                priority=creq.priority,
                                deadline_s=creq.deadline_s,
                                sampling=sampling, spec=creq.spec,
+                               logprobs=creq.logprobs,
                                on_token=on_token)
         reqs = [primary]
         for i in range(1, creq.n):
             reqs.append(ServeRequest(
                 prompt=prompt.copy(), max_new_tokens=creq.max_tokens,
                 rid=i, priority=creq.priority, deadline_s=creq.deadline_s,
-                sampling=sampling, spec=creq.spec, on_token=on_token,
+                sampling=sampling, spec=creq.spec,
+                logprobs=creq.logprobs, on_token=on_token,
                 fork_from=primary if self._can_fork else None))
+        for r in reqs:
+            reqs_by_rid[r.rid] = r
         return reqs
 
     async def _completions(self, body: bytes,
@@ -188,18 +251,11 @@ class Gateway:
             self.counters["bad_requests"] += 1
             writer.write(error_response(400, "Bad Request", e.message))
             return
-        if not self.driver.alive:
-            # fail fast: submitting to a dead engine thread would hang
-            # this handler forever and leak the inflight budget
+        if not self.router.alive:
+            # fail fast: submitting to a dead fleet would hang this
+            # handler forever and leak the admission budget
             writer.write(error_response(
                 503, "Service Unavailable", "engine driver not running"))
-            return
-        if self._inflight + creq.n > self.max_pending:
-            self.counters["rejected_429"] += 1
-            writer.write(error_response(
-                429, "Too Many Requests",
-                f"{self._inflight} samples in flight of {self.max_pending}"
-                " allowed; retry shortly", {"Retry-After": "1"}))
             return
 
         loop = asyncio.get_running_loop()
@@ -208,34 +264,51 @@ class Gateway:
         def on_done(req) -> None:                     # driver thread
             loop.call_soon_threadsafe(self._sample_done, q, req)
 
+        prompt = np.asarray(creq.prompt, np.int32)
         reqs = self._build_requests(creq, q, loop)
-        self._inflight += creq.n
-        self.counters["accepted_samples"] += creq.n
-        try:
-            eids = await asyncio.wrap_future(
-                self.driver.submit(reqs, on_done))
-        except RuntimeError:
-            self._inflight -= creq.n    # never submitted: restore the
-            self.counters["accepted_samples"] -= creq.n     # budget
-            writer.write(error_response(
-                503, "Service Unavailable", "engine driver not running"))
-            return
+        # route -> dispatch, retrying on a replica that died between the
+        # pick and the submit; accounting (pending + accepted_samples)
+        # moves BEFORE the await so a burst of concurrent arrivals sees
+        # each other's reservations — admission is event-loop-side state
+        while True:
+            rep = self.router.route(prompt, creq.n)
+            if rep is None:     # every live replica saturated: shed
+                self.counters["rejected_429"] += 1
+                retry = self.router.retry_after_s()
+                writer.write(error_response(
+                    429, "Too Many Requests",
+                    f"{self._inflight} samples in flight of "
+                    f"{self.max_pending} allowed fleet-wide; retry "
+                    f"shortly", {"Retry-After": str(retry)}))
+                return
+            self.counters["accepted_samples"] += creq.n
+            fut = self.router.dispatch(rep, reqs, on_done)
+            try:
+                eids = await asyncio.wrap_future(fut)
+                break
+            except RuntimeError:    # replica died before the job ran:
+                self.router.dispatch_failed(rep, reqs)      # roll back
+                self.counters["accepted_samples"] -= creq.n
+                if not self.router.alive:
+                    writer.write(error_response(
+                        503, "Service Unavailable",
+                        "engine driver not running"))
+                    return
+                # survivors exist: re-route the same group
+        del eids    # engine ids are replica-local; aborts go by request
         if creq.stream:
-            await self._stream_sse(creq, q, eids, reader, writer)
+            await self._stream_sse(creq, q, reqs, reader, writer)
         else:
-            await self._respond_json(creq, q, eids, reqs, writer)
+            await self._respond_json(creq, q, reqs, writer)
 
     def _sample_done(self, q: asyncio.Queue, req) -> None:
-        self._inflight -= 1
+        self.router.release(req)
         self.counters["completed_samples"] += 1
         q.put_nowait(("done", req.rid, req))
 
-    async def _abort(self, eids: List[int]) -> None:
+    async def _abort(self, reqs: List) -> None:
         self.counters["disconnects"] += 1
-        try:
-            await asyncio.wrap_future(self.driver.cancel(eids))
-        except RuntimeError:
-            pass    # driver died: its requests died with it
+        await self.router.cancel(reqs)
 
     async def _next_event(self, q: asyncio.Queue,
                           reader: asyncio.StreamReader,
@@ -263,7 +336,14 @@ class Gateway:
                 return None
             eof_box[0] = asyncio.ensure_future(reader.read(1))
 
-    async def _stream_sse(self, creq, q, eids, reader, writer) -> None:
+    def _token_event(self, creq, rid: int, payload) -> Dict:
+        if creq.logprobs:
+            tok, lp, ent = payload
+            return {"index": rid, "token": tok,
+                    "logprob": lp, "entropy": ent}
+        return {"index": rid, "token": payload}
+
+    async def _stream_sse(self, creq, q, reqs, reader, writer) -> None:
         writer.write(_SSE_HEADERS)
         eof_box = [asyncio.ensure_future(reader.read(1))]
         try:
@@ -272,12 +352,12 @@ class Gateway:
             while remaining:
                 event = await self._next_event(q, reader, eof_box)
                 if event is None:       # client went away mid-stream:
-                    await self._abort(eids)   # abort the whole group
+                    await self._abort(reqs)   # abort the whole group
                     return
                 kind, rid, payload = event
                 if kind == "token":
-                    writer.write(sse_event({"index": rid,
-                                            "token": payload}))
+                    writer.write(sse_event(
+                        self._token_event(creq, rid, payload)))
                 else:
                     remaining -= 1
                     writer.write(sse_event(
@@ -289,13 +369,13 @@ class Gateway:
             writer.write(sse_done())
             await writer.drain()
         except (ConnectionResetError, BrokenPipeError):
-            await self._abort(eids)
+            await self._abort(reqs)
         finally:
             eof_box[0].cancel()
             with contextlib.suppress(asyncio.CancelledError):
                 await eof_box[0]
 
-    async def _respond_json(self, creq, q, eids, reqs, writer) -> None:
+    async def _respond_json(self, creq, q, reqs, writer) -> None:
         """Non-streaming mode: there is nothing incremental to deliver,
         so the client socket is NOT watched for EOF — a legal HTTP
         half-close (shutdown of the write side after the request) must
@@ -307,9 +387,16 @@ class Gateway:
                 kind, _, payload = await q.get()
                 if kind == "done":
                     remaining -= 1
-            choices = [{"index": r.rid, "tokens": list(r.out_tokens),
-                        "finish_reason": _finish_reason(
-                            r, self.engine.eos_id)} for r in reqs]
+            choices = []
+            for r in reqs:
+                choice = {"index": r.rid, "tokens": list(r.out_tokens),
+                          "finish_reason": _finish_reason(
+                              r, self.engine.eos_id)}
+                if creq.logprobs:
+                    choice["logprobs"] = [
+                        {"logprob": lp, "entropy": ent}
+                        for lp, ent in r.out_logprobs]
+                choices.append(choice)
             writer.write(json_response(200, "OK", {
                 "choices": choices,
                 "usage": {"prompt_tokens": len(creq.prompt),
@@ -317,19 +404,19 @@ class Gateway:
                               len(r.out_tokens) for r in reqs)}}))
             await writer.drain()
         except (ConnectionResetError, BrokenPipeError):
-            await self._abort(eids)
+            await self._abort(reqs)
 
     # -- /metrics -------------------------------------------------------
     async def _metrics(self) -> Dict:
-        if not self.driver.alive:
-            return {"gateway": dict(self.counters), "engine": None,
-                    "error": "engine driver not running"}
-        snap = await asyncio.wrap_future(self.driver.call(
-            lambda eng: {"engine": eng.summary(),
-                         "histograms": eng.telemetry.histograms(),
-                         "n_running": eng.n_running,
-                         "n_queued": eng.scheduler.n_queued,
-                         "kv_pages_free": eng.cache.allocator.n_free}))
-        snap["gateway"] = {**self.counters, "inflight": self._inflight,
-                           "max_pending": self.max_pending}
-        return snap
+        """Fleet rollup + per-replica breakdown.  Top-level "engine" /
+        "histograms" keep the classic single-engine schema (aggregated
+        across live replicas); "fleet" carries the per-replica truth —
+        including entries for drained and dead replicas, which aggregate
+        as absent, never as a KeyError."""
+        payload = await self.router.fleet_metrics()
+        if payload["engine"] is None:
+            payload.setdefault("error", "engine driver not running")
+        payload["gateway"] = {**self.counters,
+                              "inflight": self._inflight,
+                              "max_pending": self.max_pending}
+        return payload

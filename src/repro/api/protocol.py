@@ -41,6 +41,8 @@ class CompletionRequest:
     priority: int = 0
     deadline_s: Optional[float] = None
     spec: bool = True                # opt out of speculative decoding
+    logprobs: bool = False           # per-token logprob + entropy in the
+    #   stream / response (host-side O(vocab) per token when on)
 
 
 def _require(cond: bool, msg: str) -> None:
@@ -89,10 +91,12 @@ def parse_completion(body: bytes, *, vocab: Optional[int] = None,
         n=_num("n", 1, 1, max_n, int, "int"),
         priority=_num("priority", 0, -(1 << 16), 1 << 16, int, "int"),
     )
-    for key in ("stream", "spec"):      # strict bools: a JS client's
-        v = obj.get(key, True)          # "false" string must 400, not
-        _require(isinstance(v, bool), f"'{key}' must be a bool")
-        setattr(req, key, v)            # silently invert its meaning
+    for key, default in (("stream", True), ("spec", True),
+                         ("logprobs", False)):
+        v = obj.get(key, default)       # strict bools: a JS client's
+        _require(isinstance(v, bool),   # "false" string must 400, not
+                 f"'{key}' must be a bool")     # silently invert its
+        setattr(req, key, v)                    # meaning
     dl = obj.get("deadline_s")
     if dl is not None:
         _require(isinstance(dl, (int, float)) and not isinstance(dl, bool)

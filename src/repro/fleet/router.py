@@ -1,0 +1,329 @@
+"""FleetRouter: N data-parallel engine replicas behind one gateway.
+
+One `PagedServeEngine` caps goodput at its own lane/page pools, and a
+single long prefill inflates every stream's tail latency.  The router
+scales the serving story out: it owns N replicas of the SAME model
+(one `EngineDriver` thread each), dispatches every request group to
+exactly one replica under a pluggable policy (policy.py), and turns the
+per-engine admission machinery into fleet-level load shedding — a
+request is 429'd only when EVERY live replica is at its pending cap,
+with a Retry-After estimated from the least-loaded replica's measured
+decode rate.
+
+Dispatch stays on the caller's event loop: routing reads only
+router-side pending ledgers and the lock-free snapshots each driver
+tap publishes (replica.py), so picking a replica costs dict lookups,
+not thread round-trips.  A request group (a primary and its fork
+children) always lands on one replica — forked KV pages cannot span
+engines.
+
+Lifecycle:
+  drain(i)   stop dispatching to replica i, re-home its not-yet-started
+             queue onto healthy replicas (watchers travel along; fork
+             links are severed — engine ids are per-engine), and let
+             its in-flight requests finish where they run.
+  death      a driver that died fail-fast (fatal step error) drops out
+             of every policy's candidate set automatically; its
+             in-flight requests were already failed by the driver's
+             shutdown sweep.  The gateway keeps serving on survivors —
+             /healthz stays 200 while >= 1 replica is live.
+"""
+from __future__ import annotations
+
+import asyncio
+from typing import Callable, Dict, List, Optional, Sequence
+
+import numpy as np
+
+from .policy import Policy, PrefixAffinityPolicy, make_policy
+from .replica import Replica
+
+
+# summary keys that SUM across replicas (counters and parallel rates);
+# *_peak keys take the max; everything else (percentiles, means) is
+# nan-averaged — approximate for a fleet, exact for one replica, and
+# the per-replica breakdown always carries the honest numbers
+_SUM_KEYS = frozenset({
+    "requests", "requests_total", "tokens", "decode_tokens",
+    "prefill_tokens", "steps", "decode_steps", "spec_drafted",
+    "spec_accepted", "prefix_lookups", "prefix_hits",
+    "prefill_tokens_skipped", "fork_admissions", "cancelled",
+    "cow_copies", "kv_pages_shared", "prefix_pages_resident",
+    "prefix_pages_evicted", "state_bytes", "tokens_per_s",
+    "decode_tokens_per_s", "decode_s",
+})
+
+
+def _nanagg(vals: np.ndarray, fn) -> float:
+    return float(fn(vals)) if not np.all(np.isnan(vals)) else float("nan")
+
+
+def aggregate_summaries(summaries: Sequence[Dict]) -> Optional[Dict]:
+    """Fleet rollup of per-engine `summary()` dicts: counters sum,
+    peaks max, latency stats average; ratio metrics are recomputed from
+    the summed numerators (a mean of per-replica hit rates is not the
+    fleet hit rate)."""
+    if not summaries:
+        return None
+    out: Dict[str, float] = {}
+    for k in sorted(set().union(*map(set, summaries))):
+        vals = np.asarray([float(s[k]) for s in summaries if k in s],
+                          np.float64)
+        if k in _SUM_KEYS or k.startswith("lane_steps_"):
+            out[k] = float(np.nansum(vals))
+        elif k.endswith("_peak"):
+            out[k] = _nanagg(vals, np.nanmax)
+        else:
+            out[k] = _nanagg(vals, np.nanmean)
+    if out.get("prefix_lookups"):
+        out["prefix_hit_rate"] = out["prefix_hits"] / out["prefix_lookups"]
+    if out.get("spec_drafted"):
+        out["spec_acceptance_rate"] = (out["spec_accepted"]
+                                       / out["spec_drafted"])
+    return out
+
+
+def aggregate_histograms(hists: Sequence[Dict]) -> Optional[Dict]:
+    """Histograms compose exactly: same log-spaced edges everywhere, so
+    the fleet distribution is the per-bucket sum."""
+    if not hists:
+        return None
+    out: Dict[str, Dict] = {}
+    for name in hists[0]:
+        counts = np.sum([h[name]["counts"] for h in hists if name in h],
+                        axis=0)
+        out[name] = {"edges_s": list(hists[0][name]["edges_s"]),
+                     "counts": [int(c) for c in counts]}
+    return out
+
+
+class FleetRouter:
+    def __init__(self, engines: Sequence, *, policy="least-loaded",
+                 max_pending: int = 32):
+        """`engines`: one built `PagedServeEngine` per replica, same
+        model/params each (asserted on the config).  `max_pending` is
+        the PER-REPLICA admission cap in samples; fleet capacity is
+        `max_pending * n_live`."""
+        assert engines, "a fleet needs at least one engine"
+        cfg0 = engines[0].model.cfg
+        for e in engines[1:]:
+            assert (e.model.cfg.name == cfg0.name
+                    and e.model.cfg.vocab == cfg0.vocab
+                    and e.max_seq == engines[0].max_seq), \
+                "fleet replicas must serve the same model"
+        self.replicas = [Replica(e, i, max_pending)
+                         for i, e in enumerate(engines)]
+        self.policy: Policy = make_policy(policy)
+        self.counters: Dict[str, int] = {"dispatched": 0, "requeued": 0,
+                                         "requeue_failed": 0, "drains": 0}
+        self._owner: Dict[int, Replica] = {}    # id(req) -> replica
+
+    # -- lifecycle ------------------------------------------------------
+    def start(self) -> "FleetRouter":
+        for rep in self.replicas:
+            rep.driver.start()
+        return self
+
+    def stop(self, timeout: float = 10.0) -> None:
+        for rep in self.replicas:
+            rep.driver.stop(timeout)
+
+    @property
+    def alive(self) -> bool:
+        """Any replica's driver still running (drain-ing counts: it is
+        serving its in-flight work)."""
+        return any(rep.alive for rep in self.replicas)
+
+    @property
+    def n_live(self) -> int:
+        return sum(rep.live for rep in self.replicas)
+
+    # -- dispatch (event-loop side) ------------------------------------
+    def route(self, prompt, n: int = 1) -> Optional[Replica]:
+        """Pick the replica for a group of `n` samples over `prompt`,
+        or None when every live replica is saturated (fleet-level
+        shed) or none is live."""
+        cands = [rep for rep in self.replicas
+                 if rep.live and rep.has_capacity(n)]
+        if not cands:
+            return None
+        return self.policy.pick(cands, prompt)
+
+    def dispatch(self, rep: Replica, reqs: List, on_done: Callable):
+        """Account the group against `rep` and submit it; returns the
+        driver Future of engine ids.  Accounting happens NOW (before
+        the future resolves) so a burst of arrivals sees each other's
+        reservations."""
+        rep.dispatches += 1
+        rep.pending += len(reqs)
+        self.counters["dispatched"] += 1
+        for r in reqs:
+            self._owner[id(r)] = rep
+        return rep.driver.submit(reqs, on_done)
+
+    def dispatch_failed(self, rep: Replica, reqs: List) -> None:
+        """Roll back `dispatch` accounting after its future failed (the
+        driver died between route and submit)."""
+        rep.dispatches -= 1
+        rep.pending -= len(reqs)
+        self.counters["dispatched"] -= 1
+        for r in reqs:
+            self._owner.pop(id(r), None)
+
+    def release(self, req) -> None:
+        """One sample finished (done sweep landed on the event loop):
+        free its replica's admission slot."""
+        rep = self._owner.pop(id(req), None)
+        if rep is not None:
+            rep.pending -= 1
+
+    async def cancel(self, reqs: List) -> int:
+        """Cancel requests wherever they currently live (the owner map
+        follows drain re-homes); returns how many were actually
+        cancelled."""
+        by_rep: Dict[int, List[int]] = {}
+        for req in reqs:
+            rep = self._owner.get(id(req))
+            if rep is not None and rep.alive and req.eid >= 0:
+                by_rep.setdefault(rep.id, []).append(req.eid)
+        total = 0
+        for rid, eids in by_rep.items():
+            try:
+                total += await asyncio.wrap_future(
+                    self.replicas[rid].driver.cancel(eids))
+            except RuntimeError:
+                pass        # died mid-cancel: its requests died with it
+        return total
+
+    def retry_after_s(self) -> int:
+        """Honest Retry-After for a fleet-level shed: the least-loaded
+        live replica's pending depth times its measured per-token
+        decode time (floor 1s) — an estimate of when a slot frees, not
+        a constant."""
+        best = None
+        for rep in self.replicas:
+            if not rep.live:
+                continue
+            s = rep.snapshot
+            t_tok = (s["decode_s"] / s["decode_tokens"]
+                     if s.get("decode_tokens") else 0.01)
+            est = rep.pending * t_tok
+            best = est if best is None else min(best, est)
+        return max(1, int(np.ceil(best))) if best else 1
+
+    # -- drain / re-home ------------------------------------------------
+    def _requeue_target(self, n: int = 1) -> Optional[Replica]:
+        """Least-loaded live replica for a drain re-home; capacity
+        preferred, but an over-cap live replica still beats dropping a
+        request (its engine-side queue absorbs the overflow)."""
+        cands = [rep for rep in self.replicas
+                 if rep.live and rep.has_capacity(n)]
+        if not cands:
+            cands = [rep for rep in self.replicas if rep.live]
+        if not cands:
+            return None
+        return min(cands, key=lambda r: (r.depth(), r.occupancy(), r.id))
+
+    async def _resubmit(self, req, on_done) -> bool:
+        on_done = on_done or (lambda r: None)
+        for _ in range(len(self.replicas)):
+            target = self._requeue_target()
+            if target is None:
+                break
+            target.pending += 1
+            self._owner[id(req)] = target
+            try:
+                await asyncio.wrap_future(target.driver.submit([req],
+                                                               on_done))
+                return True
+            except RuntimeError:        # target died mid-re-home: next
+                target.pending -= 1
+                self._owner.pop(id(req), None)
+        # no healthy replica anywhere: fail the request LOUDLY (watcher
+        # fires, budgets release) — never silently drop it
+        req.done = True
+        req.cancelled = True
+        try:
+            on_done(req)
+        except Exception:
+            pass
+        return False
+
+    async def drain(self, index: int) -> int:
+        """Drain replica `index`: no new dispatches land on it, its
+        not-yet-started queue is re-homed onto healthy replicas, and
+        its in-flight requests finish where they run.  Returns the
+        number of requests re-homed.  The driver stays up (serving its
+        tail); stop it afterwards if the replica is being retired."""
+        rep = self.replicas[index]
+        rep.draining = True
+        self.counters["drains"] += 1
+        if not rep.alive:
+            return 0
+        try:
+            pulled = await asyncio.wrap_future(rep.driver.extract_queued())
+        except RuntimeError:
+            return 0
+        requeued = 0
+        for req, on_done in pulled:
+            old = self._owner.pop(id(req), None)
+            if old is not None:
+                old.pending -= 1
+            if await self._resubmit(req, on_done):
+                requeued += 1
+                self.counters["requeued"] += 1
+            else:
+                self.counters["requeue_failed"] += 1
+        return requeued
+
+    # -- metrics --------------------------------------------------------
+    def policy_stats(self) -> Dict[str, int]:
+        if isinstance(self.policy, PrefixAffinityPolicy):
+            return {"affinity_hits": self.policy.hits,
+                    "affinity_misses": self.policy.misses}
+        return {}
+
+    async def fleet_metrics(self) -> Dict:
+        """Aggregate + per-replica metrics payload.  A drained or dead
+        replica yields its router-side entry (state, counters, last
+        snapshot) instead of a KeyError; the aggregate covers live
+        replicas only."""
+        per: Dict[str, Dict] = {}
+        summaries, hists = [], []
+        n_running = n_queued = kv_free = 0
+        for rep in self.replicas:
+            entry = rep.describe()
+            if rep.alive:
+                try:
+                    snap = await asyncio.wrap_future(rep.driver.call(
+                        lambda eng: {
+                            "engine": eng.summary(),
+                            "histograms": eng.telemetry.histograms(),
+                            "n_running": eng.n_running,
+                            "n_queued": eng.scheduler.n_queued,
+                            "kv_pages_free": eng.cache.allocator.n_free}))
+                    entry.update(snap)
+                    summaries.append(snap["engine"])
+                    hists.append(snap["histograms"])
+                    n_running += snap["n_running"]
+                    n_queued += snap["n_queued"]
+                    kv_free += snap["kv_pages_free"]
+                except RuntimeError:    # died between the alive check
+                    entry["alive"] = False      # and the job: report it
+                    entry["error"] = repr(rep.error) if rep.error else \
+                        "engine driver not running"
+            per[str(rep.id)] = entry
+        payload = {
+            "engine": aggregate_summaries(summaries),
+            "histograms": aggregate_histograms(hists),
+            "n_running": n_running, "n_queued": n_queued,
+            "kv_pages_free": kv_free,
+            "fleet": {"policy": self.policy.name,
+                      "n_replicas": len(self.replicas),
+                      "n_live": self.n_live,
+                      "counters": dict(self.counters),
+                      **self.policy_stats(),
+                      "replicas": per}}
+        if not summaries:
+            payload["error"] = "no live replica"
+        return payload

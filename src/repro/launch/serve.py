@@ -75,8 +75,18 @@ def main():
     ap.add_argument("--host", default="127.0.0.1")
     ap.add_argument("--port", type=int, default=8151)
     ap.add_argument("--max-pending", type=int, default=32,
-                    help="gateway backpressure: samples in flight before "
-                         "new requests get 429 + Retry-After")
+                    help="gateway backpressure: samples in flight PER "
+                         "REPLICA before new requests shed fleet-wide "
+                         "with 429 + Retry-After")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="data-parallel engine replicas behind the "
+                         "gateway (same model; --gateway mode only)")
+    ap.add_argument("--policy", default="least-loaded",
+                    choices=["rr", "least-loaded", "prefix"],
+                    help="fleet dispatch policy: rr cycles replicas, "
+                         "least-loaded follows pending depth + KV "
+                         "occupancy, prefix routes repeated prompts to "
+                         "the replica holding their committed KV pages")
     args = ap.parse_args()
 
     import jax
@@ -127,14 +137,30 @@ def main():
         else:
             spec_cfg = SpecConfig(k=args.spec_k, drafter="ngram",
                                   autok=args.spec_autok)
-    eng = PagedServeEngine(
-        model, params, max_batch=args.batch, max_seq=args.max_seq,
-        page_size=args.page_size, n_pages=args.pages or None,
-        spec=spec_cfg, prefix_cache=prefix_cache)
+    if args.replicas < 1:
+        raise SystemExit(f"--replicas {args.replicas}: need at least 1")
+    if args.replicas > 1 and not args.gateway:
+        raise SystemExit("--replicas > 1 requires --gateway (the offline "
+                         "sweep runs one engine)")
+
+    def build_engine():
+        return PagedServeEngine(
+            model, params, max_batch=args.batch, max_seq=args.max_seq,
+            page_size=args.page_size, n_pages=args.pages or None,
+            spec=spec_cfg, prefix_cache=prefix_cache)
+
+    eng = build_engine()
     if args.gateway:
         import asyncio
         from repro.api import Gateway
-        gw = Gateway(eng, max_pending=args.max_pending)
+        from repro.fleet import FleetRouter
+        # replicas share params (read-only under jit): N engines cost N
+        # KV pools + N driver threads, not N copies of the weights
+        engines = [eng] + [build_engine()
+                           for _ in range(args.replicas - 1)]
+        router = FleetRouter(engines, policy=args.policy,
+                             max_pending=args.max_pending)
+        gw = Gateway(router)
         try:
             asyncio.run(gw.serve_forever(args.host, args.port))
         except KeyboardInterrupt:

@@ -61,7 +61,7 @@ from repro.models import DecoderLM
 
 from .paged_cache import PagedKVCache
 from .prefix import PrefixIndex
-from .sampling import SamplingParams, sample_tokens
+from .sampling import SamplingParams, processed_probs, sample_tokens
 from .scheduler import Scheduler, ServeRequest
 from .state import StateArena
 from .telemetry import Telemetry
@@ -254,11 +254,30 @@ class PagedServeEngine:
         return np.asarray(sample_tokens(sub, rows, temp, topk, topp))
 
     def _emit(self, req: ServeRequest, token: int, now: float,
-              decode: bool = True) -> None:
+              decode: bool = True, row=None) -> None:
         req.out_tokens.append(token)
+        if req.logprobs and row is not None:
+            req.out_logprobs.append(
+                self._logprob_entropy(row, token, req.sampling))
         self.telemetry.token(req.eid, now, decode=decode)
         if req.on_token is not None:
             req.on_token(req.rid, token)
+
+    @staticmethod
+    def _logprob_entropy(row, token: int, sampling: SamplingParams):
+        """(logprob, entropy) of `token` under the PROCESSED sampling
+        distribution (temperature/top-k/top-p applied) — the
+        distribution the token was actually drawn from, so greedy
+        decoding reports logprob 0 and entropy 0.  Host-side O(vocab),
+        computed only for requests that asked for logprobs."""
+        p = processed_probs(np.asarray(row, np.float32),
+                            sampling.temperature, sampling.top_k,
+                            sampling.top_p)
+        pt = float(p[token])
+        nz = p[p > 0.0]
+        # + 0.0 normalizes the one-hot case's -0.0 before it hits JSON
+        ent = float(-np.sum(nz * np.log(nz)) + 0.0) if nz.size else 0.0
+        return (float(np.log(max(pt, 1e-12))), ent)
 
     def _maybe_finish(self, lane: int, now: float) -> None:
         req = self.lanes[lane]
@@ -418,7 +437,9 @@ class PagedServeEngine:
                     # so later requests with the same prefix skip them
                     self.prefix.insert(np.asarray(req.prompt, np.int32),
                                        self.cache.seqs[req.eid].pages)
-                self._emit(req, int(nxt[i]), now, decode=False)
+                self._emit(req, int(nxt[i]), now, decode=False,
+                           row=np.asarray(last[i])
+                           if req.logprobs else None)
                 self._maybe_finish(i, now)
         return dt
 
@@ -461,7 +482,9 @@ class PagedServeEngine:
         for i in ready:
             req = self.lanes[i]
             self.cache.seqs[req.eid].length += 1
-            self._emit(req, int(nxt[i]), now)
+            self._emit(req, int(nxt[i]), now,
+                       row=np.asarray(logits[i, 0, :])
+                       if req.logprobs else None)
             self._maybe_finish(i, now)
         return dt, len(ready)
 
@@ -559,8 +582,11 @@ class PagedServeEngine:
             if self.eos_id is not None and self.eos_id in emitted:
                 emitted = emitted[:emitted.index(self.eos_id) + 1]
             budget = req.max_new_tokens - len(req.out_tokens)
-            for tok in emitted[:budget]:
-                self._emit(req, tok, now)
+            # emitted[j] was accepted/sampled from verify-logits row j,
+            # so that row is its (target-model) logprob source
+            for j, tok in enumerate(emitted[:budget]):
+                self._emit(req, tok, now,
+                           row=logits_np[i, j] if req.logprobs else None)
             self._maybe_finish(i, now)
         self.telemetry.spec(drafted, accepted)
         spec.observe(drafted, accepted)

@@ -30,9 +30,37 @@ import numpy as np
 
 PREFIX_OWNER = -1          # allocator owner id reserved for the trie
 
+# fingerprint root: the path hash of the empty prefix.  Path hashes fold
+# the parent's hash into every level, so two identical page keys under
+# different parents (different causal prefixes, different KV) hash
+# differently.  A hash collision can only misroute a fleet dispatch
+# (the replica still re-prefills on the real trie miss) — never corrupt
+# KV, because adoption itself always walks the exact token trie.
+ROOT_HASH = 0
+
+
+def combine_hash(parent_hash: int, key: Tuple[int, ...]) -> int:
+    """Path hash of a child page under `parent_hash`."""
+    return hash((parent_hash,) + key)
+
+
+def prompt_page_hashes(prompt: np.ndarray, page_size: int) -> List[int]:
+    """Path hashes of every full-page prefix of `prompt` the trie could
+    hold (same `len(prompt) - 1` cap as `match_nodes`) — the router
+    side of the fingerprint: count how many consecutive entries a
+    replica's fingerprint contains and you have its resident-prefix
+    depth for this prompt, without touching the replica's thread."""
+    limit = (len(prompt) - 1) // page_size
+    h, out = ROOT_HASH, []
+    for i in range(limit):
+        h = combine_hash(h, tuple(int(t) for t in
+                                  prompt[i * page_size:(i + 1) * page_size]))
+        out.append(h)
+    return out
+
 
 class _Node:
-    __slots__ = ("key", "page", "children", "parent", "last_use")
+    __slots__ = ("key", "page", "children", "parent", "last_use", "hash")
 
     def __init__(self, key: Optional[Tuple[int, ...]], page: Optional[int],
                  parent: Optional["_Node"]):
@@ -41,6 +69,8 @@ class _Node:
         self.children: Dict[Tuple[int, ...], _Node] = {}
         self.parent = parent
         self.last_use = 0
+        self.hash = (ROOT_HASH if parent is None
+                     else combine_hash(parent.hash, key))
 
 
 class PrefixIndex:
@@ -53,6 +83,17 @@ class PrefixIndex:
         # admission); the trie only tracks its own churn
         self.pages_inserted = 0
         self.pages_evicted = 0
+        # fleet fingerprint: path hashes of every resident node,
+        # maintained incrementally on insert/evict so exporting it is a
+        # set copy, not a trie walk.  `version` bumps with every
+        # membership change — a poller republishes only when it moved.
+        self.version = 0
+        self._hashes: Set[int] = set()
+
+    def fingerprint(self) -> Tuple[int, frozenset]:
+        """(version, resident path-hash set) — cheap to export per
+        engine step; match against `prompt_page_hashes` output."""
+        return self.version, frozenset(self._hashes)
 
     # -- size accounting ------------------------------------------------
     @property
@@ -135,6 +176,8 @@ class PrefixIndex:
                 child = _Node(key, pages[i], node)
                 self.allocator.share(PREFIX_OWNER, [pages[i]])
                 node.children[key] = child
+                self._hashes.add(child.hash)
+                self.version += 1
                 adopted += 1
             child.last_use = tick
             node = child
@@ -160,6 +203,8 @@ class PrefixIndex:
                     break
                 self.allocator.free_pages(PREFIX_OWNER, [node.page])
                 del node.parent.children[node.key]
+                self._hashes.discard(node.hash)
+                self.version += 1
                 self.pages_evicted += 1
                 freed += 1
         return freed

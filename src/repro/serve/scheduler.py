@@ -35,6 +35,9 @@ class ServeRequest:
     #   engine still serves spec=False lanes, one token per step, in the
     #   same shape-stable verify call with an empty draft window)
     on_token: Optional[Callable[[int, int], None]] = None  # (rid, token)
+    logprobs: bool = False                   # record per-token (logprob,
+    #   entropy) under the processed sampling distribution into
+    #   `out_logprobs` (host-side O(vocab) per token; free when off)
     # parallel sampling: a request carrying `fork_from` (a sibling
     # ServeRequest over the SAME prompt, submitted first) adopts the
     # parent's prompt KV pages via `PagedKVCache.fork` at admission and
@@ -46,6 +49,8 @@ class ServeRequest:
 
     # lifecycle (engine-owned)
     out_tokens: List[int] = field(default_factory=list)
+    out_logprobs: List = field(default_factory=list)  # [(logprob, entropy)]
+    #   parallel to out_tokens, filled only when `logprobs` is set
     done: bool = False
     rejected: bool = False                   # never ran: deadline/too big
     truncated: bool = False                  # evicted mid-generation
@@ -106,6 +111,30 @@ class Scheduler:
     @property
     def n_queued(self) -> int:
         return len(self._heap)
+
+    def drain_queue(self) -> List[ServeRequest]:
+        """Remove and return every queued request that has NOT started,
+        in heap-priority order — the fleet router's drain path re-homes
+        them onto healthy replicas.  Requests already in lanes are
+        untouched (drain lets in-flight work finish where it runs), and
+        a preempted request stays queued here too: its progress —
+        folded prompt, StateArena snapshot, telemetry trace — belongs
+        to this engine and will resume on it."""
+        out: List[ServeRequest] = []
+        keep: List = []
+        while self._heap:
+            item = heapq.heappop(self._heap)
+            req = item[3]
+            if req.cancelled:
+                continue
+            if (req.out_tokens or req.prefill_done
+                    or req.saved_state is not None):
+                keep.append(item)
+            else:
+                out.append(req)
+        for item in keep:
+            heapq.heappush(self._heap, item)
+        return out
 
     def cancel(self, eid: int) -> Optional[ServeRequest]:
         """Remove a queued request by engine id; returns it (marked

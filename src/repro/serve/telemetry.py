@@ -154,6 +154,18 @@ class Telemetry:
         self.t_end = now
         self._retire(rid)
 
+    def forget(self, rid: int):
+        """Request handed off to another engine before running here
+        (fleet drain/requeue): drop its trace AND its requests_total
+        count — it is re-enqueued (and counted) on the replica that
+        actually serves it, so leaving it here would double-count every
+        fleet-level rollup.  Only legal for a request that never
+        admitted; a trace with progress must close via done/cancel."""
+        tr = self.traces.get(rid)
+        if tr is not None and tr.t_admit is None and tr.t_done is None:
+            del self.traces[rid]
+            self.requests_total -= 1
+
     def cancel(self, rid: int, now: float):
         """Request aborted (client disconnect / explicit cancel): the
         trace closes so percentile rollups stay well-defined, and the
@@ -211,6 +223,25 @@ class Telemetry:
         hit rate — the trie was never probed."""
         self.fork_admissions += 1
         self.prefill_tokens_skipped += cached_tokens
+
+    # -- cheap gauge view ----------------------------------------------
+    def snapshot(self) -> Dict[str, float]:
+        """O(1) counter view for per-dispatch polling: no percentile
+        math, no trace scans, no numpy — a fleet router reads this (via
+        the driver's step tap) on every routing decision, where
+        `summary()` would be orders of magnitude too heavy."""
+        return {
+            "requests_total": float(self.requests_total),
+            "tokens": float(self.tokens),
+            "decode_tokens": float(self.decode_tokens),
+            "prefill_tokens": float(self.prefill_tokens),
+            "prefix_lookups": float(self.prefix_lookups),
+            "prefix_hits": float(self.prefix_hits),
+            "prefill_tokens_skipped": float(self.prefill_tokens_skipped),
+            "fork_admissions": float(self.fork_admissions),
+            "cancelled": float(self.cancelled),
+            "decode_s": float(self.decode_s),
+        }
 
     # -- rollup ---------------------------------------------------------
     def summary(self) -> Dict[str, float]:

@@ -390,6 +390,48 @@ def test_gateway_stray_trailing_byte_does_not_abort_stream(model_params):
     assert b"[DONE]" in raw
 
 
+def test_gateway_logprobs_round_trip(model_params):
+    """`logprobs=true` adds per-token logprob + entropy to both wire
+    modes; greedy decoding's processed distribution is one-hot, so the
+    values are exactly 0.  Off by default: no extra keys, no cost."""
+    model, params = model_params
+
+    async def run():
+        gw = Gateway(_engine(model, params), max_pending=8)
+        host, port = await gw.start()
+        try:
+            on = await _post(host, port, {"prompt": [1, 2, 3],
+                                          "max_tokens": 4,
+                                          "logprobs": True})
+            off = await _post(host, port, {"prompt": [1, 2, 3],
+                                           "max_tokens": 4})
+            body = await _post(host, port, {"prompt": [1, 2, 3],
+                                            "max_tokens": 4, "n": 2,
+                                            "stream": False,
+                                            "logprobs": True})
+        finally:
+            await gw.stop()
+        return on, off, body
+
+    on, off, body = asyncio.run(run())
+    on_events = [e for e in iter_sse(_body(on)) if "token" in e]
+    assert len(on_events) == 4
+    for e in on_events:
+        assert e["logprob"] == 0.0 and e["entropy"] == 0.0, \
+            "greedy sampling is deterministic: logprob 0, entropy 0"
+    for e in iter_sse(_body(off)):
+        assert "logprob" not in e and "entropy" not in e, \
+            "logprobs are strictly opt-in"
+    choices = json.loads(_body(body))["choices"]
+    for c in choices:
+        assert len(c["logprobs"]) == len(c["tokens"])
+        assert all(lp["logprob"] == 0.0 and lp["entropy"] == 0.0
+                   for lp in c["logprobs"])
+    # the two greedy samples decoded identical streams either way
+    assert choices[0]["tokens"] == choices[1]["tokens"] \
+        == [e["token"] for e in on_events]
+
+
 def test_gateway_healthz_503_when_driver_dead(model_params):
     model, params = model_params
 

@@ -111,6 +111,44 @@ def test_main_fails_when_current_json_missing(tmp_path):
 
 
 @pytest.mark.bench
+def test_scaling_rule_gates_replica_goodput_within_current_run():
+    """Fleet rows differing only in `replicas` must show N-replica
+    goodput >= scaling_min x the 1-replica row — judged on the CURRENT
+    run alone, so a dispatch regression that flattens scaling fails
+    even when every row individually beats its baseline."""
+    cur = [_row(rate=100.0, policy="least-loaded", replicas=1,
+                goodput_tokens_per_s=80.0),
+           _row(rate=100.0, policy="least-loaded", replicas=2,
+                goodput_tokens_per_s=130.0)]
+    assert check_bench.check_scaling("b", cur, 1.5) == []
+    flat = [dict(cur[0]), dict(cur[1], goodput_tokens_per_s=90.0)]
+    fails = check_bench.check_scaling("b", flat, 1.5)
+    assert len(fails) == 1 and "1.12x" in fails[0]
+    # different rate => different identity group: never compared
+    other = [dict(cur[0]), dict(cur[1], rate=8.0,
+                                goodput_tokens_per_s=1.0)]
+    assert check_bench.check_scaling("b", other, 1.5) == []
+    # single-engine benches carry no `replicas` key: rule is inert
+    legacy = [_row(rate=20.0, goodput_tokens_per_s=50.0)]
+    assert check_bench.check_scaling("b", legacy, 1.5) == []
+
+
+@pytest.mark.bench
+def test_replicas_policy_are_identity_not_metrics():
+    """`replicas`/`policy` distinguish rows (no cross-policy metric
+    comparison) and are never themselves gated."""
+    base = [_row(policy="rr", replicas=2, ttft_p50_s=0.1),
+            _row(policy="prefix", replicas=2, ttft_p50_s=0.5)]
+    cur = [_row(policy="rr", replicas=2, ttft_p50_s=0.1),
+           _row(policy="prefix", replicas=2, ttft_p50_s=0.5)]
+    assert check_bench.check_file("b", base, cur, TOLS) == []
+    assert check_bench.check_file(
+        "b", base, [cur[1], cur[0]], TOLS) == [], "order-insensitive"
+    fails = check_bench.check_file("b", base, [cur[0]], TOLS)
+    assert len(fails) == 1 and "policy=prefix" in fails[0]
+
+
+@pytest.mark.bench
 def test_bool_quality_metric_gates():
     base = [_row(outputs_byte_identical=True)]
     cur = [_row(outputs_byte_identical=False)]

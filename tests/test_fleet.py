@@ -1,0 +1,418 @@
+"""Fleet routing layer: dispatch policies (unit + e2e), prefix-affinity
+KV reuse across replicas, drain/requeue with zero loss and exact page
+conservation, dead-replica eviction with partial-fleet /metrics and
+/healthz, fleet-level load shedding, and 2-replica SSE byte-identity
+with the offline engine."""
+import asyncio
+import json
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import Gateway, iter_sse
+from repro.fleet import (FleetRouter, LeastLoadedPolicy,
+                         PrefixAffinityPolicy, RoundRobinPolicy,
+                         make_policy)
+from repro.models import DecoderLM, ModelConfig, init_params
+from repro.serve import PagedServeEngine, ServeRequest
+from repro.serve.prefix import combine_hash, prompt_page_hashes, ROOT_HASH
+
+
+def _model():
+    cfg = ModelConfig(name="s", family="dense", n_layers=2, d_model=32,
+                      n_heads=2, n_kv_heads=2, d_ff=64, vocab=64,
+                      head_dim=16, dtype="float32", remat=False)
+    model = DecoderLM(cfg)
+    params = init_params(model.param_specs(), jax.random.PRNGKey(0),
+                         dtype_override=jnp.float32)
+    return model, params
+
+
+@pytest.fixture(scope="module")
+def model_params():
+    return _model()
+
+
+def _engine(model, params, **kw):
+    kw.setdefault("max_batch", 4)
+    kw.setdefault("max_seq", 64)
+    kw.setdefault("page_size", 8)
+    return PagedServeEngine(model, params, **kw)
+
+
+async def _raw_post(host, port, payload: bytes, path="/v1/completions"):
+    reader, writer = await asyncio.open_connection(host, port)
+    writer.write((f"POST {path} HTTP/1.1\r\nHost: t\r\n"
+                  f"Content-Length: {len(payload)}\r\n\r\n"
+                  ).encode() + payload)
+    await writer.drain()
+    data = await reader.read()
+    writer.close()
+    return data
+
+
+async def _post(host, port, body: dict):
+    return await _raw_post(host, port, json.dumps(body).encode())
+
+
+async def _get(host, port, path):
+    reader, writer = await asyncio.open_connection(host, port)
+    writer.write(f"GET {path} HTTP/1.1\r\nHost: t\r\n\r\n".encode())
+    await writer.drain()
+    data = await reader.read()
+    writer.close()
+    return data
+
+
+def _status(raw: bytes) -> int:
+    return int(raw.split(b"\r\n", 1)[0].split()[1])
+
+
+def _body(raw: bytes) -> bytes:
+    return raw.partition(b"\r\n\r\n")[2]
+
+
+def _stream_tokens(raw: bytes):
+    toks, fins = {}, {}
+    for e in iter_sse(_body(raw)):
+        if "token" in e:
+            toks.setdefault(e["index"], []).append(e["token"])
+        elif "finish_reason" in e:
+            fins[e["index"]] = e["finish_reason"]
+    return toks, fins
+
+
+# ----------------------------------------------------------------------------
+# policy units (no engines: replicas are stand-ins)
+# ----------------------------------------------------------------------------
+class _FakeReplica:
+    def __init__(self, rid, depth=0.0, occ=0.0, fingerprint=()):
+        self.id = rid
+        self.page_size = 8
+        self._depth = depth
+        self._occ = occ
+        self.fingerprint = frozenset(fingerprint)
+
+    def depth(self):
+        return self._depth
+
+    def occupancy(self):
+        return self._occ
+
+
+def test_round_robin_cycles_replica_ids_not_candidate_slots():
+    a, b, c = (_FakeReplica(i) for i in range(3))
+    pol = RoundRobinPolicy()
+    assert [pol.pick([a, b, c], None).id for _ in range(4)] == [0, 1, 2, 0]
+    # replica 1 drops out (dead / saturated): the cycle skips it without
+    # re-dealing the others
+    assert [pol.pick([a, c], None).id for _ in range(3)] == [2, 0, 2]
+
+
+def test_least_loaded_prefers_depth_then_occupancy():
+    pol = LeastLoadedPolicy()
+    a = _FakeReplica(0, depth=2.0, occ=0.1)
+    b = _FakeReplica(1, depth=1.0, occ=0.9)
+    c = _FakeReplica(2, depth=1.0, occ=0.2)
+    assert pol.pick([a, b, c], None).id == 2
+
+
+def test_prefix_affinity_scores_consecutive_pages_from_root():
+    prompt = np.arange(24, dtype=np.int32)
+    hashes = prompt_page_hashes(prompt, 8)
+    assert len(hashes) == 2         # (24 - 1) // 8 full pages usable
+    h0 = combine_hash(ROOT_HASH, tuple(int(t) for t in prompt[:8]))
+    assert hashes[0] == h0
+    holder = _FakeReplica(0, depth=5.0, fingerprint=hashes)
+    cold = _FakeReplica(1, depth=0.0)
+    gapped = _FakeReplica(2, depth=0.0, fingerprint=hashes[1:])
+    pol = PrefixAffinityPolicy()
+    # a fingerprint match beats a big load gap; a gap at the root scores
+    # zero (KV rows depend on the whole causal prefix)
+    assert pol.score(holder, hashes) == 2
+    assert pol.score(gapped, hashes) == 0
+    assert pol.pick([holder, cold, gapped], prompt) is holder
+    assert (pol.hits, pol.misses) == (1, 0)
+    # nobody holds anything: falls back to least-loaded
+    assert pol.pick([_FakeReplica(0, depth=3.0), cold], prompt) is cold
+    assert (pol.hits, pol.misses) == (1, 1)
+
+
+def test_make_policy_names():
+    assert isinstance(make_policy("rr"), RoundRobinPolicy)
+    assert isinstance(make_policy("least-loaded"), LeastLoadedPolicy)
+    assert isinstance(make_policy("prefix"), PrefixAffinityPolicy)
+    pol = PrefixAffinityPolicy()
+    assert make_policy(pol) is pol
+    with pytest.raises(ValueError):
+        make_policy("nope")
+
+
+# ----------------------------------------------------------------------------
+# prefix affinity e2e: a repeated prompt routes to the replica that
+# holds its committed pages and skips their prefill
+# ----------------------------------------------------------------------------
+def test_fleet_prefix_affinity_routes_repeat_to_holder(model_params):
+    model, params = model_params
+    prompt = list(range(1, 13))     # 12 tokens: 1 committable page of 8
+
+    async def run():
+        router = FleetRouter([_engine(model, params) for _ in range(2)],
+                             policy="prefix", max_pending=8)
+        gw = Gateway(router)
+        host, port = await gw.start()
+        try:
+            first = await _post(host, port, {"prompt": prompt,
+                                             "max_tokens": 4})
+            holder = max(router.replicas, key=lambda r: r.dispatches)
+            # the driver tap republishes the fingerprint after the trie
+            # commit; completion ordering guarantees it already ran, but
+            # poll a moment for the attribute swap to be visible here
+            for _ in range(100):
+                if holder.fingerprint:
+                    break
+                await asyncio.sleep(0.01)
+            second = await _post(host, port, {"prompt": prompt,
+                                              "max_tokens": 4})
+            third = await _post(host, port, {"prompt": prompt,
+                                             "max_tokens": 4})
+            m = json.loads(_body(await _get(host, port, "/metrics")))
+        finally:
+            await gw.stop()
+        stats = (router.policy.hits, router.policy.misses,
+                 holder.dispatches, holder.id)
+        return first, second, third, m, stats
+
+    first, second, third, m, stats = asyncio.run(run())
+    hits, misses, holder_dispatches, holder_id = stats
+    for raw in (first, second, third):
+        assert _status(raw) == 200
+    assert misses >= 1, "cold fleet: the first dispatch is a miss"
+    assert hits >= 2, "repeats must route by fingerprint match"
+    assert holder_dispatches == 3, \
+        "every repeat must land on the replica holding the prefix"
+    # the holder's engine reused the committed page: repeats skipped
+    # 8-token page prefills that round-robin would have re-run cold
+    eng = m["fleet"]["replicas"][str(holder_id)]["engine"]
+    assert eng["prefix_hits"] >= 2
+    assert eng["prefill_tokens_skipped"] >= 16
+    assert m["fleet"]["affinity_hits"] == hits
+    assert m["engine"]["prefix_hit_rate"] > 0
+    # identical sampling state per replica => identical greedy streams
+    assert _stream_tokens(first)[0] == _stream_tokens(second)[0]
+
+
+# ----------------------------------------------------------------------------
+# drain: not-yet-started requests re-home with zero loss / duplication
+# ----------------------------------------------------------------------------
+def test_fleet_drain_requeues_without_loss_or_leaks(model_params):
+    model, params = model_params
+    prompts = [np.array([1, 2, 3], np.int32),
+               np.array([5, 6, 7, 8], np.int32),
+               np.array([9, 10, 11], np.int32)]
+
+    offline = _engine(model, params)
+    ref_reqs = [ServeRequest(prompt=p.copy(), max_new_tokens=8, rid=i)
+                for i, p in enumerate(prompts)]
+    offline.run(ref_reqs)
+    ref = [r.out_tokens for r in ref_reqs]
+
+    async def run():
+        # max_batch=1: one lane per replica, so two of the three groups
+        # pin replica 0's scheduler queue until the drain re-homes them
+        router = FleetRouter(
+            [_engine(model, params, max_batch=1) for _ in range(2)],
+            policy="least-loaded", max_pending=8).start()
+        rep0, rep1 = router.replicas
+        done, done_evt = [], threading.Event()
+
+        def on_done(req):           # driver thread
+            done.append(req)
+            router.release(req)
+            if len(done) == 3:
+                done_evt.set()
+
+        try:
+            reqs = [ServeRequest(prompt=p.copy(), max_new_tokens=8,
+                                 rid=i) for i, p in enumerate(prompts)]
+            for r in reqs:          # all three forced onto replica 0
+                await asyncio.wrap_future(
+                    router.dispatch(rep0, [r], on_done))
+            for _ in range(200):    # one admitted, two queued
+                state = await asyncio.wrap_future(rep0.driver.call(
+                    lambda e: (e.n_running, e.scheduler.n_queued)))
+                if state == (1, 2):
+                    break
+                await asyncio.sleep(0.01)
+            assert state == (1, 2)
+            requeued = await router.drain(0)
+            assert not rep0.live and rep0.alive, \
+                "draining replica serves its tail but takes no new work"
+            assert router.route(prompts[0], 1) is rep1, \
+                "routing must exclude the draining replica"
+            await asyncio.get_running_loop().run_in_executor(
+                None, done_evt.wait, 30)
+            # conservation per replica: every page free or reclaimable,
+            # no lane still occupied, and no double-counted request
+            audit = []
+            for rep in (rep0, rep1):
+                audit.append(await asyncio.wrap_future(rep.driver.call(
+                    lambda e: (e.cache.n_free_or_cached(),
+                               e.cache.allocator.n_pages, e.n_running,
+                               e.scheduler.n_queued,
+                               e.telemetry.requests_total))))
+        finally:
+            router.stop()
+        return reqs, done, requeued, audit, dict(router.counters), \
+            (rep0.pending, rep1.pending)
+
+    reqs, done, requeued, audit, counters, pending = asyncio.run(run())
+    assert requeued == 2 and counters["requeued"] == 2
+    assert counters["requeue_failed"] == 0
+    assert len(done) == 3, "every request finishes exactly once"
+    assert len({id(r) for r in done}) == 3, "no duplicated completion"
+    for r, want in zip(reqs, ref):
+        assert not r.cancelled and not r.rejected
+        assert r.out_tokens == want, \
+            "a re-homed request must decode exactly as offline"
+    for free_or_cached, n_pages, running, queued, total in audit:
+        assert (running, queued) == (0, 0)
+        assert free_or_cached == n_pages, "drain leaked KV pages"
+    assert [a[4] for a in audit] == [1.0, 2.0], \
+        "requeue must not double-count requests_total across replicas"
+    assert pending == (0, 0), "admission ledger must return to zero"
+
+
+# ----------------------------------------------------------------------------
+# replica death: evicted from rotation, partial-fleet metrics/healthz
+# ----------------------------------------------------------------------------
+def test_fleet_dead_replica_evicted_and_partial_metrics(model_params):
+    model, params = model_params
+
+    async def run():
+        router = FleetRouter([_engine(model, params) for _ in range(2)],
+                             policy="rr", max_pending=8)
+        gw = Gateway(router)
+        host, port = await gw.start()
+        try:
+            router.replicas[0].driver.stop()    # replica 0 gone
+            health = await _get(host, port, "/healthz")
+            raws = [await _post(host, port, {"prompt": [1, 2, 3],
+                                             "max_tokens": 3})
+                    for _ in range(3)]
+            m = json.loads(_body(await _get(host, port, "/metrics")))
+            router.replicas[1].driver.stop()    # whole fleet down
+            dead_health = await _get(host, port, "/healthz")
+            dead_post = await _post(host, port, {"prompt": [1, 2],
+                                                 "max_tokens": 2})
+            dead_m = json.loads(_body(await _get(host, port, "/metrics")))
+        finally:
+            await gw.stop()
+        return health, raws, m, dead_health, dead_post, dead_m, \
+            router.replicas[1].dispatches
+
+    health, raws, m, dead_health, dead_post, dead_m, surv = \
+        asyncio.run(run())
+    assert _status(health) == 200, "one live replica keeps /healthz green"
+    assert json.loads(_body(health))["n_live"] == 1
+    for raw in raws:
+        assert _status(raw) == 200, "survivor must absorb all traffic"
+    assert surv == 3
+    # partial fleet: aggregate covers the survivor, the dead replica is
+    # reported (not KeyError'd), and its absence doesn't nan the rollup
+    assert m["fleet"]["n_live"] == 1
+    assert m["fleet"]["replicas"]["0"]["alive"] is False
+    assert "engine" not in m["fleet"]["replicas"]["0"]
+    assert m["fleet"]["replicas"]["1"]["alive"] is True
+    assert m["engine"]["requests"] == 3.0
+    assert m["gateway"]["accepted_samples"] == 3
+    # whole fleet down: honest 503s and a metrics payload that still
+    # renders (engine=None + error, never a traceback)
+    assert _status(dead_health) == 503
+    assert _status(dead_post) == 503
+    assert dead_m["engine"] is None and "error" in dead_m
+
+
+# ----------------------------------------------------------------------------
+# fleet-level shedding: 429 only when EVERY live replica is saturated
+# ----------------------------------------------------------------------------
+def test_fleet_429_only_when_all_replicas_saturated(model_params):
+    model, params = model_params
+
+    async def run():
+        router = FleetRouter([_engine(model, params) for _ in range(2)],
+                             policy="least-loaded", max_pending=1)
+        gw = Gateway(router)
+        host, port = await gw.start()
+        gates = [threading.Event(), threading.Event()]
+        try:
+            for rep, gate in zip(router.replicas, gates):
+                rep.driver.call(lambda e, g=gate: g.wait(30))
+            first = asyncio.ensure_future(
+                _post(host, port, {"prompt": [1, 2], "max_tokens": 2}))
+            second = asyncio.ensure_future(
+                _post(host, port, {"prompt": [3, 4], "max_tokens": 2}))
+            for _ in range(200):    # both replicas now hold one sample
+                if gw.counters["accepted_samples"] == 2:
+                    break
+                await asyncio.sleep(0.01)
+            third = await _post(host, port, {"prompt": [5, 6],
+                                             "max_tokens": 2})
+            for g in gates:
+                g.set()
+            first_raw, second_raw = await first, await second
+        finally:
+            for g in gates:
+                g.set()
+            await gw.stop()
+        return first_raw, second_raw, third, dict(gw.counters)
+
+    first_raw, second_raw, third, counters = asyncio.run(run())
+    assert _status(first_raw) == 200 and _status(second_raw) == 200, \
+        "one saturated replica must NOT shed while the other has room"
+    assert _status(third) == 429, "both saturated: fleet-level shed"
+    assert b"retry-after" in third.lower()
+    assert counters["rejected_429"] == 1
+
+
+# ----------------------------------------------------------------------------
+# acceptance: greedy SSE through a 2-replica fleet is byte-identical to
+# the single-engine (offline) runtime
+# ----------------------------------------------------------------------------
+def test_fleet_sse_greedy_byte_identical_to_offline(model_params):
+    model, params = model_params
+    prompts = [np.array([1, 2, 3], np.int32),
+               np.array([5, 6, 7, 8, 9, 10, 11], np.int32),
+               np.array([40, 2, 9, 9], np.int32),
+               np.array([17, 3], np.int32)]
+
+    offline = _engine(model, params)
+    reqs = [ServeRequest(prompt=p.copy(), max_new_tokens=6, rid=i)
+            for i, p in enumerate(prompts)]
+    offline.run(reqs)
+    ref = [r.out_tokens for r in reqs]
+
+    async def run():
+        router = FleetRouter([_engine(model, params) for _ in range(2)],
+                             policy="rr", max_pending=16)
+        gw = Gateway(router)
+        host, port = await gw.start()
+        try:
+            raws = await asyncio.gather(*[
+                _post(host, port,
+                      {"prompt": [int(t) for t in p], "max_tokens": 6})
+                for p in prompts])
+        finally:
+            await gw.stop()
+        return raws, [rep.dispatches for rep in router.replicas]
+
+    raws, dispatches = asyncio.run(run())
+    assert dispatches == [2, 2], "rr must spread the groups evenly"
+    for raw, want in zip(raws, ref):
+        assert _status(raw) == 200
+        toks, fins = _stream_tokens(raw)
+        assert toks[0] == want, "fleet stream diverged from offline"
+        assert fins[0] == "length"

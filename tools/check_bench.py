@@ -34,7 +34,7 @@ from typing import Dict, List, Tuple
 
 # identity fields: define WHICH row we compare, never gated themselves
 IDENTITY = ("mode", "family", "mix", "workload", "drafter", "k", "batch",
-            "n_requests", "prefix_len", "rate", "n")
+            "n_requests", "prefix_len", "rate", "n", "replicas", "policy")
 
 # (substring, direction, class); first match wins.  direction "higher"
 # means bigger is better.  Metrics matching nothing are informational.
@@ -45,6 +45,8 @@ METRIC_RULES: List[Tuple[str, str, str]] = [
     ("kv_savings", "higher", "quality"),
     ("prefill_tokens_skipped", "higher", "quality"),
     ("prefix_hit_rate", "higher", "quality"),
+    ("pairs_identical", "higher", "quality"),
+    ("affinity_hits", "higher", "quality"),
     ("sim_speedup", "higher", "quality"),
     ("completed", "higher", "quality"),
     ("ttft_speedup", "higher", "timing"),
@@ -120,6 +122,40 @@ def check_file(name: str, baseline: List[Dict], current: List[Dict],
     return failures
 
 
+def check_scaling(name: str, current: List[Dict],
+                  scaling_min: float) -> List[str]:
+    """Fleet goodput-scaling gate, judged WITHIN the current run (no
+    baseline involved): rows that differ only in `replicas` must show
+    N-replica goodput >= scaling_min x the 1-replica goodput at the
+    same offered load.  Catches a routing/dispatch regression that
+    makes extra replicas useless while every per-row metric still looks
+    individually healthy."""
+    failures: List[str] = []
+    groups: Dict[Tuple, Dict[int, Dict]] = {}
+    for r in current:
+        if "replicas" not in r or "goodput_tokens_per_s" not in r:
+            continue
+        key = tuple((k, r[k]) for k in IDENTITY
+                    if k in r and k != "replicas")
+        groups.setdefault(key, {})[int(r["replicas"])] = r
+    for key, by_rep in groups.items():
+        base_row = by_rep.get(1)
+        if base_row is None or not base_row["goodput_tokens_per_s"]:
+            continue
+        base = float(base_row["goodput_tokens_per_s"])
+        label = name + "[" + ",".join(f"{k}={v}" for k, v in key) + "]"
+        for nrep in sorted(by_rep):
+            if nrep == 1:
+                continue
+            ratio = float(by_rep[nrep]["goodput_tokens_per_s"]) / base
+            if ratio < scaling_min - 1e-9:
+                failures.append(
+                    f"{label}: {nrep}-replica goodput only "
+                    f"{ratio:.2f}x the 1-replica run "
+                    f"(need >= {scaling_min:g}x)")
+    return failures
+
+
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--baseline",
@@ -138,6 +174,13 @@ def main() -> int:
     ap.add_argument("--quality-tol", type=float, default=0.15,
                     help="allowed relative worsening for deterministic "
                          "quality metrics")
+    ap.add_argument("--scaling-min", type=float, default=1.5,
+                    help="minimum N-replica/1-replica goodput ratio for "
+                         "fleet bench rows differing only in `replicas` "
+                         "(judged within the current run; lower it on "
+                         "single-core runners, where scaling comes from "
+                         "admission capacity alone, not parallel "
+                         "compute)")
     ap.add_argument("--update", action="store_true",
                     help="overwrite baselines from --current")
     args = ap.parse_args()
@@ -183,6 +226,7 @@ def main() -> int:
         with open(cur_path) as f:
             current = json.load(f)
         fails = check_file(n, baseline, current, tols)
+        fails += check_scaling(n, current, args.scaling_min)
         status = "FAIL" if fails else "ok"
         print(f"check_bench: {n}: {len(baseline)} baseline rows, "
               f"{len(fails)} regressions [{status}]")
