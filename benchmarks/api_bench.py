@@ -103,6 +103,55 @@ async def _drive_one(host, port, body: dict, t_arrival: float) -> dict:
     return out
 
 
+async def _http_get_json(host, port, path):
+    """GET a JSON document from the gateway (used for /debug/trace, so
+    the trace artifact exercises the real endpoint, not an in-process
+    shortcut)."""
+    reader, writer = await asyncio.open_connection(host, port)
+    try:
+        writer.write(f"GET {path} HTTP/1.1\r\nHost: bench\r\n\r\n"
+                     .encode())
+        await writer.drain()
+        status = int((await reader.readline()).split()[1])
+        length = None
+        while True:
+            line = await reader.readline()
+            if line in (b"\r\n", b""):
+                break
+            key, _, val = line.decode().partition(":")
+            if key.strip().lower() == "content-length":
+                length = int(val)
+        body = (await reader.readexactly(length) if length is not None
+                else await reader.read())
+        return status, json.loads(body)
+    finally:
+        writer.close()
+        try:
+            await writer.wait_closed()
+        except (ConnectionError, OSError):
+            pass
+
+
+def _check_trace_correlation(doc: dict) -> None:
+    """The point of the tracer is cross-layer correlation: a request id
+    minted at the gateway must reappear on the router's dispatch event
+    and inside the engine's decode-step spans (which ran on a different
+    thread).  Assert it on the real capture."""
+    events = doc["traceEvents"]
+    gw_rids = {e["args"]["rid"] for e in events
+               if e.get("name") == "request" and e.get("ph") == "X"}
+    route_rids = {r for e in events if e.get("name") == "route_dispatch"
+                  for r in e["args"].get("rids", [])}
+    decode_rids = {r for e in events if e.get("name") == "decode_step"
+                   for r in e["args"].get("rids", [])}
+    assert gw_rids, "trace has no gateway request spans"
+    shared = gw_rids & route_rids & decode_rids
+    assert shared, (
+        "no request id is shared across gateway/router/engine spans: "
+        f"gateway={sorted(gw_rids)[:4]} router={sorted(route_rids)[:4]} "
+        f"engine={sorted(decode_rids)[:4]}")
+
+
 async def _fire_wave(host, port, bodies, rate, rng):
     """Open-loop Poisson wave with a coordinated-omission-safe intended
     arrival schedule fixed up front: TTFT is measured from the INTENDED
@@ -133,7 +182,14 @@ async def run_rate(model, params, *, rate: float, n_requests: int,
                    page_size: int, max_pending: int, prompt_lo: int,
                    prompt_hi: int, replicas: int = 1,
                    policy: str = "least-loaded",
-                   shared_prefix: bool = False, seed: int = 0) -> dict:
+                   shared_prefix: bool = False, seed: int = 0,
+                   trace=None):
+    """One (replicas, policy, rate) cell.  `trace` is tri-state: None
+    leaves the tracer alone and omits the `tracing` identity field
+    (plain sweeps stay comparable to their committed baselines);
+    True/False force the tracer on/off and label the row, so an A/B
+    pair from the SAME run feeds check_bench's tracing-overhead gate.
+    Returns (row, chrome_trace_doc_or_None)."""
     engines = []
     for _ in range(replicas):
         eng = PagedServeEngine(model, params, max_batch=batch,
@@ -141,6 +197,12 @@ async def run_rate(model, params, *, rate: float, n_requests: int,
                                prefill_chunk=16)
         warm_engine(eng)    # compile prefill/decode BEFORE the driver
         engines.append(eng)
+    tracer = None
+    if trace is not None:
+        from repro.obs import get_tracer
+        tracer = get_tracer()
+        tracer.clear()
+        tracer.enable() if trace else tracer.disable()
     # max_pending is PER REPLICA: the fleet's admission capacity scales
     # with the fleet, which is the scaling story being measured
     router = FleetRouter(engines, policy=policy, max_pending=max_pending)
@@ -186,7 +248,15 @@ async def run_rate(model, params, *, rate: float, n_requests: int,
         results = await _fire_wave(host, port, bodies, rate, rng)
     wall = time.monotonic() - t0
     metrics = await gw._metrics()
+    trace_doc = None
+    if trace:
+        status, trace_doc = await _http_get_json(host, port,
+                                                 "/debug/trace")
+        assert status == 200, f"/debug/trace returned {status}"
+        _check_trace_correlation(trace_doc)
     await gw.stop()
+    if tracer is not None:
+        tracer.disable()
 
     ok = [r for r in results if r["status"] == 200 and r["done_s"]]
     ttft = [r["ttft_s"] for r in ok if r["ttft_s"] is not None]
@@ -194,10 +264,11 @@ async def run_rate(model, params, *, rate: float, n_requests: int,
     total_tokens = sum(r["tokens"] for r in ok)
     eng_agg = metrics["engine"] or {}
     fleet = metrics["fleet"]
-    return {
+    row = {
         "mode": "open-loop", "rate": float(rate),
         "workload": "shared-prefix" if shared_prefix else "uniform",
         "replicas": replicas, "policy": policy,
+        **({"tracing": bool(trace)} if trace is not None else {}),
         "n_requests": len(results), "n": n, "batch": batch,
         "completed": len(ok),
         "rejected_429": sum(r["status"] == 429 for r in results),
@@ -217,7 +288,12 @@ async def run_rate(model, params, *, rate: float, n_requests: int,
         "affinity_misses": fleet.get("affinity_misses"),
         "pairs_checked": pairs_checked,
         "pairs_identical": pairs_identical,
+        # CIM cost-model energy attribution for the traffic this cell
+        # actually served (sim_* = simulated, not measured)
+        "sim_energy_j": float(eng_agg.get("sim_energy_j", 0.0)),
+        "sim_tokens_per_j": float(eng_agg.get("sim_tokens_per_j", 0.0)),
     }
+    return row, trace_doc
 
 
 def main():
@@ -246,6 +322,15 @@ def main():
     ap.add_argument("--shared-prefix", action="store_true",
                     help="two-wave repeated-prompt workload (prefix "
                          "affinity A/B) instead of uniform random")
+    ap.add_argument("--trace", action="store_true",
+                    help="run every cell twice — tracing off then on — "
+                         "label rows with a `tracing` field for "
+                         "check_bench's overhead gate, and save the "
+                         "traced run's Chrome trace (Perfetto-loadable) "
+                         "as an artifact")
+    ap.add_argument("--trace-artifact", default=None, metavar="PATH",
+                    help="where to write the Chrome trace JSON "
+                         "(default results/benchmarks/<out>.trace.json)")
     ap.add_argument("--out", default="api_bench",
                     help="results/benchmarks/<out>.json basename")
     args = ap.parse_args()
@@ -254,33 +339,53 @@ def main():
     model, params = build_model(args.scale)
     print(f"model: {model.n_params()/1e6:.1f}M params, "
           f"backend={jax.default_backend()}")
-    print("replicas,policy,rate_rps,completed,shed_429,goodput_tok/s,"
-          "ttft_p50_ms,ttft_p99_ms,itl_p50_ms,itl_p99_ms,prefix_hit")
-    rows = []
+    print("replicas,policy,rate_rps,tracing,completed,shed_429,"
+          "goodput_tok/s,ttft_p50_ms,ttft_p99_ms,itl_p50_ms,itl_p99_ms,"
+          "prefix_hit,sim_tok/J")
+    rows, trace_doc = [], None
+    trace_modes = [False, True] if args.trace else [None]
     for replicas in args.replicas:
         for policy in args.policies:
             for rate in args.rates:
-                r = asyncio.run(run_rate(
-                    model, params, rate=rate, n_requests=args.requests,
-                    tokens=args.tokens, n=args.n, batch=args.batch,
-                    max_seq=args.max_seq, page_size=args.page_size,
-                    max_pending=args.max_pending,
-                    prompt_lo=args.prompt_lo, prompt_hi=args.prompt_hi,
-                    replicas=replicas, policy=policy,
-                    shared_prefix=args.shared_prefix))
-                rows.append(r)
-                hit = r["prefix_hit_rate"]
-                print(f"{replicas},{policy},{r['rate']:g},"
-                      f"{r['completed']},{r['rejected_429']},"
-                      f"{r['goodput_tokens_per_s']:.1f},"
-                      f"{r['ttft_p50_s']*1e3:.0f},"
-                      f"{r['ttft_p99_s']*1e3:.0f},"
-                      f"{r['itl_p50_s']*1e3:.1f},"
-                      f"{r['itl_p99_s']*1e3:.1f},"
-                      f"{hit if np.isfinite(hit) else float('nan'):.2f}")
-                assert r["errors"] == 0, \
-                    f"gateway returned errors at rate {rate}"
+                for tracing in trace_modes:
+                    r, doc = asyncio.run(run_rate(
+                        model, params, rate=rate,
+                        n_requests=args.requests,
+                        tokens=args.tokens, n=args.n, batch=args.batch,
+                        max_seq=args.max_seq,
+                        page_size=args.page_size,
+                        max_pending=args.max_pending,
+                        prompt_lo=args.prompt_lo,
+                        prompt_hi=args.prompt_hi,
+                        replicas=replicas, policy=policy,
+                        shared_prefix=args.shared_prefix,
+                        trace=tracing))
+                    rows.append(r)
+                    if doc is not None:
+                        trace_doc = doc     # keep the last traced cell
+                    hit = r["prefix_hit_rate"]
+                    print(f"{replicas},{policy},{r['rate']:g},"
+                          f"{'-' if tracing is None else int(tracing)},"
+                          f"{r['completed']},{r['rejected_429']},"
+                          f"{r['goodput_tokens_per_s']:.1f},"
+                          f"{r['ttft_p50_s']*1e3:.0f},"
+                          f"{r['ttft_p99_s']*1e3:.0f},"
+                          f"{r['itl_p50_s']*1e3:.1f},"
+                          f"{r['itl_p99_s']*1e3:.1f},"
+                          f"{hit if np.isfinite(hit) else float('nan'):.2f},"
+                          f"{r['sim_tokens_per_j']:.1f}")
+                    assert r["errors"] == 0, \
+                        f"gateway returned errors at rate {rate}"
     save_json(args.out, rows)
+    if trace_doc is not None:
+        from common import RESULTS_DIR
+        path = args.trace_artifact or os.path.join(
+            RESULTS_DIR, args.out + ".trace.json")
+        os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+        with open(path, "w") as f:
+            json.dump(trace_doc, f)
+        print(f"chrome trace ({len(trace_doc['traceEvents'])} events) "
+              f"-> {path}")
 
 
 if __name__ == "__main__":

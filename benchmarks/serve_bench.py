@@ -51,6 +51,7 @@ def warm_engine(eng, vocab=2048):
     warm = np.tile(motif, 5).astype(np.int32)[:17]
     eng.run([ServeRequest(prompt=warm, max_new_tokens=2, rid=-1)])
     eng.telemetry = Telemetry()
+    eng.energy.reset()      # tokens/J covers only the measured window
 
 PROMPT_MIXES = {
     "short": (4, 12),        # uniform prompt-length range

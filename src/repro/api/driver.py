@@ -23,6 +23,8 @@ import threading
 from concurrent.futures import Future
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
+from repro.obs.trace import get_tracer
+
 
 class EngineDriver:
     def __init__(self, engine, idle_wait_s: float = 0.05, tap=None):
@@ -47,6 +49,10 @@ class EngineDriver:
                                         name="engine-driver", daemon=True)
         self.steps = 0
         self.error: Optional[BaseException] = None   # fatal step failure
+        self.tracer = get_tracer()
+        self.flight_path: Optional[str] = None   # postmortem dump, set
+        #   when a fatal step error makes the engine's flight recorder
+        #   write its ring to disk
 
     # -- lifecycle ------------------------------------------------------
     def start(self) -> "EngineDriver":
@@ -139,7 +145,9 @@ class EngineDriver:
             if not fut.set_running_or_notify_cancel():
                 continue
             try:
-                fut.set_result(fn(self.engine))
+                with self.tracer.span("driver_job", cat="driver",
+                                      thread=self._thread.name):
+                    fut.set_result(fn(self.engine))
             except BaseException as e:   # the loop must survive any job
                 fut.set_exception(e)
 
@@ -177,8 +185,15 @@ class EngineDriver:
                     # the engine's host/device state may be corrupt:
                     # stop serving rather than limp on.  The recorded
                     # error surfaces through /healthz (503), so a
-                    # liveness probe restarts the instance.
+                    # liveness probe restarts the instance.  Dump the
+                    # engine's flight recorder first: the dead-replica
+                    # eviction that follows needs a postmortem, not
+                    # silence.
                     self.error = e
+                    recorder = getattr(engine, "recorder", None)
+                    if recorder is not None:
+                        recorder.record("fatal", error=repr(e))
+                        self.flight_path = recorder.dump(reason=repr(e))
                     break
                 self.steps += 1
                 # publish AFTER the step but BEFORE the next sweep

@@ -44,9 +44,15 @@ from __future__ import annotations
 
 import asyncio
 import contextlib
+import json
+import time
 from typing import Dict, List, Optional, Tuple
+from urllib.parse import parse_qs
 
 import numpy as np
+
+from repro.obs.export import chrome_trace, prometheus_text
+from repro.obs.trace import get_tracer
 
 from .protocol import (CompletionRequest, ProtocolError, error_response,
                        http_response, json_response, parse_completion,
@@ -56,6 +62,12 @@ _SSE_HEADERS = (b"HTTP/1.1 200 OK\r\n"
                 b"Content-Type: text/event-stream\r\n"
                 b"Cache-Control: no-cache\r\n"
                 b"Connection: close\r\n\r\n")
+
+# bumped whenever the /metrics JSON payload changes shape, so
+# check_bench.py and external scrapers can detect format drift instead
+# of misreading renamed keys.  v2: added schema_version itself, the
+# sim_* energy metrics, and the fleet aggregation of both.
+METRICS_SCHEMA_VERSION = 2
 
 
 def _finish_reason(req, eos_id: Optional[int]) -> str:
@@ -77,7 +89,7 @@ class Gateway:
     on any replica while the gateway is running."""
 
     def __init__(self, engine_or_router, *, max_pending: int = 32,
-                 max_n: int = 8):
+                 max_n: int = 8, access_log=None):
         assert max_pending >= 0 and max_n >= 1
         # deferred: repro.fleet pulls in repro.api.driver, whose package
         # __init__ imports this module — a top-level import would cycle
@@ -96,6 +108,24 @@ class Gateway:
             "http_requests": 0, "accepted_samples": 0, "rejected_429": 0,
             "bad_requests": 0, "disconnects": 0, "completed_samples": 0}
         self._server: Optional[asyncio.AbstractServer] = None
+        self.tracer = get_tracer()
+        # structured access log: one JSON line per /v1/completions
+        # request (path string or an open file-like); None = silent
+        self._access_log = None
+        self._access_log_own = False
+        if access_log is not None:
+            if hasattr(access_log, "write"):
+                self._access_log = access_log
+            else:
+                self._access_log = open(access_log, "a")
+                self._access_log_own = True
+
+    def _log_access(self, **fields) -> None:
+        if self._access_log is None:
+            return
+        self._access_log.write(
+            json.dumps(fields, separators=(",", ":")) + "\n")
+        self._access_log.flush()
 
     # -- single-engine compatibility surface ---------------------------
     @property
@@ -138,6 +168,9 @@ class Gateway:
         # step can take seconds): keep it off the event loop
         await asyncio.get_running_loop().run_in_executor(
             None, self.router.stop)
+        if self._access_log_own and self._access_log is not None:
+            self._access_log.close()
+            self._access_log = None
 
     async def serve_forever(self, host: str = "127.0.0.1",
                             port: int = 8151) -> None:
@@ -165,11 +198,34 @@ class Gateway:
             except (ConnectionError, asyncio.IncompleteReadError,
                     asyncio.LimitOverrunError):
                 return
-            if method == "POST" and path == "/v1/completions":
+            route, _, query = path.partition("?")
+            qs = parse_qs(query) if query else {}
+            if method == "POST" and route == "/v1/completions":
                 await self._completions(body, reader, writer)
-            elif method == "GET" and path in ("/metrics", "/v1/metrics"):
-                writer.write(json_response(200, "OK",
-                                           await self._metrics()))
+            elif method == "GET" and route in ("/metrics", "/v1/metrics"):
+                payload = await self._metrics()
+                if qs.get("format", [""])[0] == "prometheus":
+                    text = prometheus_text(payload)
+                    writer.write(http_response(
+                        200, "OK",
+                        {"Content-Type":
+                         "text/plain; version=0.0.4; charset=utf-8"},
+                        text.encode()))
+                else:
+                    writer.write(json_response(200, "OK", payload))
+            elif method == "GET" and route == "/debug/trace":
+                # Chrome trace-event JSON of everything the process
+                # tracer holds — load the body directly in Perfetto.
+                # 404 (not an empty trace) when tracing is off, so a
+                # misconfigured capture fails loudly.
+                if not self.tracer.enabled:
+                    writer.write(error_response(
+                        404, "Not Found",
+                        "tracing disabled: start with --trace or "
+                        "REPRO_TRACE=1"))
+                else:
+                    writer.write(json_response(
+                        200, "OK", chrome_trace(self.tracer)))
             elif method == "GET" and path == "/healthz":
                 # fleet liveness: 200 while any replica serves (a probe
                 # must not kill a gateway that is degraded, not down);
@@ -243,17 +299,21 @@ class Gateway:
     async def _completions(self, body: bytes,
                            reader: asyncio.StreamReader,
                            writer: asyncio.StreamWriter) -> None:
+        t_arrive = time.monotonic()
         try:
             creq = parse_completion(body, vocab=self.engine.model.cfg.vocab,
                                     max_n=self.max_n,
                                     max_prompt_len=self.engine.max_seq)
         except ProtocolError as e:
             self.counters["bad_requests"] += 1
+            self._log_access(rid=None, status=400, reason=e.message)
             writer.write(error_response(400, "Bad Request", e.message))
             return
         if not self.router.alive:
             # fail fast: submitting to a dead fleet would hang this
             # handler forever and leak the admission budget
+            self._log_access(rid=None, status=503,
+                             reason="engine driver not running")
             writer.write(error_response(
                 503, "Service Unavailable", "engine driver not running"))
             return
@@ -266,6 +326,18 @@ class Gateway:
 
         prompt = np.asarray(creq.prompt, np.int32)
         reqs = self._build_requests(creq, q, loop)
+        # process-unique tracing ids, assigned before submission so the
+        # engine's span events carry them; reqs[0]'s id labels the
+        # whole group in the access log and the gateway lifecycle span
+        for r in reqs:
+            r.trace_id = self.tracer.next_request_id()
+        rid0 = reqs[0].trace_id
+        if self.tracer.enabled:
+            self.tracer.instant("request_arrive", cat="gateway",
+                                rid=rid0,
+                                rids=[r.trace_id for r in reqs],
+                                n=creq.n, prompt_len=len(creq.prompt),
+                                stream=creq.stream)
         # route -> dispatch, retrying on a replica that died between the
         # pick and the submit; accounting (pending + accepted_samples)
         # moves BEFORE the await so a burst of concurrent arrivals sees
@@ -275,6 +347,12 @@ class Gateway:
             if rep is None:     # every live replica saturated: shed
                 self.counters["rejected_429"] += 1
                 retry = self.router.retry_after_s()
+                if self.tracer.enabled:
+                    self.tracer.instant("request_shed", cat="gateway",
+                                        rid=rid0, retry_after_s=retry)
+                self._log_access(rid=rid0, status=429,
+                                 reason="fleet saturated",
+                                 retry_after_s=retry)
                 writer.write(error_response(
                     429, "Too Many Requests",
                     f"{self._inflight} samples in flight of "
@@ -290,16 +368,33 @@ class Gateway:
                 self.router.dispatch_failed(rep, reqs)      # roll back
                 self.counters["accepted_samples"] -= creq.n
                 if not self.router.alive:
+                    self._log_access(rid=rid0, status=503,
+                                     reason="engine driver not running")
                     writer.write(error_response(
                         503, "Service Unavailable",
                         "engine driver not running"))
                     return
                 # survivors exist: re-route the same group
         del eids    # engine ids are replica-local; aborts go by request
+        ctx = {"first": None, "tokens": 0}
         if creq.stream:
-            await self._stream_sse(creq, q, reqs, reader, writer)
+            status = await self._stream_sse(creq, q, reqs, reader,
+                                            writer, ctx)
         else:
-            await self._respond_json(creq, q, reqs, writer)
+            status = await self._respond_json(creq, q, reqs, writer, ctx)
+        t_done = time.monotonic()
+        ttft = (ctx["first"] - t_arrive
+                if ctx["first"] is not None else None)
+        if self.tracer.enabled:
+            self.tracer.complete("request", t_arrive, t_done - t_arrive,
+                                 cat="gateway", rid=rid0,
+                                 replica=rep.id, status=status,
+                                 tokens=ctx["tokens"])
+        self._log_access(rid=rid0, replica=rep.id,
+                         policy=self.router.policy.name, status=status,
+                         n=creq.n, prompt_len=len(creq.prompt),
+                         ttft_s=ttft, tokens=ctx["tokens"],
+                         dur_s=t_done - t_arrive)
 
     def _sample_done(self, q: asyncio.Queue, req) -> None:
         self.router.release(req)
@@ -343,7 +438,8 @@ class Gateway:
                     "logprob": lp, "entropy": ent}
         return {"index": rid, "token": payload}
 
-    async def _stream_sse(self, creq, q, reqs, reader, writer) -> None:
+    async def _stream_sse(self, creq, q, reqs, reader, writer,
+                          ctx: Dict) -> str:
         writer.write(_SSE_HEADERS)
         eof_box = [asyncio.ensure_future(reader.read(1))]
         try:
@@ -353,9 +449,12 @@ class Gateway:
                 event = await self._next_event(q, reader, eof_box)
                 if event is None:       # client went away mid-stream:
                     await self._abort(reqs)   # abort the whole group
-                    return
+                    return "disconnect"
                 kind, rid, payload = event
                 if kind == "token":
+                    if ctx["first"] is None:
+                        ctx["first"] = time.monotonic()
+                    ctx["tokens"] += 1
                     writer.write(sse_event(
                         self._token_event(creq, rid, payload)))
                 else:
@@ -368,14 +467,17 @@ class Gateway:
                 await writer.drain()
             writer.write(sse_done())
             await writer.drain()
+            return "ok"
         except (ConnectionResetError, BrokenPipeError):
             await self._abort(reqs)
+            return "disconnect"
         finally:
             eof_box[0].cancel()
             with contextlib.suppress(asyncio.CancelledError):
                 await eof_box[0]
 
-    async def _respond_json(self, creq, q, reqs, writer) -> None:
+    async def _respond_json(self, creq, q, reqs, writer,
+                            ctx: Dict) -> str:
         """Non-streaming mode: there is nothing incremental to deliver,
         so the client socket is NOT watched for EOF — a legal HTTP
         half-close (shutdown of the write side after the request) must
@@ -385,6 +487,10 @@ class Gateway:
             remaining = creq.n
             while remaining:
                 kind, _, payload = await q.get()
+                if kind == "token":
+                    if ctx["first"] is None:
+                        ctx["first"] = time.monotonic()
+                    ctx["tokens"] += 1
                 if kind == "done":
                     remaining -= 1
             choices = []
@@ -403,8 +509,10 @@ class Gateway:
                           "completion_tokens": sum(
                               len(r.out_tokens) for r in reqs)}}))
             await writer.drain()
+            return "ok"
         except (ConnectionResetError, BrokenPipeError):
             await self._abort(reqs)
+            return "disconnect"
 
     # -- /metrics -------------------------------------------------------
     async def _metrics(self) -> Dict:
@@ -414,6 +522,7 @@ class Gateway:
         including entries for drained and dead replicas, which aggregate
         as absent, never as a KeyError."""
         payload = await self.router.fleet_metrics()
+        payload["schema_version"] = METRICS_SCHEMA_VERSION
         if payload["engine"] is None:
             payload.setdefault("error", "engine driver not running")
         payload["gateway"] = {**self.counters,

@@ -37,7 +37,12 @@ class Replica:
         self.id = rid
         self.max_pending = max_pending
         self.page_size = engine.cache.page_size     # for prompt hashing
+        # label the engine's flight recorder with the fleet identity so
+        # a postmortem dump says WHICH replica died (and the driver
+        # thread name shows up as its own track in a Chrome trace)
+        engine.recorder.label = f"replica-{rid}"
         self.driver = EngineDriver(engine, tap=self._publish)
+        self.driver._thread.name = f"engine-driver-{rid}"
         self.pending = 0            # samples in flight (event-loop side)
         self.draining = False
         self.dispatches = 0         # request groups routed here

@@ -35,6 +35,8 @@ from typing import Callable, Dict, List, Optional, Sequence
 
 import numpy as np
 
+from repro.obs.trace import get_tracer
+
 from .policy import Policy, PrefixAffinityPolicy, make_policy
 from .replica import Replica
 
@@ -51,6 +53,8 @@ _SUM_KEYS = frozenset({
     "cow_copies", "kv_pages_shared", "prefix_pages_resident",
     "prefix_pages_evicted", "state_bytes", "tokens_per_s",
     "decode_tokens_per_s", "decode_s",
+    "sim_energy_j", "sim_decode_energy_j", "sim_prefill_energy_j",
+    "sim_time_s", "sim_decode_tokens",
 })
 
 
@@ -80,6 +84,12 @@ def aggregate_summaries(summaries: Sequence[Dict]) -> Optional[Dict]:
     if out.get("spec_drafted"):
         out["spec_acceptance_rate"] = (out["spec_accepted"]
                                        / out["spec_drafted"])
+    if out.get("sim_energy_j"):
+        out["sim_tokens_per_j"] = (out.get("sim_decode_tokens", 0.0)
+                                   / out["sim_energy_j"])
+    if out.get("sim_time_s"):
+        out["sim_tokens_per_s"] = (out.get("sim_decode_tokens", 0.0)
+                                   / out["sim_time_s"])
     return out
 
 
@@ -117,6 +127,7 @@ class FleetRouter:
         self.counters: Dict[str, int] = {"dispatched": 0, "requeued": 0,
                                          "requeue_failed": 0, "drains": 0}
         self._owner: Dict[int, Replica] = {}    # id(req) -> replica
+        self.tracer = get_tracer()
 
     # -- lifecycle ------------------------------------------------------
     def start(self) -> "FleetRouter":
@@ -157,6 +168,16 @@ class FleetRouter:
         rep.dispatches += 1
         rep.pending += len(reqs)
         self.counters["dispatched"] += 1
+        if self.tracer.enabled:
+            # the routing decision, with what the policy saw: per-
+            # replica queue depth / liveness at pick time
+            self.tracer.instant(
+                "route_dispatch", cat="router",
+                rid=getattr(reqs[0], "trace_id", -1),
+                rids=[getattr(r, "trace_id", -1) for r in reqs],
+                replica=rep.id, policy=self.policy.name,
+                depths={str(r.id): r.depth() for r in self.replicas},
+                live={str(r.id): r.live for r in self.replicas})
         for r in reqs:
             self._owner[id(r)] = rep
         return rep.driver.submit(reqs, on_done)

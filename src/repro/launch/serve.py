@@ -87,7 +87,20 @@ def main():
                          "least-loaded follows pending depth + KV "
                          "occupancy, prefix routes repeated prompts to "
                          "the replica holding their committed KV pages")
+    ap.add_argument("--trace", action="store_true",
+                    help="record request/engine spans in the in-memory "
+                         "tracer; dump a Perfetto-loadable Chrome trace "
+                         "from GET /debug/trace (equivalent to "
+                         "REPRO_TRACE=1)")
+    ap.add_argument("--access-log", default=None, metavar="PATH",
+                    help="append one structured JSON line per gateway "
+                         "request (rid, replica, policy, status, ttft, "
+                         "tokens) to PATH ('-' for stderr)")
     args = ap.parse_args()
+
+    if args.trace:
+        from repro.obs import get_tracer
+        get_tracer().enable()
 
     import jax
     import jax.numpy as jnp
@@ -160,7 +173,10 @@ def main():
                            for _ in range(args.replicas - 1)]
         router = FleetRouter(engines, policy=args.policy,
                              max_pending=args.max_pending)
-        gw = Gateway(router)
+        import sys
+        access_log = (sys.stderr if args.access_log == "-"
+                      else args.access_log)
+        gw = Gateway(router, access_log=access_log)
         try:
             asyncio.run(gw.serve_forever(args.host, args.port))
         except KeyboardInterrupt:

@@ -1,0 +1,21 @@
+"""Observability layer: span tracing, exporters, flight recorder, energy.
+
+Stdlib-only (numpy/jax enter only indirectly via the CIM cost model in
+`obs.energy`).  See serve/README.md "Observability" for the span
+taxonomy and usage.
+"""
+from .energy import EnergyMeter, slm_spec_from_model_config
+from .export import chrome_trace, prometheus_text
+from .recorder import FlightRecorder
+from .trace import NULL_SPAN, Tracer, get_tracer
+
+__all__ = [
+    "EnergyMeter",
+    "FlightRecorder",
+    "NULL_SPAN",
+    "Tracer",
+    "chrome_trace",
+    "get_tracer",
+    "prometheus_text",
+    "slm_spec_from_model_config",
+]

@@ -58,6 +58,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models import DecoderLM
+from repro.obs.energy import EnergyMeter
+from repro.obs.recorder import FlightRecorder
+from repro.obs.trace import get_tracer
 
 from .paged_cache import PagedKVCache
 from .prefix import PrefixIndex
@@ -137,6 +140,16 @@ class PagedServeEngine:
         self.scheduler = Scheduler(max_batch,
                                    prefill_chunk=min(prefill_chunk, max_seq))
         self.telemetry = Telemetry()
+        # observability: process tracer (opt-in, /debug/trace), always-on
+        # flight recorder (postmortem ring; replica sets the label), and
+        # the CIM energy meter (simulated J / tokens-per-J in summary())
+        self.tracer = get_tracer()
+        self.scheduler.tracer = self.tracer
+        self.recorder = FlightRecorder(label="engine", clock=clock)
+        self.energy = EnergyMeter(model.cfg)
+        self._last_t0 = 0.0
+        self._cow_seen = 0          # deltas -> cow_copy / prefix_evict
+        self._evict_seen = 0        # trace instants per step
         self.lanes: List[Optional[ServeRequest]] = [None] * max_batch
         self._step_fn = jax.jit(model.serve_step, donate_argnums=(1,))
         self._key = jax.random.PRNGKey(seed)
@@ -148,6 +161,15 @@ class PagedServeEngine:
                 kv_dtype=kv_dtype)
         else:
             self.spec = None
+
+    # ------------------------------------------------------------------
+    def _event(self, kind: str, **fields: Any) -> None:
+        """One engine lifecycle event: always lands in the flight
+        recorder (postmortem ring), mirrored to the tracer as an
+        instant when tracing is on."""
+        self.recorder.record(kind, **fields)
+        if self.tracer.enabled:
+            self.tracer.instant(kind, cat="engine", **fields)
 
     # ------------------------------------------------------------------
     @property
@@ -167,6 +189,8 @@ class PagedServeEngine:
         self._next_eid += 1           # collide; eid keys cache/telemetry
         self.telemetry.enqueue(req.eid, now)
         self.scheduler.submit(req, now)
+        self._event("submit", eid=req.eid, rid=req.trace_id,
+                    prompt_len=req.prompt_len)
 
     def cancel(self, eid: int) -> bool:
         """Abort a submitted request wherever it is in its lifecycle —
@@ -183,6 +207,8 @@ class PagedServeEngine:
             queued.done = True      # saved arena snapshot dies with it)
             queued.saved_state = None
             self.telemetry.cancel(eid, now)
+            self._event("cancel", eid=eid, rid=queued.trace_id,
+                        where="queued")
             return True
         for lane, req in enumerate(self.lanes):
             if req is not None and req.eid == eid:
@@ -193,6 +219,8 @@ class PagedServeEngine:
                 if self.spec is not None:
                     self.spec.drafter.release(lane)
                 self.telemetry.cancel(eid, now)
+                self._event("cancel", eid=eid, rid=req.trace_id,
+                            where="lane", lane=lane)
                 return True
         return False
 
@@ -218,6 +246,7 @@ class PagedServeEngine:
             self.params, state, {"tokens": jnp.asarray(tokens)},
             jnp.asarray(tables), jnp.asarray(lengths), jnp.asarray(n_new))
         dt = time.monotonic() - t0
+        self._last_t0 = t0      # span start for tracer.complete()
         if self.arena is not None:
             self.arena.state = {k: state[k] for k in self.arena.keys}
             self.cache.pools = {k: state[k] for k in self._paged_keys}
@@ -288,6 +317,9 @@ class PagedServeEngine:
                 or seq.length >= self.max_seq):
             req.done = True
             self.telemetry.done(req.eid, now)
+            self._event("finish", eid=req.eid, rid=req.trace_id,
+                        lane=lane, tokens=len(req.out_tokens),
+                        reason="eos" if hit_eos else "budget")
             if self.prefix is not None and seq.length > req.prompt_len:
                 # generated-suffix caching: the finished lane's KV holds
                 # prompt + generated rows — commit the full pages past
@@ -321,6 +353,8 @@ class PagedServeEngine:
         prefill when pages free up (a hybrid's restored mamba state
         would be double-advanced by that rebuild, hence no snapshot)."""
         req = self.lanes[lane]
+        self._event("preempt", eid=req.eid, rid=req.trace_id, lane=lane,
+                    tokens=len(req.out_tokens))
         if self.arena is not None and self.model.n_paged_layers() == 0:
             req.saved_state = self.arena.save_lane(lane)
             req.saved_length = self.cache.seqs[req.eid].length
@@ -351,12 +385,23 @@ class PagedServeEngine:
     # ------------------------------------------------------------------
     def step(self) -> None:
         now = self._clock()
+
+        def _reject(r: ServeRequest) -> None:
+            self.telemetry.done(r.eid, now)
+            self._event("reject", eid=r.eid, rid=r.trace_id,
+                        reason=r.reject_reason, truncated=r.truncated)
+
         for req in self.scheduler.admit(
-                now, self.n_running, self.cache,
-                on_reject=lambda r: self.telemetry.done(r.eid, now)):
+                now, self.n_running, self.cache, on_reject=_reject):
             lane = self.lanes.index(None)
             self.lanes[lane] = req
             self.telemetry.admit(req.eid, now)
+            self._event("fork_admit" if req.fork_from is not None
+                        else "admit",
+                        eid=req.eid, rid=req.trace_id, lane=lane,
+                        prompt_len=req.prompt_len,
+                        prefix_cached=req.prefix_cached,
+                        resumed=req.saved_state is not None)
             if self.arena is not None:
                 if req.saved_state is not None:
                     # resumed preemption: scatter the host snapshot back
@@ -379,6 +424,21 @@ class PagedServeEngine:
             decode_s, decode_lanes = self._decode_phase_spec()
         else:
             decode_s, decode_lanes = self._decode_phase()
+        # page-sharing machinery reports deltas, not per-call hooks:
+        # surface them as per-step instants when tracing
+        if self.tracer.enabled:
+            if self.cache.cow_copies > self._cow_seen:
+                self.tracer.instant(
+                    "cow_copy", cat="engine",
+                    n=self.cache.cow_copies - self._cow_seen)
+            evicted = (self.prefix.pages_evicted
+                       if self.prefix is not None else 0)
+            if evicted > self._evict_seen:
+                self.tracer.instant("prefix_evict", cat="engine",
+                                    n=evicted - self._evict_seen)
+        self._cow_seen = self.cache.cow_copies
+        self._evict_seen = (self.prefix.pages_evicted
+                            if self.prefix is not None else 0)
         # arena slots are engine lanes 1:1, so slot fill is running
         # lanes over max_batch — sampled only when an arena exists
         state_occ = (self.n_running / self.max_batch
@@ -425,10 +485,13 @@ class PagedServeEngine:
                                     )[:, None, None], axis=1)[:, 0, :]
             nxt = self._sample_rows(last)
         now = self._clock()
+        chunk_rids = [self.lanes[i].trace_id for i in pre]
+        chunk_tokens = 0
         for i in pre:
             req = self.lanes[i]
             q = int(n_new[i])
             req.prefill_done += q
+            chunk_tokens += q
             self.cache.seqs[req.eid].length += q
             self.telemetry.prefill_tokens += q
             if req.prefill_remaining == 0:
@@ -441,6 +504,13 @@ class PagedServeEngine:
                            row=np.asarray(last[i])
                            if req.logprobs else None)
                 self._maybe_finish(i, now)
+        self.energy.charge_prefill(chunk_tokens)
+        self.recorder.record("prefill_chunk", lanes=len(pre),
+                             tokens=chunk_tokens, dur_s=dt)
+        if self.tracer.enabled:
+            self.tracer.complete(
+                "prefill_chunk", self._last_t0, dt, cat="engine",
+                rids=chunk_rids, lanes=len(pre), tokens=chunk_tokens)
         return dt
 
     def _decode_ready(self) -> List[int]:
@@ -474,11 +544,19 @@ class PagedServeEngine:
             req = self.lanes[i]
             tokens[i, 0] = req.out_tokens[-1]
             n_new[i] = 1
+        lens = self._lengths()
         logits, dt = self._dispatch(self._step_fn, tokens, self._tables(),
-                                    self._lengths(), n_new)
+                                    lens, n_new)
 
         nxt = self._sample_rows(logits[:, 0, :])
         now = self._clock()
+        rids = [self.lanes[i].trace_id for i in ready]
+        self.energy.charge_decode(len(ready), float(lens[ready].mean()))
+        self.recorder.record("decode_step", lanes=len(ready), dur_s=dt)
+        if self.tracer.enabled:
+            self.tracer.complete("decode_step", self._last_t0, dt,
+                                 cat="engine", rids=rids,
+                                 lanes=len(ready))
         for i in ready:
             req = self.lanes[i]
             self.cache.seqs[req.eid].length += 1
@@ -563,11 +641,14 @@ class PagedServeEngine:
 
         logits, dt = self._dispatch(step_fn, step_tokens, tables, lengths,
                                     n_new)
+        verify_s = dt
         dt += draft_s
 
         logits_np = np.asarray(logits)
         now = self._clock()
-        drafted = accepted = 0
+        drafted = accepted = n_emitted = 0
+        lanes_idx = [i for i, _ in ready]
+        rids = [self.lanes[i].trace_id for i in lanes_idx]
         for i, nd in ready:
             req = self.lanes[i]
             q_rows = prop.probs[i, :nd] if prop.probs is not None else None
@@ -587,14 +668,29 @@ class PagedServeEngine:
             for j, tok in enumerate(emitted[:budget]):
                 self._emit(req, tok, now,
                            row=logits_np[i, j] if req.logprobs else None)
+                n_emitted += 1
             self._maybe_finish(i, now)
         self.telemetry.spec(drafted, accepted)
         spec.observe(drafted, accepted)
+        self.energy.charge_decode(
+            n_emitted, float(lengths[lanes_idx].mean()))
+        self.recorder.record("spec_verify", lanes=len(ready),
+                             drafted=drafted, accepted=accepted,
+                             dur_s=dt)
+        if self.tracer.enabled:
+            if draft_s > 0.0:
+                self.tracer.complete("spec_draft", t0, draft_s,
+                                     cat="engine", rids=rids)
+            self.tracer.complete("spec_verify", self._last_t0, verify_s,
+                                 cat="engine", rids=rids,
+                                 lanes=len(ready), drafted=drafted,
+                                 accepted=accepted)
         return dt, len(ready)
 
     # ------------------------------------------------------------------
     def summary(self) -> Dict[str, float]:
         s = self.telemetry.summary()
+        s.update(self.energy.summary())
         s["cow_copies"] = float(self.cache.cow_copies)
         s["kv_pages_shared"] = float(self.cache.pages_shared)
         if self.spec is not None:

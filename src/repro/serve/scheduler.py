@@ -53,8 +53,13 @@ class ServeRequest:
     #   parallel to out_tokens, filled only when `logprobs` is set
     done: bool = False
     rejected: bool = False                   # never ran: deadline/too big
+    reject_reason: str = ""                  # expired | empty | too-big
     truncated: bool = False                  # evicted mid-generation
     cancelled: bool = False                  # aborted by the caller
+    trace_id: int = -1                       # process-unique tracing id
+    #   (gateway-assigned via Tracer.next_request_id; -1 = untraced
+    #   caller).  Unlike rid it never collides, so one value correlates
+    #   gateway lifecycle, router dispatch, and engine span events.
     prefill_done: int = 0                    # prompt tokens consumed
     prefix_cached: int = 0                   # prompt tokens adopted from
     t_enqueue: float = 0.0                   #   the prefix cache at admit
@@ -95,6 +100,7 @@ class Scheduler:
         self.prefill_chunk = prefill_chunk
         self._heap: List = []
         self._order = itertools.count()
+        self.tracer = None      # set by the engine (obs.trace.Tracer)
 
     # -- queue ----------------------------------------------------------
     def submit(self, req: ServeRequest, now: float,
@@ -177,11 +183,19 @@ class Scheduler:
                 # forever.  A preempted request that already generated
                 # output is TRUNCATED (partial result stands); one that
                 # never ran is REJECTED.
+                req.reject_reason = ("expired" if now > abs_dl
+                                     else "empty" if req.prompt_len == 0
+                                     else "too-big")
                 if req.out_tokens:
                     req.truncated = True
                 else:
                     req.rejected = True
                 req.done = True
+                if self.tracer is not None and self.tracer.enabled:
+                    self.tracer.instant(
+                        "queue_reject", cat="sched", eid=req.eid,
+                        rid=req.trace_id, reason=req.reject_reason,
+                        truncated=req.truncated)
                 if on_reject is not None:   # let the engine close the
                     on_reject(req)          # telemetry trace
                 continue

@@ -53,9 +53,53 @@ class RequestTrace:
         return (self.t_done - self.t_first_token) / (self.n_tokens - 1)
 
 
-def _pct(vals: List[float], q: float) -> float:
-    return float(np.percentile(np.asarray(vals, np.float64), q)) \
-        if vals else float("nan")
+class _Window:
+    """Bounded sample window with a cached numpy view.
+
+    Percentile/histogram rollups need the samples as an ndarray; before
+    this class every `/metrics` scrape rebuilt that array by scanning
+    the retained traces.  Here samples are appended once at the
+    lifecycle event that produces them, and the array is materialized
+    at most ONCE between appends — a scrape storm against an idle
+    server costs one build total.  The cap halves the window when
+    exceeded (amortized O(1)), same policy the ITL buffer always had.
+    """
+
+    __slots__ = ("_vals", "_cap", "_arr")
+
+    def __init__(self, cap: int):
+        self._vals: List[float] = []
+        self._cap = cap
+        self._arr: Optional[np.ndarray] = None
+
+    def append(self, v: float) -> None:
+        self._vals.append(v)
+        if len(self._vals) > self._cap:
+            del self._vals[:self._cap // 2]
+        self._arr = None
+
+    def array(self) -> np.ndarray:
+        if self._arr is None:
+            self._arr = np.asarray(self._vals, np.float64)
+        return self._arr
+
+    def __len__(self) -> int:
+        return len(self._vals)
+
+    def __iter__(self):
+        return iter(self._vals)
+
+    def mean(self, default: float = float("nan")) -> float:
+        return float(self.array().mean()) if self._vals else default
+
+    def peak(self, default: float = float("nan")) -> float:
+        return float(self.array().max()) if self._vals else default
+
+
+def _pct(vals, q: float) -> float:
+    arr = vals.array() if isinstance(vals, _Window) \
+        else np.asarray(vals, np.float64)
+    return float(np.percentile(arr, q)) if arr.size else float("nan")
 
 
 # log-spaced latency buckets: 100 us .. 10 s plus an overflow bin — wide
@@ -63,13 +107,14 @@ def _pct(vals: List[float], q: float) -> float:
 _HIST_EDGES = np.logspace(-4, 1, 11)
 
 
-def _hist(vals: List[float]) -> Dict[str, List]:
+def _hist(vals) -> Dict[str, List]:
     """Fixed-bucket histogram of latency seconds: `edges_s` brackets
     every count; the first bucket reaches down to 0 and the last is
     unbounded above, so no sample is ever silently dropped."""
+    arr = vals.array() if isinstance(vals, _Window) \
+        else np.asarray(vals, np.float64)
     edges = [0.0] + list(_HIST_EDGES) + [float("inf")]
-    counts, _ = np.histogram(np.asarray(vals, np.float64)
-                             if vals else np.zeros(0), bins=edges)
+    counts, _ = np.histogram(arr, bins=edges)
     return {"edges_s": [0.0] + [float(e) for e in _HIST_EDGES] + ["inf"],
             "counts": [int(c) for c in counts]}
 
@@ -89,10 +134,16 @@ class Telemetry:
         self.traces: Dict[int, RequestTrace] = {}
         self.requests_total = 0
         self._done_order: List[int] = []     # finished eids, oldest first
-        self.occupancy_samples: List[float] = []
-        self.state_occupancy_samples: List[float] = []  # StateArena lanes
+        self.occupancy_samples = _Window(MAX_ITL_SAMPLES)
+        self.state_occupancy_samples = _Window(MAX_ITL_SAMPLES)
         self.decode_family: Optional[str] = None     # labels lane_steps_*
-        self.batch_samples: List[int] = []
+        self.batch_samples = _Window(MAX_ITL_SAMPLES)
+        # latency sample windows, appended at the lifecycle event that
+        # defines each metric (queue at admit, ttft at first token,
+        # tpot at retire) — summary() never scans traces again
+        self._ttft = _Window(MAX_DONE_TRACES)
+        self._tpot = _Window(MAX_DONE_TRACES)
+        self._queue = _Window(MAX_DONE_TRACES)
         self.decode_s = 0.0
         self.prefill_s = 0.0
         self.steps = 0
@@ -108,7 +159,7 @@ class Telemetry:
         self.prefill_tokens_skipped = 0   # prompt tokens never prefilled
         self.fork_admissions = 0     # lanes admitted via PagedKVCache.fork
         self.cancelled = 0           # requests aborted before completion
-        self.itl_samples: List[float] = []   # gaps between emitted tokens
+        self.itl_samples = _Window(MAX_ITL_SAMPLES)  # emitted-token gaps
         self.t_start: Optional[float] = None
         self.t_end: Optional[float] = None
 
@@ -121,13 +172,22 @@ class Telemetry:
 
     def _retire(self, rid: int):
         """Bound trace retention: finished traces past the window are
-        dropped oldest-first (live traces are never touched)."""
+        dropped oldest-first (live traces are never touched).  The
+        closing trace's TPOT lands in its sample window here — `done`
+        and `cancel` both retire, so cancelled requests keep
+        contributing their measured inter-token pace, as the
+        trace-scanning rollup always had them."""
+        tr = self.traces.get(rid)
+        if tr is not None and tr.tpot_s is not None:
+            self._tpot.append(tr.tpot_s)
         self._done_order.append(rid)
         while len(self._done_order) > MAX_DONE_TRACES:
             self.traces.pop(self._done_order.pop(0), None)
 
     def admit(self, rid: int, now: float):
-        self.traces[rid].t_admit = now
+        tr = self.traces[rid]
+        tr.t_admit = now
+        self._queue.append(tr.queue_s)
 
     def token(self, rid: int, now: float, decode: bool = True):
         """decode=False marks a token emitted by the prefill graph (each
@@ -135,13 +195,12 @@ class Telemetry:
         tr = self.traces[rid]
         if tr.t_first_token is None:
             tr.t_first_token = now
+            self._ttft.append(tr.ttft_s)
         elif tr.t_last_token is not None:
             # measured gap between consecutive emissions of one request
             # (the streaming client's experience, unlike tpot's
             # first-to-done mean)
             self.itl_samples.append(max(now - tr.t_last_token, 0.0))
-            if len(self.itl_samples) > MAX_ITL_SAMPLES:
-                del self.itl_samples[:MAX_ITL_SAMPLES // 2]
         tr.t_last_token = now
         tr.n_tokens += 1
         self.tokens += 1
@@ -245,12 +304,9 @@ class Telemetry:
 
     # -- rollup ---------------------------------------------------------
     def summary(self) -> Dict[str, float]:
-        ttft = [t.ttft_s for t in self.traces.values()
-                if t.ttft_s is not None]
-        tpot = [t.tpot_s for t in self.traces.values()
-                if t.tpot_s is not None]
-        queue = [t.queue_s for t in self.traces.values()
-                 if t.queue_s is not None]
+        # latency windows are maintained incrementally at their
+        # lifecycle events (see __init__) — no trace scan per scrape
+        ttft, tpot, queue = self._ttft, self._tpot, self._queue
         wall = ((self.t_end - self.t_start)
                 if self.t_start is not None and self.t_end is not None
                 and self.t_end > self.t_start else 0.0)
@@ -277,8 +333,7 @@ class Telemetry:
             "prefill_tokens_skipped": float(self.prefill_tokens_skipped),
             "fork_admissions": float(self.fork_admissions),
             "cancelled": float(self.cancelled),
-            "ttft_mean_s": (float(np.mean(ttft)) if ttft
-                            else float("nan")),
+            "ttft_mean_s": ttft.mean(),
             "ttft_p50_s": _pct(ttft, 50), "ttft_p95_s": _pct(ttft, 95),
             "ttft_p99_s": _pct(ttft, 99),
             "tpot_p50_s": _pct(tpot, 50), "tpot_p95_s": _pct(tpot, 95),
@@ -288,18 +343,13 @@ class Telemetry:
             "itl_p99_s": _pct(self.itl_samples, 99),
             "queue_p50_s": _pct(queue, 50), "queue_p95_s": _pct(queue, 95),
             "queue_p99_s": _pct(queue, 99),
-            "kv_occupancy_mean": (float(np.mean(self.occupancy_samples))
-                                  if self.occupancy_samples else 0.0),
-            "kv_occupancy_peak": (float(np.max(self.occupancy_samples))
-                                  if self.occupancy_samples else 0.0),
-            "state_slot_occupancy_mean": (
-                float(np.mean(self.state_occupancy_samples))
-                if self.state_occupancy_samples else float("nan")),
-            "state_slot_occupancy_peak": (
-                float(np.max(self.state_occupancy_samples))
-                if self.state_occupancy_samples else float("nan")),
-            "batch_mean": (float(np.mean(self.batch_samples))
-                           if self.batch_samples else 0.0),
+            "kv_occupancy_mean": self.occupancy_samples.mean(0.0),
+            "kv_occupancy_peak": self.occupancy_samples.peak(0.0),
+            "state_slot_occupancy_mean":
+                self.state_occupancy_samples.mean(),
+            "state_slot_occupancy_peak":
+                self.state_occupancy_samples.peak(),
+            "batch_mean": self.batch_samples.mean(0.0),
             **({f"lane_steps_{self.decode_family}":
                 float(self.decode_lane_steps)}
                if self.decode_family is not None else {}),
@@ -308,10 +358,7 @@ class Telemetry:
     def histograms(self) -> Dict[str, Dict[str, List]]:
         """Latency distributions as fixed log-spaced buckets (the
         gateway `/metrics` payload: percentiles compress, histograms
-        compose across scrapes)."""
-        ttft = [t.ttft_s for t in self.traces.values()
-                if t.ttft_s is not None]
-        queue = [t.queue_s for t in self.traces.values()
-                 if t.queue_s is not None]
-        return {"ttft_s": _hist(ttft), "queue_s": _hist(queue),
+        compose across scrapes).  Fed by the same incrementally
+        maintained windows as `summary()` — no trace scan."""
+        return {"ttft_s": _hist(self._ttft), "queue_s": _hist(self._queue),
                 "itl_s": _hist(self.itl_samples)}

@@ -149,6 +149,41 @@ def test_replicas_policy_are_identity_not_metrics():
 
 
 @pytest.mark.bench
+def test_tracing_overhead_gate_within_current_run():
+    """api_bench --trace emits each cell as an off/on pair differing
+    only in `tracing`; the traced goodput must stay within
+    overhead_max of the untraced one — judged on the current run, so
+    runner speed cancels out."""
+    cur = [_row(rate=20.0, replicas=2, tracing=False,
+                goodput_tokens_per_s=100.0),
+           _row(rate=20.0, replicas=2, tracing=True,
+                goodput_tokens_per_s=97.0)]
+    assert check_bench.check_tracing_overhead("b", cur, 0.05) == []
+    slow = [dict(cur[0]), dict(cur[1], goodput_tokens_per_s=80.0)]
+    fails = check_bench.check_tracing_overhead("b", slow, 0.05)
+    assert len(fails) == 1 and "tracing costs 20.0%" in fails[0]
+    # an unpaired traced row, or rows without the field, gate nothing
+    assert check_bench.check_tracing_overhead("b", [cur[1]], 0.05) == []
+    legacy = [_row(rate=20.0, goodput_tokens_per_s=50.0)]
+    assert check_bench.check_tracing_overhead("b", legacy, 0.05) == []
+    # different rates are different cells: never compared
+    other = [dict(cur[0]), dict(cur[1], rate=8.0,
+                                goodput_tokens_per_s=1.0)]
+    assert check_bench.check_tracing_overhead("b", other, 0.05) == []
+
+
+@pytest.mark.bench
+def test_tracing_is_identity_not_a_metric():
+    """A `tracing` mismatch means a DIFFERENT row, not a regression —
+    and the field itself is never gated as a metric."""
+    base = [_row(tracing=False, ttft_p50_s=0.1),
+            _row(tracing=True, ttft_p50_s=0.5)]
+    assert check_bench.check_file("b", base, base, TOLS) == []
+    fails = check_bench.check_file("b", base, [base[0]], TOLS)
+    assert len(fails) == 1 and "tracing=True" in fails[0]
+
+
+@pytest.mark.bench
 def test_bool_quality_metric_gates():
     base = [_row(outputs_byte_identical=True)]
     cur = [_row(outputs_byte_identical=False)]

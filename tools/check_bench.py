@@ -34,7 +34,8 @@ from typing import Dict, List, Tuple
 
 # identity fields: define WHICH row we compare, never gated themselves
 IDENTITY = ("mode", "family", "mix", "workload", "drafter", "k", "batch",
-            "n_requests", "prefix_len", "rate", "n", "replicas", "policy")
+            "n_requests", "prefix_len", "rate", "n", "replicas", "policy",
+            "tracing")
 
 # (substring, direction, class); first match wins.  direction "higher"
 # means bigger is better.  Metrics matching nothing are informational.
@@ -156,6 +157,40 @@ def check_scaling(name: str, current: List[Dict],
     return failures
 
 
+def check_tracing_overhead(name: str, current: List[Dict],
+                           overhead_max: float) -> List[str]:
+    """Tracing-overhead gate, judged WITHIN the current run: rows that
+    differ only in `tracing` (api_bench --trace emits each cell as an
+    off/on pair) must show traced goodput within `overhead_max` of the
+    untraced goodput.  The tracer bills itself as near-zero-cost when
+    enabled and free when disabled — this is where that claim is
+    enforced, on the same machine in the same run, so runner speed
+    cancels out."""
+    failures: List[str] = []
+    groups: Dict[Tuple, Dict[bool, Dict]] = {}
+    for r in current:
+        if "tracing" not in r or "goodput_tokens_per_s" not in r:
+            continue
+        key = tuple((k, r[k]) for k in IDENTITY
+                    if k in r and k != "tracing")
+        groups.setdefault(key, {})[bool(r["tracing"])] = r
+    for key, by_mode in groups.items():
+        off, on = by_mode.get(False), by_mode.get(True)
+        if off is None or on is None:
+            continue
+        base = float(off["goodput_tokens_per_s"])
+        if not base or math.isnan(base):
+            continue
+        ratio = float(on["goodput_tokens_per_s"]) / base
+        if ratio < 1.0 - overhead_max - 1e-9:
+            label = name + "[" + ",".join(f"{k}={v}" for k, v in key) + "]"
+            failures.append(
+                f"{label}: tracing costs {(1.0 - ratio):.1%} goodput "
+                f"({fmt(float(on['goodput_tokens_per_s']))} vs "
+                f"{fmt(base)} untraced; allowed {overhead_max:.0%})")
+    return failures
+
+
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--baseline",
@@ -181,6 +216,10 @@ def main() -> int:
                          "single-core runners, where scaling comes from "
                          "admission capacity alone, not parallel "
                          "compute)")
+    ap.add_argument("--trace-overhead-max", type=float, default=0.05,
+                    help="max goodput lost to tracing, judged within "
+                         "the current run on rows differing only in "
+                         "`tracing` (api_bench --trace off/on pairs)")
     ap.add_argument("--update", action="store_true",
                     help="overwrite baselines from --current")
     args = ap.parse_args()
@@ -190,14 +229,18 @@ def main() -> int:
         # every committed baseline is gated: a bench that stopped
         # producing output must FAIL below, not silently drop out of
         # the comparison set
+        # *.trace.json are Chrome trace artifacts riding alongside the
+        # row JSON (api_bench --trace), not gateable bench output
         names = sorted(f[:-5] for f in os.listdir(args.baseline)
-                       if f.endswith(".json"))
+                       if f.endswith(".json")
+                       and not f.endswith(".trace.json"))
         if args.update:
             # adopt benches that have no baseline yet (a new bench's
             # first --update run commits its initial rows)
             names = sorted(set(names)
                            | {f[:-5] for f in os.listdir(args.current)
-                              if f.endswith(".json")})
+                              if f.endswith(".json")
+                              and not f.endswith(".trace.json")})
     if not names:
         print("check_bench: no baseline bench JSON found", file=sys.stderr)
         return 1
@@ -227,6 +270,8 @@ def main() -> int:
             current = json.load(f)
         fails = check_file(n, baseline, current, tols)
         fails += check_scaling(n, current, args.scaling_min)
+        fails += check_tracing_overhead(n, current,
+                                        args.trace_overhead_max)
         status = "FAIL" if fails else "ok"
         print(f"check_bench: {n}: {len(baseline)} baseline rows, "
               f"{len(fails)} regressions [{status}]")
