@@ -31,6 +31,7 @@ Two workloads:
 """
 import argparse
 import asyncio
+import dataclasses
 import json
 import os
 import sys
@@ -45,7 +46,70 @@ from serve_bench import build_model, warm_engine  # noqa: E402
 from repro.api import Gateway  # noqa: E402
 from repro.api.protocol import DONE_SENTINEL  # noqa: E402
 from repro.fleet import FleetRouter  # noqa: E402
-from repro.serve import PagedServeEngine  # noqa: E402
+from repro.quant.qarray import (dequant_counters,  # noqa: E402
+                                reset_dequant_counters)
+from repro.serve import (PagedServeEngine, SamplingParams,  # noqa: E402
+                         ServeConfig, ServeRequest)
+
+QUANT_GROUP = 32        # bench models are narrow; 128 wouldn't divide
+
+
+def _serve_config(precision, *, batch, max_seq, page_size, max_pending,
+                  policy, replicas, kv_dtype="auto") -> ServeConfig:
+    return ServeConfig(
+        precision=precision or "fp", kv_dtype=kv_dtype,
+        quant_group=QUANT_GROUP, max_batch=batch, max_seq=max_seq,
+        page_size=page_size, prefill_chunk=16, max_pending=max_pending,
+        policy=policy, replicas=replicas)
+
+
+def _kv_bytes_per_token(engine) -> float:
+    """Resident KV bytes per token lane across all layers (pool bytes /
+    pool token capacity) — scale pages count against the quantized
+    pools, so the capacity claim is honest."""
+    import jax
+    total = sum(v.nbytes for v in
+                jax.tree_util.tree_leaves(engine.cache.pools))
+    tokens = engine.cache.allocator.n_pages * engine.cache.page_size
+    return total / tokens if tokens else 0.0
+
+
+def quality_probe(model, params_fp, params_q, base_cfg: ServeConfig,
+                  *, tokens: int = 24, seed: int = 7) -> dict:
+    """Quantization quality vs the fp stack on a fixed probe prompt:
+
+      quality_logit_mse        MSE of the full-sequence forward logits
+      quality_greedy_match_len length of the common greedy prefix
+                               (engine serve path, temperature 0)
+      quality_greedy_tokens    probe length (match_len's denominator)
+    """
+    import jax.numpy as jnp
+    rng = np.random.default_rng(seed)
+    prompt = rng.integers(0, model.cfg.vocab, 12).astype(np.int32)
+    lf = model.forward(params_fp, {"tokens": jnp.asarray(prompt[None])})
+    lq = model.forward(params_q, {"tokens": jnp.asarray(prompt[None])})
+    mse = float(jnp.mean((lf.astype(jnp.float32)
+                          - lq.astype(jnp.float32)) ** 2))
+
+    def greedy(params, cfg):
+        eng = PagedServeEngine(model, params, cfg)
+        req = ServeRequest(prompt=prompt, max_new_tokens=tokens, rid=0,
+                           sampling=SamplingParams(temperature=0.0))
+        eng.run([req])
+        return req.out_tokens
+
+    fp_cfg = dataclasses.replace(base_cfg, precision="fp",
+                                 kv_dtype="auto")
+    tf = greedy(params_fp, fp_cfg)
+    tq = greedy(params_q, base_cfg)
+    match = 0
+    for a, b in zip(tf, tq):
+        if a != b:
+            break
+        match += 1
+    return {"quality_logit_mse": mse,
+            "quality_greedy_match_len": float(match),
+            "quality_greedy_tokens": float(len(tf))}
 
 
 def _pct(vals, q):
@@ -183,20 +247,31 @@ async def run_rate(model, params, *, rate: float, n_requests: int,
                    prompt_hi: int, replicas: int = 1,
                    policy: str = "least-loaded",
                    shared_prefix: bool = False, seed: int = 0,
-                   trace=None):
+                   trace=None, precision=None):
     """One (replicas, policy, rate) cell.  `trace` is tri-state: None
     leaves the tracer alone and omits the `tracing` identity field
     (plain sweeps stay comparable to their committed baselines);
     True/False force the tracer on/off and label the row, so an A/B
     pair from the SAME run feeds check_bench's tracing-overhead gate.
-    Returns (row, chrome_trace_doc_or_None)."""
+    `precision` is tri-state the same way: None keeps the pre-quant
+    row identity; "fp"/"int8"/"int4" labels the row and serves at that
+    ServeConfig precision (`params` must already match — packed
+    QTensors for the quantized tiers).  Returns
+    (row, chrome_trace_doc_or_None)."""
+    cfg = _serve_config(precision, batch=batch, max_seq=max_seq,
+                        page_size=page_size, max_pending=max_pending,
+                        policy=policy, replicas=replicas)
+    quantized = precision in ("int8", "int4")
+    # trace-time counters: every engine jits its own step graphs, so a
+    # full-weight float materialization ANYWHERE in this cell's traced
+    # decode/prefill graphs would bump full_dequant
+    reset_dequant_counters()
     engines = []
     for _ in range(replicas):
-        eng = PagedServeEngine(model, params, max_batch=batch,
-                               max_seq=max_seq, page_size=page_size,
-                               prefill_chunk=16)
+        eng = PagedServeEngine(model, params, cfg)
         warm_engine(eng)    # compile prefill/decode BEFORE the driver
         engines.append(eng)
+    kv_bytes_per_token = _kv_bytes_per_token(engines[0])
     tracer = None
     if trace is not None:
         from repro.obs import get_tracer
@@ -264,10 +339,20 @@ async def run_rate(model, params, *, rate: float, n_requests: int,
     total_tokens = sum(r["tokens"] for r in ok)
     eng_agg = metrics["engine"] or {}
     fleet = metrics["fleet"]
+    dq = dequant_counters()
+    if quantized:
+        # the residency guarantee: no traced graph in this cell ever
+        # materialized a full float weight (ISSUE-8 acceptance)
+        assert dq["full_dequant"] == 0, \
+            (f"{precision} cell traced {dq['full_dequant']} full-weight "
+             "dequantizations — float weights leaked onto the hot path")
+        assert dq["fused_dequant"] > 0, \
+            "quantized cell traced no fused-dequant contraction"
     row = {
         "mode": "open-loop", "rate": float(rate),
         "workload": "shared-prefix" if shared_prefix else "uniform",
         "replicas": replicas, "policy": policy,
+        **({"precision": precision} if precision is not None else {}),
         **({"tracing": bool(trace)} if trace is not None else {}),
         "n_requests": len(results), "n": n, "batch": batch,
         "completed": len(ok),
@@ -293,6 +378,11 @@ async def run_rate(model, params, *, rate: float, n_requests: int,
         "sim_energy_j": float(eng_agg.get("sim_energy_j", 0.0)),
         "sim_tokens_per_j": float(eng_agg.get("sim_tokens_per_j", 0.0)),
     }
+    if precision is not None:
+        row["kv_dtype"] = cfg.as_dict()["kv_dtype_resolved"]
+        row["kv_bytes_per_token"] = kv_bytes_per_token
+        row["weight_full_dequants"] = float(dq["full_dequant"])
+        row["weight_fused_dequants"] = float(dq["fused_dequant"])
     return row, trace_doc
 
 
@@ -322,6 +412,15 @@ def main():
     ap.add_argument("--shared-prefix", action="store_true",
                     help="two-wave repeated-prompt workload (prefix "
                          "affinity A/B) instead of uniform random")
+    ap.add_argument("--precision", nargs="+", default=None,
+                    choices=["fp", "int8", "int4"],
+                    help="serving precisions to sweep (ServeConfig "
+                         "tiers); labels rows with a `precision` "
+                         "identity field, attaches quality probes "
+                         "(logit MSE, greedy divergence vs fp) and the "
+                         "quantized-KV capacity ratio, and asserts the "
+                         "quantized cells traced no full-weight "
+                         "dequantization")
     ap.add_argument("--trace", action="store_true",
                     help="run every cell twice — tracing off then on — "
                          "label rows with a `tracing` field for "
@@ -336,46 +435,86 @@ def main():
     args = ap.parse_args()
 
     import jax
+    from repro.quant import quantize_params
     model, params = build_model(args.scale)
     print(f"model: {model.n_params()/1e6:.1f}M params, "
           f"backend={jax.default_backend()}")
-    print("replicas,policy,rate_rps,tracing,completed,shed_429,"
+
+    # one packed copy per quantized tier, shared by every cell of that
+    # tier (replicas share them too — engines see QTensor leaves and
+    # skip re-quantizing)
+    precisions = args.precision or [None]
+    params_by_prec = {None: params, "fp": params}
+    quality_by_prec, fp32_kv_bpt = {}, None
+    for prec in precisions:
+        if prec in ("int8", "int4"):
+            params_by_prec[prec] = quantize_params(
+                params, bits=4 if prec == "int4" else 8,
+                group=QUANT_GROUP)
+            base = _serve_config(prec, batch=1, max_seq=args.max_seq,
+                                 page_size=args.page_size,
+                                 max_pending=args.max_pending,
+                                 policy="least-loaded", replicas=1)
+            quality_by_prec[prec] = quality_probe(
+                model, params, params_by_prec[prec], base,
+                tokens=args.tokens)
+            if fp32_kv_bpt is None:
+                # f32-KV reference pool for the capacity ratio: pool
+                # construction only (never run, never compiled)
+                ref = PagedServeEngine(
+                    model, params,
+                    dataclasses.replace(base, precision="fp",
+                                        kv_dtype="f32"))
+                fp32_kv_bpt = _kv_bytes_per_token(ref)
+            q = quality_by_prec[prec]
+            print(f"quality[{prec}]: logit mse {q['quality_logit_mse']:.3e}"
+                  f", greedy match {q['quality_greedy_match_len']:.0f}"
+                  f"/{q['quality_greedy_tokens']:.0f}")
+
+    print("precision,replicas,policy,rate_rps,tracing,completed,shed_429,"
           "goodput_tok/s,ttft_p50_ms,ttft_p99_ms,itl_p50_ms,itl_p99_ms,"
           "prefix_hit,sim_tok/J")
     rows, trace_doc = [], None
     trace_modes = [False, True] if args.trace else [None]
-    for replicas in args.replicas:
-        for policy in args.policies:
-            for rate in args.rates:
-                for tracing in trace_modes:
-                    r, doc = asyncio.run(run_rate(
-                        model, params, rate=rate,
-                        n_requests=args.requests,
-                        tokens=args.tokens, n=args.n, batch=args.batch,
-                        max_seq=args.max_seq,
-                        page_size=args.page_size,
-                        max_pending=args.max_pending,
-                        prompt_lo=args.prompt_lo,
-                        prompt_hi=args.prompt_hi,
-                        replicas=replicas, policy=policy,
-                        shared_prefix=args.shared_prefix,
-                        trace=tracing))
-                    rows.append(r)
-                    if doc is not None:
-                        trace_doc = doc     # keep the last traced cell
-                    hit = r["prefix_hit_rate"]
-                    print(f"{replicas},{policy},{r['rate']:g},"
-                          f"{'-' if tracing is None else int(tracing)},"
-                          f"{r['completed']},{r['rejected_429']},"
-                          f"{r['goodput_tokens_per_s']:.1f},"
-                          f"{r['ttft_p50_s']*1e3:.0f},"
-                          f"{r['ttft_p99_s']*1e3:.0f},"
-                          f"{r['itl_p50_s']*1e3:.1f},"
-                          f"{r['itl_p99_s']*1e3:.1f},"
-                          f"{hit if np.isfinite(hit) else float('nan'):.2f},"
-                          f"{r['sim_tokens_per_j']:.1f}")
-                    assert r["errors"] == 0, \
-                        f"gateway returned errors at rate {rate}"
+    for precision in precisions:
+        for replicas in args.replicas:
+            for policy in args.policies:
+                for rate in args.rates:
+                    for tracing in trace_modes:
+                        r, doc = asyncio.run(run_rate(
+                            model, params_by_prec[precision], rate=rate,
+                            n_requests=args.requests,
+                            tokens=args.tokens, n=args.n,
+                            batch=args.batch, max_seq=args.max_seq,
+                            page_size=args.page_size,
+                            max_pending=args.max_pending,
+                            prompt_lo=args.prompt_lo,
+                            prompt_hi=args.prompt_hi,
+                            replicas=replicas, policy=policy,
+                            shared_prefix=args.shared_prefix,
+                            trace=tracing, precision=precision))
+                        if precision in quality_by_prec:
+                            r.update(quality_by_prec[precision])
+                            r["kv_lanes_ratio_vs_fp32"] = (
+                                fp32_kv_bpt / r["kv_bytes_per_token"])
+                        rows.append(r)
+                        if doc is not None:
+                            trace_doc = doc   # keep the last traced cell
+                        hit = r["prefix_hit_rate"]
+                        print(
+                            f"{precision or '-'},"
+                            f"{replicas},{policy},{r['rate']:g},"
+                            f"{'-' if tracing is None else int(tracing)},"
+                            f"{r['completed']},{r['rejected_429']},"
+                            f"{r['goodput_tokens_per_s']:.1f},"
+                            f"{r['ttft_p50_s']*1e3:.0f},"
+                            f"{r['ttft_p99_s']*1e3:.0f},"
+                            f"{r['itl_p50_s']*1e3:.1f},"
+                            f"{r['itl_p99_s']*1e3:.1f},"
+                            f"{hit if np.isfinite(hit) else float('nan'):.2f},"
+                            f"{r['sim_tokens_per_j']:.1f}")
+                        assert r["errors"] == 0, \
+                            f"gateway returned errors at rate {rate}"
     save_json(args.out, rows)
     if trace_doc is not None:
         from common import RESULTS_DIR

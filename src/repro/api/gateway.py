@@ -88,15 +88,16 @@ class Gateway:
     ownership of stepping: nothing else may call `engine.step()`/`run()`
     on any replica while the gateway is running."""
 
-    def __init__(self, engine_or_router, *, max_pending: int = 32,
+    def __init__(self, engine_or_router, *, max_pending: Optional[int] = None,
                  max_n: int = 8, access_log=None):
-        assert max_pending >= 0 and max_n >= 1
+        assert (max_pending is None or max_pending >= 0) and max_n >= 1
         # deferred: repro.fleet pulls in repro.api.driver, whose package
         # __init__ imports this module — a top-level import would cycle
         from repro.fleet import FleetRouter
         if isinstance(engine_or_router, FleetRouter):
             self.router = engine_or_router
         else:       # classic single-engine construction: a fleet of one
+            # max_pending None defers to the engine's ServeConfig
             self.router = FleetRouter([engine_or_router],
                                       policy="least-loaded",
                                       max_pending=max_pending)

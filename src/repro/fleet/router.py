@@ -108,13 +108,21 @@ def aggregate_histograms(hists: Sequence[Dict]) -> Optional[Dict]:
 
 
 class FleetRouter:
-    def __init__(self, engines: Sequence, *, policy="least-loaded",
-                 max_pending: int = 32):
+    def __init__(self, engines: Sequence, *, policy=None,
+                 max_pending: Optional[int] = None):
         """`engines`: one built `PagedServeEngine` per replica, same
         model/params each (asserted on the config).  `max_pending` is
         the PER-REPLICA admission cap in samples; fleet capacity is
-        `max_pending * n_live`."""
+        `max_pending * n_live`.  Policy and cap default to the engines'
+        shared `ServeConfig` (the single object the launcher threads
+        through), overridable per-router for tests."""
         assert engines, "a fleet needs at least one engine"
+        serve_cfg = engines[0].config
+        if policy is None:
+            policy = serve_cfg.policy
+        if max_pending is None:
+            max_pending = serve_cfg.max_pending
+        self.serve_config = serve_cfg
         cfg0 = engines[0].model.cfg
         for e in engines[1:]:
             assert (e.model.cfg.name == cfg0.name
@@ -337,6 +345,10 @@ class FleetRouter:
         payload = {
             "engine": aggregate_summaries(summaries),
             "histograms": aggregate_histograms(hists),
+            # the RESOLVED serving config (precision, kv dtype, pool
+            # geometry): what the fleet is actually serving at, not
+            # what the operator asked for
+            "config": self.serve_config.as_dict(),
             "n_running": n_running, "n_queued": n_queued,
             "kv_pages_free": kv_free,
             "fleet": {"policy": self.policy.name,

@@ -13,13 +13,13 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
-from repro.quant.qarray import QTensor, maybe_dequantize
+from repro.quant.qarray import QTensor, count_dequant, maybe_dequantize
 
 from .cim_gemv import cim_gemv
 from .flash_decode import flash_decode
 from .paged_flash_decode import paged_flash_decode, paged_flash_verify
 from .ref import (ref_flash_decode, ref_paged_decode, ref_paged_verify,
-                  ref_qmatmul, ref_swiglu_qgemv)
+                  ref_qmatmul, ref_qmatmul_fused, ref_swiglu_qgemv)
 from .swiglu_gemv import swiglu_qgemv
 
 
@@ -40,6 +40,7 @@ def qmatmul(x: jax.Array, w: Any) -> jax.Array:
     lead = x.shape[:-1]
     x2 = x.reshape(-1, x.shape[-1])
     if _tile_ok(w) and x2.shape[0] <= 1024:
+        count_dequant("fused_dequant")
         out = cim_gemv(x2, w.data, w.scales, bits=w.bits, group=w.group,
                        interpret=_interpret())
     else:
@@ -48,11 +49,30 @@ def qmatmul(x: jax.Array, w: Any) -> jax.Array:
 
 
 def qmatmul_xla(x: jax.Array, w: Any) -> jax.Array:
-    """Dequant-then-matmul on the XLA path (used for pjit lowering: keeps
-    HLO free of pallas custom-calls while preserving the quantized bytes)."""
+    """Fused grouped contraction on the XLA path (used for pjit lowering:
+    keeps HLO free of pallas custom-calls while preserving the quantized
+    bytes).  The weight stays integer end-to-end — scales multiply group
+    partial sums, so no float copy of W is ever materialized (the
+    serve-path residency invariant tracked by `qarray.dequant_counters`)."""
     if not isinstance(w, QTensor):
         return x @ w
-    return ref_qmatmul(x, w)
+    return ref_qmatmul_fused(x, w)
+
+
+def qmatmul_fused(x: jax.Array, w: Any) -> jax.Array:
+    """Serve-path x @ W: `cim_gemv` Pallas kernel on TPU when the packed
+    weight is tile-aligned and the row count is decode-sized, the fused
+    grouped-einsum reference otherwise.  Either way the float weight is
+    never materialized."""
+    if not isinstance(w, QTensor):
+        return x @ w
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    if not _interpret() and _tile_ok(w) and x2.shape[0] <= 1024:
+        count_dequant("fused_dequant")
+        out = cim_gemv(x2, w.data, w.scales, bits=w.bits, group=w.group)
+        return out.reshape(*lead, w.orig_shape[-1])
+    return ref_qmatmul_fused(x, w)
 
 
 def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
@@ -75,60 +95,68 @@ def paged_decode_attention(q: jax.Array, k_pages: jax.Array,
                            v_pages: jax.Array, tables: jax.Array,
                            lengths: jax.Array, window: int = 0,
                            attn_cap: float = 0.0,
-                           use_kernel: bool = None) -> jax.Array:
+                           use_kernel: bool = None,
+                           k_scales: jax.Array = None,
+                           v_scales: jax.Array = None) -> jax.Array:
     """Paged decode attention: q (b,g,qpk,hd), pools (n_pages,ps,g,hd),
     tables (b,max_pages), lengths (b,) -> (b,g,qpk,hd).
 
     Routes to the Pallas block-table kernel on TPU (the gather never
     materializes); the pure-jnp gather reference is the lowering path
     everywhere else (and the oracle the kernel is tested against).
+    With k_scales/v_scales the pools are per-token INT8 and dequantized
+    in-kernel (or post-gather on the reference path).
     """
     if use_kernel is None:
         use_kernel = not _interpret()
     if not use_kernel:
         return ref_paged_decode(q, k_pages, v_pages, tables, lengths,
-                                window, attn_cap)
+                                window, attn_cap, k_scales, v_scales)
     return paged_flash_decode(q, k_pages, v_pages, tables, lengths,
                               window=window, attn_cap=attn_cap,
-                              interpret=_interpret())
+                              interpret=_interpret(),
+                              k_scales=k_scales, v_scales=v_scales)
 
 
 def paged_verify_attention(q: jax.Array, k_pages: jax.Array,
                            v_pages: jax.Array, tables: jax.Array,
                            lengths: jax.Array, window: int = 0,
                            attn_cap: float = 0.0,
-                           use_kernel: bool = None) -> jax.Array:
+                           use_kernel: bool = None,
+                           k_scales: jax.Array = None,
+                           v_scales: jax.Array = None) -> jax.Array:
     """Multi-query paged attention for speculative verify windows.
 
     q: (b, s, g, qpk, hd) — s draft positions per lane, query j at
     absolute position lengths[i] + j; lengths EXCLUDE the window.
     Pallas multi-query kernel on TPU (one pass over the sequence's
     pages verifies the whole window), jnp gather oracle elsewhere.
+    k_scales/v_scales mark the pools as per-token INT8.
     Returns (b, s, g, qpk, hd).
     """
     if use_kernel is None:
         use_kernel = not _interpret()
     if not use_kernel:
         return ref_paged_verify(q, k_pages, v_pages, tables, lengths,
-                                window, attn_cap)
+                                window, attn_cap, k_scales, v_scales)
     return paged_flash_verify(q, k_pages, v_pages, tables, lengths,
                               window=window, attn_cap=attn_cap,
-                              interpret=_interpret())
+                              interpret=_interpret(),
+                              k_scales=k_scales, v_scales=v_scales)
 
 
 def swiglu(x: jax.Array, w_gate: Any, w_up: Any) -> jax.Array:
-    """Fused quantized SwiGLU when aligned; reference otherwise."""
+    """Fused quantized SwiGLU: Pallas kernel when tile-aligned on TPU,
+    fused grouped-einsum reference otherwise — packed weights stay
+    integer on every route."""
     if (isinstance(w_gate, QTensor) and isinstance(w_up, QTensor)
-            and _tile_ok(w_gate) and _tile_ok(w_up)):
+            and not _interpret() and _tile_ok(w_gate) and _tile_ok(w_up)):
+        count_dequant("fused_dequant")
         lead = x.shape[:-1]
         x2 = x.reshape(-1, x.shape[-1])
         out = swiglu_qgemv(x2, w_gate.data, w_gate.scales, w_up.data,
-                           w_up.scales, bits=w_gate.bits, group=w_gate.group,
-                           interpret=_interpret())
+                           w_up.scales, bits=w_gate.bits, group=w_gate.group)
         return out.reshape(*lead, w_gate.orig_shape[-1])
-    g = x @ maybe_dequantize(w_gate) if not isinstance(w_gate, jax.Array) \
-        else x @ w_gate
-    u = x @ maybe_dequantize(w_up) if not isinstance(w_up, jax.Array) \
-        else x @ w_up
-    gf = g.astype(jnp.float32)
-    return (gf * jax.nn.sigmoid(gf) * u.astype(jnp.float32)).astype(x.dtype)
+    g = qmatmul_xla(x, w_gate).astype(jnp.float32)
+    u = qmatmul_xla(x, w_up).astype(jnp.float32)
+    return (g * jax.nn.sigmoid(g) * u).astype(x.dtype)

@@ -25,9 +25,16 @@ from jax.experimental.pallas import tpu as pltpu
 NEG_INF = -1.0e30
 
 
-def _kernel(tab_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
-            m_ref, l_ref, acc_ref, *, page_size: int, n_i: int,
-            scale: float, window: int, attn_cap: float):
+def _kernel(tab_ref, len_ref, q_ref, k_ref, v_ref, *rest, page_size: int,
+            n_i: int, scale: float, window: int, attn_cap: float,
+            quant: bool = False):
+    if quant:
+        # per-token INT8 pools: scale blocks (1, page_size, 1) ride the
+        # same block-table index map as their K/V pages
+        ks_ref, vs_ref, o_ref = rest[0], rest[1], rest[2]
+        m_ref, l_ref, acc_ref = rest[3], rest[4], rest[5]
+    else:
+        o_ref, m_ref, l_ref, acc_ref = rest[0], rest[1], rest[2], rest[3]
     b_idx = pl.program_id(0)
     i_idx = pl.program_id(2)
 
@@ -41,6 +48,9 @@ def _kernel(tab_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
     q = q_ref[0, 0].astype(jnp.float32)                 # (qpk, hd)
     k = k_ref[0, :, 0].astype(jnp.float32)              # (page_size, hd)
     v = v_ref[0, :, 0].astype(jnp.float32)
+    if quant:
+        k = k * ks_ref[0, :, 0].astype(jnp.float32)[:, None]
+        v = v * vs_ref[0, :, 0].astype(jnp.float32)[:, None]
 
     s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
     if attn_cap:
@@ -67,13 +77,18 @@ def _kernel(tab_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
                        jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
 
 
-def _verify_kernel(tab_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
-                   m_ref, l_ref, acc_ref, *, page_size: int, n_i: int,
-                   qpk: int, scale: float, window: int, attn_cap: float):
+def _verify_kernel(tab_ref, len_ref, q_ref, k_ref, v_ref, *rest,
+                   page_size: int, n_i: int, qpk: int, scale: float,
+                   window: int, attn_cap: float, quant: bool = False):
     """Multi-query variant: the q block carries s query positions (rows
     j*qpk..j*qpk+qpk-1 are position lengths[b]+j), each with its own
     causal horizon — verification of a k-token draft window in ONE pass
     over the sequence's pages (decode GEMV -> small-batch GEMM)."""
+    if quant:
+        ks_ref, vs_ref, o_ref = rest[0], rest[1], rest[2]
+        m_ref, l_ref, acc_ref = rest[3], rest[4], rest[5]
+    else:
+        o_ref, m_ref, l_ref, acc_ref = rest[0], rest[1], rest[2], rest[3]
     b_idx = pl.program_id(0)
     i_idx = pl.program_id(2)
 
@@ -87,6 +102,9 @@ def _verify_kernel(tab_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
     q = q_ref[0, 0].astype(jnp.float32)                 # (s*qpk, hd)
     k = k_ref[0, :, 0].astype(jnp.float32)              # (page_size, hd)
     v = v_ref[0, :, 0].astype(jnp.float32)
+    if quant:
+        k = k * ks_ref[0, :, 0].astype(jnp.float32)[:, None]
+        v = v * vs_ref[0, :, 0].astype(jnp.float32)[:, None]
     sq = q.shape[0]
 
     s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
@@ -116,12 +134,28 @@ def _verify_kernel(tab_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
                        jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
 
 
+def _page_specs(page_size: int, hd: int, quant: bool):
+    """K/V (and, when quant, per-token scale) BlockSpecs sharing the
+    block-table index map: page i of lane bi streams pool page
+    tab[bi, i] for kv-head gi."""
+    kv = pl.BlockSpec((1, page_size, 1, hd), lambda bi, gi, i, tab, ln:
+                      (tab[bi, i], 0, gi, 0))
+    specs = [kv, kv]
+    if quant:
+        sc = pl.BlockSpec((1, page_size, 1), lambda bi, gi, i, tab, ln:
+                          (tab[bi, i], 0, gi))
+        specs += [sc, sc]
+    return specs
+
+
 @functools.partial(jax.jit, static_argnames=("window", "attn_cap",
                                              "interpret"))
 def paged_flash_verify(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
                        tables: jax.Array, lengths: jax.Array,
                        window: int = 0, attn_cap: float = 0.0,
-                       interpret: bool = False) -> jax.Array:
+                       interpret: bool = False,
+                       k_scales: jax.Array = None,
+                       v_scales: jax.Array = None) -> jax.Array:
     """Speculative-verify attention over the paged pool.
 
     q: (b, s, g, qpk, hd) — s draft-window query positions per lane;
@@ -129,13 +163,16 @@ def paged_flash_verify(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
     attends k_pos <= lengths[i] + j (its own K row is already scattered
     into the pool).  lengths counts tokens cached BEFORE this window
     (exclusive — unlike `paged_flash_decode`, whose lengths include the
-    current token).  Returns (b, s, g, qpk, hd).
+    current token).  With k_scales/v_scales ((n_pages, page_size, g)
+    f16) the pools are per-token INT8 and dequantized in-register after
+    each page DMA.  Returns (b, s, g, qpk, hd).
     """
     b, s, g, qpk, hd = q.shape
     page_size = k_pages.shape[1]
     max_pages = tables.shape[1]
     scale = 1.0 / (hd ** 0.5)
     qf = q.transpose(0, 2, 1, 3, 4).reshape(b, g, s * qpk, hd)
+    quant = k_scales is not None
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
@@ -143,10 +180,7 @@ def paged_flash_verify(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
         in_specs=[
             pl.BlockSpec((1, 1, s * qpk, hd), lambda bi, gi, i, tab, ln:
                          (bi, gi, 0, 0)),
-            pl.BlockSpec((1, page_size, 1, hd), lambda bi, gi, i, tab, ln:
-                         (tab[bi, i], 0, gi, 0)),
-            pl.BlockSpec((1, page_size, 1, hd), lambda bi, gi, i, tab, ln:
-                         (tab[bi, i], 0, gi, 0)),
+            *_page_specs(page_size, hd, quant),
         ],
         out_specs=pl.BlockSpec((1, 1, s * qpk, hd), lambda bi, gi, i, tab, ln:
                                (bi, gi, 0, 0)),
@@ -156,15 +190,17 @@ def paged_flash_verify(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
             pltpu.VMEM((s * qpk, hd), jnp.float32),
         ],
     )
+    operands = (qf, k_pages, v_pages)
+    if quant:
+        operands += (k_scales, v_scales)
     out = pl.pallas_call(
         functools.partial(_verify_kernel, page_size=page_size,
                           n_i=max_pages, qpk=qpk, scale=scale,
-                          window=window, attn_cap=attn_cap),
+                          window=window, attn_cap=attn_cap, quant=quant),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((b, g, s * qpk, hd), q.dtype),
         interpret=interpret,
-    )(tables.astype(jnp.int32), lengths.astype(jnp.int32), qf, k_pages,
-      v_pages)
+    )(tables.astype(jnp.int32), lengths.astype(jnp.int32), *operands)
     return out.reshape(b, g, s, qpk, hd).transpose(0, 2, 1, 3, 4)
 
 
@@ -173,15 +209,21 @@ def paged_flash_verify(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
 def paged_flash_decode(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
                        tables: jax.Array, lengths: jax.Array,
                        window: int = 0, attn_cap: float = 0.0,
-                       interpret: bool = False) -> jax.Array:
+                       interpret: bool = False,
+                       k_scales: jax.Array = None,
+                       v_scales: jax.Array = None) -> jax.Array:
     """q: (b, g, qpk, hd); k_pages/v_pages: (n_pages, page_size, g, hd);
     tables: (b, max_pages) int32; lengths: (b,) int32 valid tokens per
-    sequence (inclusive of the current token).  Returns (b, g, qpk, hd).
+    sequence (inclusive of the current token).  With k_scales/v_scales
+    ((n_pages, page_size, g) f16) the pools are per-token INT8, streamed
+    packed and dequantized in-register — KV DMA bytes drop ~2x vs bf16.
+    Returns (b, g, qpk, hd).
     """
     b, g, qpk, hd = q.shape
     page_size = k_pages.shape[1]
     max_pages = tables.shape[1]
     scale = 1.0 / (hd ** 0.5)
+    quant = k_scales is not None
 
     # pools stay in their storage layout (n_pages, ps, g, hd): the block
     # table drives the page index and the kv-head rides as a unit axis,
@@ -192,10 +234,7 @@ def paged_flash_decode(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
         in_specs=[
             pl.BlockSpec((1, 1, qpk, hd), lambda bi, gi, i, tab, ln:
                          (bi, gi, 0, 0)),
-            pl.BlockSpec((1, page_size, 1, hd), lambda bi, gi, i, tab, ln:
-                         (tab[bi, i], 0, gi, 0)),
-            pl.BlockSpec((1, page_size, 1, hd), lambda bi, gi, i, tab, ln:
-                         (tab[bi, i], 0, gi, 0)),
+            *_page_specs(page_size, hd, quant),
         ],
         out_specs=pl.BlockSpec((1, 1, qpk, hd), lambda bi, gi, i, tab, ln:
                                (bi, gi, 0, 0)),
@@ -205,11 +244,14 @@ def paged_flash_decode(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
             pltpu.VMEM((qpk, hd), jnp.float32),
         ],
     )
+    operands = (q, k_pages, v_pages)
+    if quant:
+        operands += (k_scales, v_scales)
     return pl.pallas_call(
         functools.partial(_kernel, page_size=page_size, n_i=max_pages,
-                          scale=scale, window=window, attn_cap=attn_cap),
+                          scale=scale, window=window, attn_cap=attn_cap,
+                          quant=quant),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((b, g, qpk, hd), q.dtype),
         interpret=interpret,
-    )(tables.astype(jnp.int32), lengths.astype(jnp.int32), q, k_pages,
-      v_pages)
+    )(tables.astype(jnp.int32), lengths.astype(jnp.int32), *operands)

@@ -7,7 +7,8 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.quant.qarray import QTensor, dequantize, maybe_dequantize
+from repro.quant.qarray import (QTensor, count_dequant, dequantize,
+                                maybe_dequantize, unpack_int4)
 
 
 def ref_qmatmul(x: jax.Array, w, out_dtype=None) -> jax.Array:
@@ -16,6 +17,58 @@ def ref_qmatmul(x: jax.Array, w, out_dtype=None) -> jax.Array:
     return jnp.dot(x, wd.astype(x.dtype),
                    preferred_element_type=jnp.float32).astype(
         out_dtype or x.dtype)
+
+
+def _int_weight(qt: QTensor) -> jax.Array:
+    """Packed data -> int8 values at full size (scales NOT applied)."""
+    return unpack_int4(qt.data, qt.axis) if qt.bits == 4 else qt.data
+
+
+def ref_qmatmul_fused(x: jax.Array, w, out_dtype=None) -> jax.Array:
+    """x @ W with W held as integers end-to-end: per-group partial sums
+    contracted against the f16 scales — the CPU-backend image of the
+    `cim_gemv` in-kernel dequant.  Never materializes the float weight
+    (a whole-tensor `dequantize` would bump the `full_dequant` trace
+    counter; this path bumps `fused_dequant` instead).
+
+    Handles the three serve-path layouts: 2D (K, N) axis=-2 projections,
+    batched (E, K, N) axis=-2 expert stacks (x: (E, ..., K)), and the
+    axis=-1 (V, K) tied-embedding table contracted over K for logits.
+
+    Shapes are inferred from the DATA arrays, never `orig_shape`: under
+    `lax.scan` a stacked QTensor's leaves are sliced per layer while the
+    static orig_shape aux keeps the layer dim (the same reason `axis` is
+    stored negative).
+    """
+    if not isinstance(w, QTensor):
+        return ref_qmatmul(x, w, out_dtype)
+    count_dequant("fused_dequant")
+    g = w.group
+    q = _int_weight(w)
+    xf = x.astype(jnp.float32)
+    sf = w.scales.astype(jnp.float32)
+    if w.axis == -1:
+        # (V, K) table, contraction over K: logits = h @ embed.T
+        V, K = q.shape[-2], q.shape[-1]
+        xg = xf.reshape(*x.shape[:-1], K // g, g)
+        qg = q.reshape(V, K // g, g).astype(jnp.float32)
+        partial = jnp.einsum("...ag,vag->...av", xg, qg)
+        out = jnp.einsum("...av,va->...v", partial, sf)
+        return out.astype(out_dtype or x.dtype)
+    assert w.axis == -2, w.axis
+    K, N = q.shape[-2], q.shape[-1]
+    lead = q.shape[:-2]
+    xg = xf.reshape(*x.shape[:-1], K // g, g)
+    qg = q.reshape(*lead, K // g, g, N).astype(jnp.float32)
+    if not lead:
+        partial = jnp.einsum("...ag,agn->...an", xg, qg)
+        out = jnp.einsum("...an,an->...n", partial, sf)
+    else:
+        # batched expert stack: W's leading dim pairs with x's leading dim
+        assert len(lead) == 1 and x.shape[0] == lead[0], (x.shape, q.shape)
+        partial = jnp.einsum("e...ag,eagn->e...an", xg, qg)
+        out = jnp.einsum("e...an,ean->e...n", partial, sf)
+    return out.astype(out_dtype or x.dtype)
 
 
 def ref_flash_decode(q: jax.Array, k: jax.Array, v: jax.Array,
@@ -42,22 +95,38 @@ def ref_flash_decode(q: jax.Array, k: jax.Array, v: jax.Array,
     return jnp.einsum("bgpk,bkgh->bgph", w.astype(v.dtype), v)
 
 
+def _gather_pages(pages: jax.Array, tables: jax.Array, b: int, S: int,
+                  scales: Optional[jax.Array] = None) -> jax.Array:
+    """Gather pool pages by block table; with `scales` (per-page INT8
+    quantized pool, scales (n_pages, ps, g)) dequantize ONLY the gathered
+    rows — the full pool never exists in float."""
+    x = pages[tables].reshape(b, S, *pages.shape[2:])
+    if scales is None:
+        return x
+    s = scales[tables].reshape(b, S, *scales.shape[2:])
+    return x.astype(jnp.float32) * s[..., None].astype(jnp.float32)
+
+
 def ref_paged_decode(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
                      tables: jax.Array, lengths: jax.Array,
-                     window: int = 0, attn_cap: float = 0.0) -> jax.Array:
+                     window: int = 0, attn_cap: float = 0.0,
+                     k_scales: Optional[jax.Array] = None,
+                     v_scales: Optional[jax.Array] = None) -> jax.Array:
     """Paged single-token decode attention oracle (block-table gather).
 
     q: (b, g, qpk, hd); k_pages, v_pages: (n_pages, page_size, g, hd);
     tables: (b, max_pages) int32 page ids (padded entries must be valid
     indices — they are masked out); lengths: (b,) int32 tokens valid per
-    sequence INCLUSIVE of the current one.  Returns (b, g, qpk, hd).
+    sequence INCLUSIVE of the current one.  With k_scales/v_scales the
+    pools are per-token INT8 (scales (n_pages, page_size, g) f16) and are
+    dequantized after the gather.  Returns (b, g, qpk, hd).
     """
     b = q.shape[0]
     hd = q.shape[-1]
     n_pg, ps = k_pages.shape[0], k_pages.shape[1]
     S = tables.shape[1] * ps
-    k = k_pages[tables].reshape(b, S, *k_pages.shape[2:])
-    v = v_pages[tables].reshape(b, S, *v_pages.shape[2:])
+    k = _gather_pages(k_pages, tables, b, S, k_scales)
+    v = _gather_pages(v_pages, tables, b, S, v_scales)
     scores = jnp.einsum("bgph,bkgh->bgpk", q, k.astype(q.dtype),
                         preferred_element_type=jnp.float32)
     scores = scores / jnp.sqrt(jnp.float32(hd))
@@ -75,7 +144,9 @@ def ref_paged_decode(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
 
 def ref_paged_verify(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
                      tables: jax.Array, lengths: jax.Array,
-                     window: int = 0, attn_cap: float = 0.0) -> jax.Array:
+                     window: int = 0, attn_cap: float = 0.0,
+                     k_scales: Optional[jax.Array] = None,
+                     v_scales: Optional[jax.Array] = None) -> jax.Array:
     """Multi-query paged verify oracle (speculative-decode windows).
 
     q: (b, s, g, qpk, hd) — query j of lane i sits at absolute position
@@ -88,8 +159,8 @@ def ref_paged_verify(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
     hd = q.shape[-1]
     ps = k_pages.shape[1]
     S = tables.shape[1] * ps
-    k = k_pages[tables].reshape(b, S, *k_pages.shape[2:])
-    v = v_pages[tables].reshape(b, S, *v_pages.shape[2:])
+    k = _gather_pages(k_pages, tables, b, S, k_scales)
+    v = _gather_pages(v_pages, tables, b, S, v_scales)
     scores = jnp.einsum("bqgph,bkgh->bgpqk", q, k.astype(q.dtype),
                         preferred_element_type=jnp.float32)
     scores = scores / jnp.sqrt(jnp.float32(hd))
@@ -107,7 +178,10 @@ def ref_paged_verify(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
 
 
 def ref_swiglu_qgemv(x: jax.Array, w_gate, w_up) -> jax.Array:
-    """Fused gate/up GEMV + SiLU*mul oracle. x: (m, d) -> (m, f)."""
-    g = ref_qmatmul(x, w_gate, out_dtype=jnp.float32)
-    u = ref_qmatmul(x, w_up, out_dtype=jnp.float32)
+    """Fused gate/up GEMV + SiLU*mul oracle. x: (m, d) -> (m, f).
+
+    Uses the fused grouped contraction so the CPU serving path keeps
+    packed weights integer end-to-end, matching `swiglu_qgemv`."""
+    g = ref_qmatmul_fused(x, w_gate, out_dtype=jnp.float32)
+    u = ref_qmatmul_fused(x, w_up, out_dtype=jnp.float32)
     return (g * jax.nn.sigmoid(g) * u).astype(x.dtype)

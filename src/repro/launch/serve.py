@@ -43,8 +43,19 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen2.5-3b")
     ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--quant", default="int4",
-                    choices=["bf16", "int8", "int4"])
+    ap.add_argument("--precision", default=None,
+                    choices=["fp", "int8", "int4"],
+                    help="serving precision (ServeConfig.precision): "
+                         "int4 is the paper's CIM operating point "
+                         "(default); fp serves float weights + bf16 KV")
+    ap.add_argument("--quant", default=None,
+                    choices=["bf16", "int8", "int4"],
+                    help="DEPRECATED alias for --precision "
+                         "(bf16 maps to fp)")
+    ap.add_argument("--kv-dtype", default="auto",
+                    choices=["auto", "bf16", "f32", "int8"],
+                    help="paged KV pool storage; auto follows precision "
+                         "(int8 pools when quantized)")
     ap.add_argument("--requests", type=int, default=6)
     ap.add_argument("--tokens", type=int, default=24)
     ap.add_argument("--batch", type=int, default=4,
@@ -102,12 +113,27 @@ def main():
         from repro.obs import get_tracer
         get_tracer().enable()
 
+    import warnings
+
     import jax
     import jax.numpy as jnp
     from repro.configs import get_config, get_smoke_config
     from repro.models import DecoderLM, init_params
-    from repro.quant import quantize_params, quantized_fraction
-    from repro.serve import PagedServeEngine, SamplingParams, ServeRequest
+    from repro.quant import quantized_fraction
+    from repro.serve import (PagedServeEngine, SamplingParams, ServeConfig,
+                             ServeRequest)
+
+    # --quant predates ServeConfig; keep it working as an alias
+    precision = args.precision
+    if args.quant is not None:
+        if precision is not None:
+            raise SystemExit("pass --precision or --quant, not both")
+        warnings.warn("--quant is deprecated; use --precision "
+                      "(bf16 -> fp)", DeprecationWarning)
+        precision = {"bf16": "fp", "int8": "int8",
+                     "int4": "int4"}[args.quant]
+    if precision is None:
+        precision = "int4"          # the paper's operating point
 
     cfg = (get_smoke_config(args.arch) if args.smoke
            else get_config(args.arch)).replace(dtype="float32", remat=False)
@@ -117,11 +143,6 @@ def main():
     model = DecoderLM(cfg)
     params = init_params(model.param_specs(), jax.random.PRNGKey(0),
                          dtype_override=jnp.float32)
-    if args.quant != "bf16":
-        params = quantize_params(params, bits=4 if args.quant == "int4"
-                                 else 8, group=16 if args.smoke else 128)
-        print(f"[serve] {quantized_fraction(params)*100:.0f}% of param "
-              f"bytes quantized ({args.quant})")
 
     rng = np.random.default_rng(0)
     prompts = [rng.integers(0, cfg.vocab, int(n)).astype(np.int32)
@@ -156,13 +177,29 @@ def main():
         raise SystemExit("--replicas > 1 requires --gateway (the offline "
                          "sweep runs one engine)")
 
+    serve_cfg = ServeConfig(
+        precision=precision, kv_dtype=args.kv_dtype,
+        quant_group=16 if args.smoke else 128,
+        max_batch=args.batch, max_seq=args.max_seq,
+        page_size=args.page_size, n_pages=args.pages or None,
+        prefix_cache=prefix_cache, replicas=args.replicas,
+        policy=args.policy, max_pending=args.max_pending)
+
     def build_engine():
-        return PagedServeEngine(
-            model, params, max_batch=args.batch, max_seq=args.max_seq,
-            page_size=args.page_size, n_pages=args.pages or None,
-            spec=spec_cfg, prefix_cache=prefix_cache)
+        # the engine quantizes float params itself when the config says
+        # so; replicas then share the packed tensors (first engine
+        # captures them below so later builds skip re-quantizing)
+        return PagedServeEngine(model, params, serve_cfg, spec=spec_cfg)
 
     eng = build_engine()
+    params = eng.params          # share (possibly packed) weights
+    if serve_cfg.quantized():
+        # report from the ENGINE's config: it pins auto-resolutions the
+        # request couldn't know about (e.g. MLA degrades auto-int8 KV
+        # back to bf16)
+        print(f"[serve] {quantized_fraction(params)*100:.0f}% of param "
+              f"bytes quantized ({precision}, kv "
+              f"{eng.config.as_dict()['kv_dtype_resolved']})")
     if args.gateway:
         import asyncio
         from repro.api import Gateway
@@ -171,8 +208,7 @@ def main():
         # KV pools + N driver threads, not N copies of the weights
         engines = [eng] + [build_engine()
                            for _ in range(args.replicas - 1)]
-        router = FleetRouter(engines, policy=args.policy,
-                             max_pending=args.max_pending)
+        router = FleetRouter(engines)
         import sys
         access_log = (sys.stderr if args.access_log == "-"
                       else args.access_log)

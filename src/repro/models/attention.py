@@ -249,6 +249,19 @@ def _page_scatter(pool: jax.Array, vals: jax.Array, tables: jax.Array,
     return pool.at[page, off].set(vals.astype(pool.dtype), mode="drop")
 
 
+def _quantize_kv_rows(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Per-(token, kv-head) symmetric INT8: x (b, s, g, hd) -> (values
+    rounded to [-127, 127] still in float, scales (b, s, g) f16).  The
+    STORED f16 scale is what divides, so pool int8 x pool scale
+    round-trips without a second rounding."""
+    absmax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1)
+    scale = (jnp.maximum(absmax, 1e-8) / 127.0).astype(jnp.float16)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32)
+                           / scale[..., None].astype(jnp.float32)),
+                 -127.0, 127.0)
+    return q, scale
+
+
 def gqa_paged_step(p: Params, cfg: ModelConfig, x: jax.Array, cache: Dict,
                    tables: jax.Array, lengths: jax.Array, n_new: jax.Array,
                    is_local, verify: bool = False) -> Tuple[jax.Array, Dict]:
@@ -282,8 +295,22 @@ def gqa_paged_step(p: Params, cfg: ModelConfig, x: jax.Array, cache: Dict,
     q = apply_rope(q, cos, sin)
     k = apply_rope(k, cos, sin)
 
-    ck = _page_scatter(cache["k"], k, tables, slots, n_new)
-    cv = _page_scatter(cache["v"], v, tables, slots, n_new)
+    quant_kv = "k_scale" in cache
+    if quant_kv:
+        # per-token INT8 pools: scale pages ride the same block tables
+        # (COW/fork/trim move them with their K/V pages for free)
+        kq, ks = _quantize_kv_rows(k)
+        vq, vs = _quantize_kv_rows(v)
+        ck = _page_scatter(cache["k"], kq, tables, slots, n_new)
+        cv = _page_scatter(cache["v"], vq, tables, slots, n_new)
+        cks = _page_scatter(cache["k_scale"], ks, tables, slots, n_new)
+        cvs = _page_scatter(cache["v_scale"], vs, tables, slots, n_new)
+        out_cache = {"k": ck, "v": cv, "k_scale": cks, "v_scale": cvs}
+    else:
+        ck = _page_scatter(cache["k"], k, tables, slots, n_new)
+        cv = _page_scatter(cache["v"], v, tables, slots, n_new)
+        cks = cvs = None
+        out_cache = {"k": ck, "v": cv}
     total = lengths + n_new                                      # (b,)
     window = int(cfg.local_window or 0)
     scale = 1.0 / math.sqrt(hd)
@@ -295,9 +322,10 @@ def gqa_paged_step(p: Params, cfg: ModelConfig, x: jax.Array, cache: Dict,
         from repro.kernels.ops import paged_decode_attention
         qg = q.reshape(b, g, qpk, hd)
         out_g = paged_decode_attention(qg, ck, cv, tables, total, 0,
-                                       cfg.attn_softcap)
+                                       cfg.attn_softcap,
+                                       k_scales=cks, v_scales=cvs)
         out = out_g.reshape(b, 1, cfg.n_heads * hd).astype(x.dtype)
-        return qmm(out, p["wo"]), {"k": ck, "v": cv}
+        return qmm(out, p["wo"]), out_cache
 
     if verify and not window:
         # speculative-verify fast path: all s window positions in one
@@ -305,13 +333,22 @@ def gqa_paged_step(p: Params, cfg: ModelConfig, x: jax.Array, cache: Dict,
         from repro.kernels.ops import paged_verify_attention
         qg = q.reshape(b, s, g, qpk, hd)
         out_g = paged_verify_attention(qg, ck, cv, tables, lengths, 0,
-                                       cfg.attn_softcap)
+                                       cfg.attn_softcap,
+                                       k_scales=cks, v_scales=cvs)
         out = out_g.reshape(b, s, cfg.n_heads * hd).astype(x.dtype)
-        return qmm(out, p["wo"]), {"k": ck, "v": cv}
+        return qmm(out, p["wo"]), out_cache
 
     # chunk path: gather the sequence's pages back to a contiguous view
-    kg = ck[tables].reshape(b, S, g, hd)
-    vg = cv[tables].reshape(b, S, g, hd)
+    if quant_kv:
+        kg = (ck[tables].astype(jnp.float32)
+              * cks[tables][..., None].astype(jnp.float32)
+              ).reshape(b, S, g, hd)
+        vg = (cv[tables].astype(jnp.float32)
+              * cvs[tables][..., None].astype(jnp.float32)
+              ).reshape(b, S, g, hd)
+    else:
+        kg = ck[tables].reshape(b, S, g, hd)
+        vg = cv[tables].reshape(b, S, g, hd)
     qg = q.reshape(b, s, g, qpk, hd)
     scores = jnp.einsum("bqgph,bkgh->bgpqk", qg, kg.astype(qg.dtype),
                         preferred_element_type=jnp.float32) * scale
@@ -327,7 +364,7 @@ def gqa_paged_step(p: Params, cfg: ModelConfig, x: jax.Array, cache: Dict,
     w = jax.nn.softmax(scores, axis=-1)
     out = jnp.einsum("bgpqk,bkgh->bqgph", w.astype(vg.dtype), vg)
     out = out.reshape(b, s, cfg.n_heads * hd).astype(x.dtype)
-    return qmm(out, p["wo"]), {"k": ck, "v": cv}
+    return qmm(out, p["wo"]), out_cache
 
 
 def mla_paged_step(p: Params, cfg: ModelConfig, x: jax.Array, cache: Dict,
@@ -500,8 +537,20 @@ def attn_paged_step(p, cfg, x, cache, tables, lengths, n_new, is_local,
 
 def paged_cache_spec(cfg: ModelConfig, n_pages: int, page_size: int,
                      dtype=jnp.bfloat16) -> Dict[str, jax.ShapeDtypeStruct]:
-    """Shape/dtype of one layer's paged KV pool (shared by all sequences)."""
+    """Shape/dtype of one layer's paged KV pool (shared by all sequences).
+
+    dtype == int8 requests the quantized pool layout: int8 K/V plus f16
+    per-(token, kv-head) scale pools keyed "k_scale"/"v_scale".  Every
+    leaf keeps the page axis first, so the allocator's page-copy (COW),
+    fork, and trim move scales together with their pages — the block
+    table stays the single source of truth.
+    """
     if cfg.attn_kind == "mla":
+        if dtype == jnp.int8:
+            # the latent stream is already ~9x smaller than GQA K/V and
+            # is consumed through matmuls (not per-token rows); keep fp
+            raise ValueError(
+                "int8 paged KV is not supported for MLA latent pools")
         m = cfg.mla
         return {
             "c_kv": jax.ShapeDtypeStruct((n_pages, page_size,
@@ -509,12 +558,15 @@ def paged_cache_spec(cfg: ModelConfig, n_pages: int, page_size: int,
             "k_rope": jax.ShapeDtypeStruct((n_pages, page_size,
                                             m.qk_rope_head_dim), dtype),
         }
-    return {
-        "k": jax.ShapeDtypeStruct((n_pages, page_size, cfg.n_kv_heads,
-                                   cfg.hd()), dtype),
-        "v": jax.ShapeDtypeStruct((n_pages, page_size, cfg.n_kv_heads,
-                                   cfg.hd()), dtype),
-    }
+    kv = jax.ShapeDtypeStruct((n_pages, page_size, cfg.n_kv_heads,
+                               cfg.hd()), dtype)
+    spec = {"k": kv, "v": kv}
+    if dtype == jnp.int8:
+        sc = jax.ShapeDtypeStruct((n_pages, page_size, cfg.n_kv_heads),
+                                  jnp.float16)
+        spec["k_scale"] = sc
+        spec["v_scale"] = sc
+    return spec
 
 
 def empty_cache_spec(cfg: ModelConfig, batch: int, max_seq: int,

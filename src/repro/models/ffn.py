@@ -39,6 +39,12 @@ def dense_ffn_specs(cfg: ModelConfig, d_ff: int = 0) -> Dict[str, ParamSpec]:
 
 
 def dense_ffn(p: Params, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    if cfg.ffn_gated and cfg.ffn_act == "silu":
+        # fused SwiGLU: one pass over the packed gate/up weights
+        # (swiglu_qgemv Pallas kernel on TPU, fused grouped einsum on CPU)
+        from repro.kernels.ops import swiglu
+        h = swiglu(x, p["w_gate"], p["w_up"])
+        return qmm(h, p["w_down"])
     act = ACTIVATIONS[cfg.ffn_act]
     up = qmm(x, p["w_up"])
     if cfg.ffn_gated:
@@ -85,12 +91,20 @@ def _router(p: Params, cfg: ModelConfig, xf: jax.Array
 
 
 def _expert_ffn(p: Params, cfg: ModelConfig, xe: jax.Array) -> jax.Array:
-    """xe: (E, C, d) -> (E, C, d), batched over the expert dim."""
+    """xe: (E, C, d) -> (E, C, d), batched over the expert dim.  Quantized
+    expert stacks go through the fused grouped contraction (lead dim E),
+    so packed experts stay integer on the serve path too."""
+    from repro.kernels.ref import ref_qmatmul_fused
+    from repro.quant.qarray import QTensor
+
+    def mm(x, w):
+        if isinstance(w, QTensor):
+            return ref_qmatmul_fused(x, w, out_dtype=x.dtype)
+        return jnp.einsum("ecd,edf->ecf", x, w.astype(x.dtype))
+
     act = ACTIVATIONS[cfg.ffn_act]
-    g = jnp.einsum("ecd,edf->ecf", xe, deq(p["we_gate"]).astype(xe.dtype))
-    u = jnp.einsum("ecd,edf->ecf", xe, deq(p["we_up"]).astype(xe.dtype))
-    h = act(g) * u
-    return jnp.einsum("ecf,efd->ecd", h, deq(p["we_down"]).astype(xe.dtype))
+    h = act(mm(xe, p["we_gate"])) * mm(xe, p["we_up"])
+    return mm(h, p["we_down"])
 
 
 def _moe_gather(p: Params, cfg: ModelConfig, x: jax.Array) -> jax.Array:

@@ -124,13 +124,19 @@ class DecoderLM:
     def _logits(self, params: Params, h: jax.Array) -> jax.Array:
         cfg = self.cfg
         h = apply_norm(params["ln_final"], cfg, h)
-        if cfg.tie_embeddings or "head" not in params:
-            logits = jnp.einsum("bsd,vd->bsv", h,
-                                deq(params["embed"]).astype(h.dtype),
+        w = params["embed"] if (cfg.tie_embeddings or "head" not in params) \
+            else params["head"]
+        if isinstance(w, QTensor):
+            # fused grouped contraction: the packed vocab table is never
+            # materialized in float (the tied table groups along d — the
+            # contraction axis — exactly so this works)
+            from repro.kernels.ref import ref_qmatmul_fused
+            logits = ref_qmatmul_fused(h, w, out_dtype=jnp.float32)
+        elif cfg.tie_embeddings or "head" not in params:
+            logits = jnp.einsum("bsd,vd->bsv", h, w.astype(h.dtype),
                                 preferred_element_type=jnp.float32)
         else:
-            logits = jnp.einsum("bsd,dv->bsv", h,
-                                deq(params["head"]).astype(h.dtype),
+            logits = jnp.einsum("bsd,dv->bsv", h, w.astype(h.dtype),
                                 preferred_element_type=jnp.float32)
         if cfg.final_softcap:
             logits = softcap(logits, cfg.final_softcap)
@@ -674,16 +680,18 @@ class DecoderLM:
         if n_attn == 0:
             return {}
 
-        def pool_axes(struct):
+        def pool_axes(name, struct):
             if len(struct.shape) == 4:          # (n_pages, ps, g, hd)
                 return (NONE, NONE, TP, NONE)
+            if name.endswith("_scale"):         # (n_pages, ps, g) INT8 scales
+                return (NONE, NONE, TP)
             return (NONE, NONE, NONE)           # (n_pages, ps, r) MLA latent
 
         pool_cfg = cfg
         if cfg.family == "zamba":               # shared attn block's shape
             pool_cfg = cfg.replace(d_ff=cfg.zamba.shared_d_ff, moe=None)
         one = paged_cache_spec(pool_cfg, n_pages, page_size, kv_dtype)
-        one_specs = {k: ParamSpec(tuple(v.shape), v.dtype, pool_axes(v),
+        one_specs = {k: ParamSpec(tuple(v.shape), v.dtype, pool_axes(k, v),
                                   init="zeros") for k, v in one.items()}
         n_first = (cfg.moe.first_dense_layers
                    if (cfg.moe and cfg.moe.first_dense_layers) else 0)

@@ -180,4 +180,9 @@ class EnergyMeter:
             "sim_tokens_per_j": self.tokens_per_j(),
             "sim_tokens_per_s": (self.decode_tokens / self.sim_s
                                  if self.sim_s > 0 else 0.0),
+            # the precision the cost model was fitted at (engine sets
+            # these from ServeConfig: int4 = the paper's operating
+            # point, 16/16 = the fp baseline)
+            "sim_w_bits": float(self.w_bits),
+            "sim_a_bits": float(self.a_bits),
         }

@@ -9,6 +9,7 @@ of auxiliary operators on dedicated units).
 """
 from __future__ import annotations
 
+import warnings
 from typing import Any, Tuple
 
 import jax
@@ -39,7 +40,11 @@ def _pick_group(K: int, group: int, shard_hint: int) -> int:
     """Largest group <= `group` dividing K, preferring group counts
     (K/group) divisible by the tensor-parallel mesh width: misaligned
     group counts force GSPMD to re-gather packed weights around the
-    dequant reshape (SSPerf iteration c3, ~400MB/step on qwen2.5-3b)."""
+    dequant reshape (SSPerf iteration c3, ~400MB/step on qwen2.5-3b).
+
+    Returns 0 when no group >= 8 divides K (e.g. K prime or < 8); the
+    caller must skip quantization for that leaf — 0 is a sentinel, not a
+    usable group size."""
     best = 0
     for g in range(min(group, K), 7, -1):
         if K % g:
@@ -48,6 +53,12 @@ def _pick_group(K: int, group: int, shard_hint: int) -> int:
             return g
         best = best or g
     return best
+
+
+def _skip_leaf(name: str, K: int) -> None:
+    warnings.warn(
+        f"ptq: no valid group size for leaf '{name}' (K={K}); "
+        "leaving it unquantized", stacklevel=3)
 
 
 def _quantize_leaf(name: str, x: Any, bits: int, group: int,
@@ -63,6 +74,9 @@ def _quantize_leaf(name: str, x: Any, bits: int, group: int,
     K = x.shape[axis]
     g = _pick_group(K, group, shard_hint)
     if not g or K % g != 0 or (bits == 4 and K % 2 != 0):
+        # _pick_group returns the 0 sentinel when nothing >= 8 divides K;
+        # quantize() would assert/divide by zero on it
+        _skip_leaf(name, K)
         return x
     return quantize(x, bits=bits, group=g, axis=axis)
 
@@ -94,6 +108,7 @@ def quantize_structs(spec_tree: Any, bits: int = 4, group: int = 128,
         K = shape[axis]
         g = _pick_group(K, group, shard_hint)
         if not g or K % g != 0 or (bits == 4 and K % 2 != 0):
+            _skip_leaf(name, K)
             return s.struct()
         dshape = list(shape)
         if bits == 4:

@@ -23,6 +23,28 @@ import jax.numpy as jnp
 
 INT4_GROUP = 128
 
+# Trace-time counters: python-side increments inside jitted functions run
+# when the function is TRACED, not per step — so after tracing a decode
+# step, `full_dequant == 0` proves the compiled graph contains no
+# whole-weight float materialization (the serve-path residency guarantee
+# asserted by `api_bench --precision int4`).  `fused_dequant` counts
+# group-scale applications that never build the full float weight
+# (fused refs, cim_gemv/swiglu_qgemv kernels, row gathers).
+_COUNTERS = {"full_dequant": 0, "fused_dequant": 0}
+
+
+def count_dequant(kind: str = "full_dequant") -> None:
+    _COUNTERS[kind] += 1
+
+
+def dequant_counters() -> dict:
+    return dict(_COUNTERS)
+
+
+def reset_dequant_counters() -> None:
+    for k in _COUNTERS:
+        _COUNTERS[k] = 0
+
 
 @jax.tree_util.register_pytree_node_class
 @dataclass
@@ -107,6 +129,7 @@ def unpack_int4(packed: jax.Array, axis: int = 0) -> jax.Array:
 
 
 def dequantize(qt: QTensor, dtype=jnp.bfloat16) -> jax.Array:
+    count_dequant("full_dequant")
     q = unpack_int4(qt.data, qt.axis) if qt.bits == 4 else qt.data
     qm = jnp.moveaxis(q, qt.axis, 0)
     K = qm.shape[0]
@@ -130,6 +153,7 @@ def dequant_rows(qt: QTensor, ids: jax.Array, dtype=jnp.bfloat16
     quantized tied embedding costs `len(ids) * d/2` bytes, not the full
     table.  ids: (...,) int32 -> (..., d)."""
     assert qt.axis == -1 and len(qt.orig_shape) == 2
+    count_dequant("fused_dequant")
     d = qt.orig_shape[1]
     data = qt.data[ids]                              # (..., d/2 or d)
     scales = qt.scales[ids]                          # (..., d/group)

@@ -3,6 +3,7 @@
 allocator -> scheduler -> engine -> telemetry; see README.md in this
 package.  `ServeEngine`/`Request` remain as the seed-API shim.
 """
+from .config import ServeConfig
 from .engine import PagedServeEngine, Request, ServeEngine
 from .paged_cache import BlockAllocator, OutOfPagesError, PagedKVCache
 from .prefix import PrefixIndex
@@ -11,7 +12,8 @@ from .scheduler import Scheduler, ServeRequest
 from .state import StateArena
 from .telemetry import Telemetry
 
-__all__ = ["PagedServeEngine", "PrefixIndex", "Request", "ServeEngine",
+__all__ = ["PagedServeEngine", "PrefixIndex", "Request", "ServeConfig",
+           "ServeEngine",
            "BlockAllocator", "OutOfPagesError", "PagedKVCache",
            "SamplingParams", "sample_tokens", "Scheduler", "ServeRequest",
            "StateArena", "Telemetry"]

@@ -1,0 +1,93 @@
+"""ServeConfig — the single typed configuration object for the serving
+stack.
+
+One frozen dataclass flows launcher -> Gateway -> FleetRouter -> Replica
+-> PagedServeEngine, replacing the kwarg-and-flag sprawl that had every
+layer re-declaring (and silently defaulting) max_batch/page_size/... .
+The old per-layer kwargs keep working through a deprecation shim in
+`PagedServeEngine.__init__` that warns once per process.
+
+`precision` is the serving precision of the EdgeCIM hot path:
+
+  "fp"    float weights, float KV (the pre-PR-8 behavior)
+  "int8"  packed INT8 weights (QTensor, per-group scales)
+  "int4"  packed INT4 weights — the paper's headline operating point
+
+`kv_dtype` picks the paged-KV pool storage independently:
+
+  "auto"  int8 pools when precision is quantized, bf16 otherwise
+  "bf16" | "f32"  float pools
+  "int8"  per-token INT8 K/V with f16 scale pages beside the block table
+
+The resolved config is reported verbatim under `/metrics` (key
+"config") so an operator can read the precision a fleet is actually
+serving at.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Optional
+
+import jax.numpy as jnp
+
+PRECISIONS = ("fp", "int8", "int4")
+KV_DTYPES = ("auto", "bf16", "f32", "int8")
+
+
+@dataclass(frozen=True)
+class ServeConfig:
+    # precision of the hot path
+    precision: str = "fp"            # "fp" | "int8" | "int4"
+    kv_dtype: str = "auto"           # "auto" | "bf16" | "f32" | "int8"
+    quant_group: int = 128           # group size for weight quantization
+
+    # engine geometry
+    max_batch: int = 8
+    max_seq: int = 256
+    page_size: int = 16
+    n_pages: Optional[int] = None    # None -> engine sizes the pool
+    prefill_chunk: int = 16
+    eos_id: Optional[int] = None
+    seed: int = 0
+    prefix_cache: Optional[bool] = None   # None -> engine default (on)
+
+    # fleet shape
+    replicas: int = 1
+    policy: str = "least-loaded"
+    max_pending: int = 32
+
+    def __post_init__(self):
+        if self.precision not in PRECISIONS:
+            raise ValueError(
+                f"precision must be one of {PRECISIONS}, got "
+                f"{self.precision!r}")
+        if self.kv_dtype not in KV_DTYPES:
+            raise ValueError(
+                f"kv_dtype must be one of {KV_DTYPES}, got "
+                f"{self.kv_dtype!r}")
+
+    # -- resolution ------------------------------------------------------
+    def quantized(self) -> bool:
+        return self.precision in ("int8", "int4")
+
+    def weight_bits(self) -> int:
+        """Bits per weight for quantize_params AND the energy model's
+        w_bits (fp maps to 16: bf16 storage)."""
+        return {"fp": 16, "int8": 8, "int4": 4}[self.precision]
+
+    def resolved_kv_dtype(self):
+        """The jnp dtype the paged KV pools are allocated at."""
+        kv = self.kv_dtype
+        if kv == "auto":
+            kv = "int8" if self.quantized() else "bf16"
+        return {"bf16": jnp.bfloat16, "f32": jnp.float32,
+                "int8": jnp.int8}[kv]
+
+    # -- reporting -------------------------------------------------------
+    def as_dict(self) -> dict:
+        """JSON-safe resolved view (what `/metrics` reports)."""
+        d = dataclasses.asdict(self)
+        d["kv_dtype_resolved"] = jnp.dtype(self.resolved_kv_dtype()).name
+        d["weight_bits"] = self.weight_bits()
+        return d

@@ -50,7 +50,8 @@ shim; every token-input family now routes to the paged runtime.
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass, field
+import warnings
+from dataclasses import dataclass, field, replace as dc_replace
 from typing import Any, Dict, List, Optional
 
 import jax
@@ -61,7 +62,10 @@ from repro.models import DecoderLM
 from repro.obs.energy import EnergyMeter
 from repro.obs.recorder import FlightRecorder
 from repro.obs.trace import get_tracer
+from repro.quant.ptq import quantize_params
+from repro.quant.qarray import QTensor, dequant_counters
 
+from .config import ServeConfig
 from .paged_cache import PagedKVCache
 from .prefix import PrefixIndex
 from .sampling import SamplingParams, processed_probs, sample_tokens
@@ -85,15 +89,86 @@ def capability_error(model: DecoderLM, capability: str) -> str:
             f"per-lane state that {_CAPABILITY_REASONS[capability]}")
 
 
+_UNSET = object()
+_legacy_warned = False      # deprecation shim warns once per process
+
+_KV_DTYPE_NAMES = {"bfloat16": "bf16", "float32": "f32", "int8": "int8"}
+
+
+def _config_from_legacy(max_batch, max_seq, page_size, n_pages,
+                        prefill_chunk, kv_dtype, eos_id, seed,
+                        prefix_cache) -> ServeConfig:
+    """Map the pre-ServeConfig kwargs onto a ServeConfig (fp precision:
+    the old engine always served float weights)."""
+    kv = "bf16" if kv_dtype is _UNSET else \
+        _KV_DTYPE_NAMES[jnp.dtype(kv_dtype).name]
+    return ServeConfig(
+        precision="fp", kv_dtype=kv,
+        max_batch=8 if max_batch is _UNSET else max_batch,
+        max_seq=256 if max_seq is _UNSET else max_seq,
+        page_size=16 if page_size is _UNSET else page_size,
+        n_pages=None if n_pages is _UNSET else n_pages,
+        prefill_chunk=16 if prefill_chunk is _UNSET else prefill_chunk,
+        eos_id=None if eos_id is _UNSET else eos_id,
+        seed=0 if seed is _UNSET else seed,
+        prefix_cache=None if prefix_cache is _UNSET else prefix_cache)
+
+
 class PagedServeEngine:
-    def __init__(self, model: DecoderLM, params: Any, *,
-                 max_batch: int = 8, max_seq: int = 256,
-                 page_size: int = 16, n_pages: Optional[int] = None,
-                 prefill_chunk: int = 16, kv_dtype=jnp.bfloat16,
-                 eos_id: Optional[int] = None, seed: int = 0,
+    def __init__(self, model: DecoderLM, params: Any,
+                 config: Optional[ServeConfig] = None, *,
+                 max_batch=_UNSET, max_seq=_UNSET, page_size=_UNSET,
+                 n_pages=_UNSET, prefill_chunk=_UNSET, kv_dtype=_UNSET,
+                 eos_id=_UNSET, seed=_UNSET,
                  spec: Optional[Any] = None,
-                 prefix_cache: Optional[bool] = None,
+                 prefix_cache=_UNSET,
                  clock=time.monotonic):
+        legacy = {k: v for k, v in [
+            ("max_batch", max_batch), ("max_seq", max_seq),
+            ("page_size", page_size), ("n_pages", n_pages),
+            ("prefill_chunk", prefill_chunk), ("kv_dtype", kv_dtype),
+            ("eos_id", eos_id), ("seed", seed),
+            ("prefix_cache", prefix_cache)] if v is not _UNSET}
+        if config is None:
+            if legacy:
+                global _legacy_warned
+                if not _legacy_warned:
+                    _legacy_warned = True
+                    warnings.warn(
+                        "PagedServeEngine(max_batch=..., kv_dtype=..., ...)"
+                        " kwargs are deprecated; pass a"
+                        " serve.ServeConfig instead",
+                        DeprecationWarning, stacklevel=2)
+            config = _config_from_legacy(
+                max_batch, max_seq, page_size, n_pages, prefill_chunk,
+                kv_dtype, eos_id, seed, prefix_cache)
+        elif legacy:
+            raise ValueError(
+                "pass either a ServeConfig or legacy kwargs, not both: "
+                + ", ".join(sorted(legacy)))
+        if (config.kv_dtype == "auto"
+                and config.resolved_kv_dtype() == jnp.int8
+                and model.cfg.attn_kind == "mla"):
+            # auto means "best supported": MLA latent pools stay float
+            # (attention.paged_cache_spec rejects int8 for them), so
+            # auto degrades to bf16 instead of crashing — only an
+            # EXPLICIT kv_dtype="int8" is a capability error.  Pin the
+            # resolution into the config so /metrics reports what the
+            # engine actually allocated.
+            config = dc_replace(config, kv_dtype="bf16")
+        self.config = config
+        max_batch, max_seq = config.max_batch, config.max_seq
+        page_size, n_pages = config.page_size, config.n_pages
+        prefill_chunk, eos_id = config.prefill_chunk, config.eos_id
+        seed, prefix_cache = config.seed, config.prefix_cache
+        kv_dtype = config.resolved_kv_dtype()
+        if config.quantized() and not any(
+                isinstance(l, QTensor) for l in jax.tree_util.tree_leaves(
+                    params, is_leaf=lambda x: isinstance(x, QTensor))):
+            # launcher may hand us raw float params; the precision field
+            # is authoritative, so quantize here
+            params = quantize_params(params, bits=config.weight_bits(),
+                                     group=config.quant_group)
         assert model.cfg.embed_inputs, "engine serves token-input models"
         assert max_seq % page_size == 0, (max_seq, page_size)
         # capability guards: prefix sharing and speculative decoding act
@@ -146,7 +221,12 @@ class PagedServeEngine:
         self.tracer = get_tracer()
         self.scheduler.tracer = self.tracer
         self.recorder = FlightRecorder(label="engine", clock=clock)
-        self.energy = EnergyMeter(model.cfg)
+        # the energy meter charges at the SERVED precision: int4 hits
+        # the paper's CIM operating point (e_mac_int4, 4 bit-serial
+        # passes), fp pays 16-bit storage and pass counts
+        self.energy = EnergyMeter(
+            model.cfg, w_bits=config.weight_bits(),
+            a_bits=8 if config.quantized() else 16)
         self._last_t0 = 0.0
         self._cow_seen = 0          # deltas -> cow_copy / prefix_evict
         self._evict_seen = 0        # trace instants per step
@@ -691,6 +771,12 @@ class PagedServeEngine:
     def summary(self) -> Dict[str, float]:
         s = self.telemetry.summary()
         s.update(self.energy.summary())
+        # trace-time dequant counters: full_dequant counts whole-weight
+        # float materializations traced into any graph this process;
+        # a quantized hot path keeps the delta at 0 (api_bench asserts)
+        dq = dequant_counters()
+        s["weight_full_dequants"] = float(dq["full_dequant"])
+        s["weight_fused_dequants"] = float(dq["fused_dequant"])
         s["cow_copies"] = float(self.cache.cow_copies)
         s["kv_pages_shared"] = float(self.cache.pages_shared)
         if self.spec is not None:
@@ -748,9 +834,10 @@ class ServeEngine:
         page_size = next(p for p in (16, 8, 4, 2, 1)
                          if max_seq % p == 0)
         self.engine = PagedServeEngine(
-            model, params, max_batch=n_slots, max_seq=max_seq,
-            page_size=page_size,
-            prefill_chunk=min(16, max_seq))
+            model, params, ServeConfig(
+                precision="fp", kv_dtype="bf16", max_batch=n_slots,
+                max_seq=max_seq, page_size=page_size,
+                prefill_chunk=min(16, max_seq)))
         self.stats: Dict[str, float] = {"tokens": 0, "steps": 0,
                                         "decode_s": 0.0}
 

@@ -35,7 +35,7 @@ from typing import Dict, List, Tuple
 # identity fields: define WHICH row we compare, never gated themselves
 IDENTITY = ("mode", "family", "mix", "workload", "drafter", "k", "batch",
             "n_requests", "prefix_len", "rate", "n", "replicas", "policy",
-            "tracing")
+            "tracing", "precision")
 
 # (substring, direction, class); first match wins.  direction "higher"
 # means bigger is better.  Metrics matching nothing are informational.
@@ -50,6 +50,14 @@ METRIC_RULES: List[Tuple[str, str, str]] = [
     ("affinity_hits", "higher", "quality"),
     ("sim_speedup", "higher", "quality"),
     ("completed", "higher", "quality"),
+    # quantized serving (api_bench --precision): deterministic given
+    # seed + config, so they gate at quality tolerance
+    ("quality_logit_mse", "lower", "quality"),
+    ("quality_greedy_match_len", "higher", "quality"),
+    ("kv_lanes_ratio", "higher", "quality"),
+    # baseline is 0: ANY traced full-weight dequant on a quantized row
+    # fails (the symmetric band collapses to equality at b == 0)
+    ("weight_full_dequants", "lower", "quality"),
     ("ttft_speedup", "higher", "timing"),
     ("goodput", "higher", "timing"),    # before tokens_per_s: it also
     ("tokens_per_s", "higher", "timing"),   # substring-matches goodput_*
@@ -191,6 +199,68 @@ def check_tracing_overhead(name: str, current: List[Dict],
     return failures
 
 
+def check_quant_quality(name: str, current: List[Dict],
+                        match_min: float, mse_max: float) -> List[str]:
+    """Quantization quality gate, judged WITHIN the current run on rows
+    labeled with a quantized `precision`: the greedy decode must track
+    the fp stack for at least `match_min` of the probe window, and the
+    probe logit MSE must stay under `mse_max`.  Absolute floors (not
+    baseline ratios): a quantization bug that halves quality along with
+    its own baseline would sail through a relative check."""
+    failures: List[str] = []
+    for r in current:
+        if r.get("precision") not in ("int8", "int4"):
+            continue
+        label = name + "[" + ",".join(
+            f"{k}={v}" for k, v in row_key(r)) + "]"
+        total = float(r.get("quality_greedy_tokens", 0.0))
+        match = float(r.get("quality_greedy_match_len", float("nan")))
+        if total and match / total < match_min - 1e-9:
+            failures.append(
+                f"{label}: greedy decode diverged from fp after "
+                f"{match:.0f}/{total:.0f} tokens (floor "
+                f"{match_min:.0%} of the probe window)")
+        mse = float(r.get("quality_logit_mse", float("nan")))
+        if not math.isnan(mse) and mse > mse_max + 1e-12:
+            failures.append(
+                f"{label}: probe logit MSE {fmt(mse)} exceeds ceiling "
+                f"{fmt(mse_max)}")
+    return failures
+
+
+def check_quant_energy(name: str, current: List[Dict],
+                       energy_min: float) -> List[str]:
+    """INT4 efficiency gate, judged WITHIN the current run: rows
+    differing only in `precision` must show int4 sim_tokens_per_j at
+    least `energy_min` x the fp row's — the paper's headline claim
+    (the INT4 CIM operating point buys real energy efficiency), kept
+    true by construction in the cost model and enforced here against
+    accounting regressions (e.g. the meter silently refitting every
+    precision at the same bit width)."""
+    failures: List[str] = []
+    groups: Dict[Tuple, Dict[str, Dict]] = {}
+    for r in current:
+        if "precision" not in r or "sim_tokens_per_j" not in r:
+            continue
+        key = tuple((k, r[k]) for k in IDENTITY
+                    if k in r and k != "precision")
+        groups.setdefault(key, {})[r["precision"]] = r
+    for key, by_prec in groups.items():
+        fp, q4 = by_prec.get("fp"), by_prec.get("int4")
+        if fp is None or q4 is None:
+            continue
+        base = float(fp["sim_tokens_per_j"])
+        if not base or math.isnan(base):
+            continue
+        ratio = float(q4["sim_tokens_per_j"]) / base
+        if ratio < energy_min - 1e-9:
+            label = name + "[" + ",".join(f"{k}={v}" for k, v in key) + "]"
+            failures.append(
+                f"{label}: int4 sim_tokens_per_j only {ratio:.2f}x fp "
+                f"(need >= {energy_min:g}x)")
+    return failures
+
+
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--baseline",
@@ -220,6 +290,17 @@ def main() -> int:
                     help="max goodput lost to tracing, judged within "
                          "the current run on rows differing only in "
                          "`tracing` (api_bench --trace off/on pairs)")
+    ap.add_argument("--quant-match-min", type=float, default=0.5,
+                    help="quantized rows: minimum fraction of the "
+                         "greedy probe window matching the fp stack "
+                         "(absolute floor, judged within the current "
+                         "run)")
+    ap.add_argument("--quant-mse-max", type=float, default=1.0,
+                    help="quantized rows: maximum probe logit MSE vs "
+                         "the fp stack (absolute ceiling)")
+    ap.add_argument("--quant-energy-min", type=float, default=2.0,
+                    help="minimum int4/fp sim_tokens_per_j ratio on "
+                         "rows differing only in `precision`")
     ap.add_argument("--update", action="store_true",
                     help="overwrite baselines from --current")
     args = ap.parse_args()
@@ -272,6 +353,9 @@ def main() -> int:
         fails += check_scaling(n, current, args.scaling_min)
         fails += check_tracing_overhead(n, current,
                                         args.trace_overhead_max)
+        fails += check_quant_quality(n, current, args.quant_match_min,
+                                     args.quant_mse_max)
+        fails += check_quant_energy(n, current, args.quant_energy_min)
         status = "FAIL" if fails else "ok"
         print(f"check_bench: {n}: {len(baseline)} baseline rows, "
               f"{len(fails)} regressions [{status}]")
