@@ -55,12 +55,13 @@ QUANT_GROUP = 32        # bench models are narrow; 128 wouldn't divide
 
 
 def _serve_config(precision, *, batch, max_seq, page_size, max_pending,
-                  policy, replicas, kv_dtype="auto") -> ServeConfig:
+                  policy, replicas, kv_dtype="auto",
+                  tp=1) -> ServeConfig:
     return ServeConfig(
         precision=precision or "fp", kv_dtype=kv_dtype,
         quant_group=QUANT_GROUP, max_batch=batch, max_seq=max_seq,
         page_size=page_size, prefill_chunk=16, max_pending=max_pending,
-        policy=policy, replicas=replicas)
+        policy=policy, replicas=replicas, tp=tp)
 
 
 def _kv_bytes_per_token(engine) -> float:
@@ -247,7 +248,7 @@ async def run_rate(model, params, *, rate: float, n_requests: int,
                    prompt_hi: int, replicas: int = 1,
                    policy: str = "least-loaded",
                    shared_prefix: bool = False, seed: int = 0,
-                   trace=None, precision=None):
+                   trace=None, precision=None, tp=None):
     """One (replicas, policy, rate) cell.  `trace` is tri-state: None
     leaves the tracer alone and omits the `tracing` identity field
     (plain sweeps stay comparable to their committed baselines);
@@ -256,11 +257,15 @@ async def run_rate(model, params, *, rate: float, n_requests: int,
     `precision` is tri-state the same way: None keeps the pre-quant
     row identity; "fp"/"int8"/"int4" labels the row and serves at that
     ServeConfig precision (`params` must already match — packed
-    QTensors for the quantized tiers).  Returns
+    QTensors for the quantized tiers).  `tp` likewise: None keeps the
+    pre-TP row identity; an int shards every engine that many ways
+    (`ServeConfig.tp`) and attaches a `greedy_digest` of the completed
+    token streams so check_bench's tp-identity gate can assert tp>1
+    cells byte-match the tp=1 cell from the SAME run.  Returns
     (row, chrome_trace_doc_or_None)."""
     cfg = _serve_config(precision, batch=batch, max_seq=max_seq,
                         page_size=page_size, max_pending=max_pending,
-                        policy=policy, replicas=replicas)
+                        policy=policy, replicas=replicas, tp=tp or 1)
     quantized = precision in ("int8", "int4")
     # trace-time counters: every engine jits its own step graphs, so a
     # full-weight float materialization ANYWHERE in this cell's traced
@@ -354,6 +359,7 @@ async def run_rate(model, params, *, rate: float, n_requests: int,
         "replicas": replicas, "policy": policy,
         **({"precision": precision} if precision is not None else {}),
         **({"tracing": bool(trace)} if trace is not None else {}),
+        **({"tp": int(tp)} if tp is not None else {}),
         "n_requests": len(results), "n": n, "batch": batch,
         "completed": len(ok),
         "rejected_429": sum(r["status"] == 429 for r in results),
@@ -383,6 +389,18 @@ async def run_rate(model, params, *, rate: float, n_requests: int,
         row["kv_bytes_per_token"] = kv_bytes_per_token
         row["weight_full_dequants"] = float(dq["full_dequant"])
         row["weight_fused_dequants"] = float(dq["fused_dequant"])
+    if tp is not None:
+        # every cell serves greedily (temperature 0.0) and the arrival
+        # schedule/prompts are seed-deterministic, so the completed
+        # streams are comparable across tp cells of the same sweep:
+        # request index i saw the same prompt in both.  The digest is
+        # what check_bench's tp-identity rule byte-compares.
+        import hashlib
+        streams = [[i, r["out_tokens"]] for i, r in enumerate(results)
+                   if r["status"] == 200]
+        row["greedy_digest"] = hashlib.sha256(
+            json.dumps(streams).encode()).hexdigest()[:16]
+        row["sim_tp"] = float(eng_agg.get("sim_tp", 1.0))
     return row, trace_doc
 
 
@@ -421,6 +439,14 @@ def main():
                          "quantized-KV capacity ratio, and asserts the "
                          "quantized cells traced no full-weight "
                          "dequantization")
+    ap.add_argument("--tp", type=int, nargs="+", default=None,
+                    help="tensor-parallel widths to sweep "
+                         "(ServeConfig.tp); labels rows with a `tp` "
+                         "identity field plus a greedy stream digest so "
+                         "check_bench can assert tp>1 cells "
+                         "byte-identical to tp=1 within the run; on CPU "
+                         "force a host mesh with XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=N")
     ap.add_argument("--trace", action="store_true",
                     help="run every cell twice — tracing off then on — "
                          "label rows with a `tracing` field for "
@@ -437,6 +463,24 @@ def main():
     import jax
     from repro.quant import quantize_params
     model, params = build_model(args.scale)
+    tps = args.tp or [None]
+    if args.tp and max(args.tp) > 1:
+        # the smoke-scale bench model runs GQA down to ONE kv head,
+        # which no mesh can split — give the tp sweep an MHA variant of
+        # the same shape instead (both tp cells share it, and the sweep
+        # writes its own baseline file, so no other bench moves)
+        need = max(args.tp)
+        cfg = model.cfg
+        if cfg.n_kv_heads % need or cfg.n_heads % need or cfg.d_ff % need:
+            import jax.numpy as jnp
+            from repro.models import DecoderLM, init_params
+            cfg = cfg.replace(name=cfg.name + "-tp",
+                              n_kv_heads=cfg.n_heads)
+            model = DecoderLM(cfg)
+            params = init_params(model.param_specs(),
+                                 jax.random.PRNGKey(0),
+                                 dtype_override=jnp.float32)
+        model.validate_tp(need)     # non-dividing dims fail loudly here
     print(f"model: {model.n_params()/1e6:.1f}M params, "
           f"backend={jax.default_backend()}")
 
@@ -471,12 +515,13 @@ def main():
                   f", greedy match {q['quality_greedy_match_len']:.0f}"
                   f"/{q['quality_greedy_tokens']:.0f}")
 
-    print("precision,replicas,policy,rate_rps,tracing,completed,shed_429,"
-          "goodput_tok/s,ttft_p50_ms,ttft_p99_ms,itl_p50_ms,itl_p99_ms,"
-          "prefix_hit,sim_tok/J")
+    print("precision,tp,replicas,policy,rate_rps,tracing,completed,"
+          "shed_429,goodput_tok/s,ttft_p50_ms,ttft_p99_ms,itl_p50_ms,"
+          "itl_p99_ms,prefix_hit,sim_tok/J")
     rows, trace_doc = [], None
     trace_modes = [False, True] if args.trace else [None]
     for precision in precisions:
+      for tp in tps:
         for replicas in args.replicas:
             for policy in args.policies:
                 for rate in args.rates:
@@ -492,7 +537,7 @@ def main():
                             prompt_hi=args.prompt_hi,
                             replicas=replicas, policy=policy,
                             shared_prefix=args.shared_prefix,
-                            trace=tracing, precision=precision))
+                            trace=tracing, precision=precision, tp=tp))
                         if precision in quality_by_prec:
                             r.update(quality_by_prec[precision])
                             r["kv_lanes_ratio_vs_fp32"] = (
@@ -502,7 +547,7 @@ def main():
                             trace_doc = doc   # keep the last traced cell
                         hit = r["prefix_hit_rate"]
                         print(
-                            f"{precision or '-'},"
+                            f"{precision or '-'},{tp or '-'},"
                             f"{replicas},{policy},{r['rate']:g},"
                             f"{'-' if tracing is None else int(tracing)},"
                             f"{r['completed']},{r['rejected_429']},"

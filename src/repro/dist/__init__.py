@@ -1,13 +1,15 @@
 """Distribution substrate: logical-axis mesh rules, sharding helpers, and
 inter-pod gradient compression."""
-from .axes import (MeshRules, MULTI_POD_RULES, SINGLE_POD_RULES,
-                   rules_for_mesh, sanitize_pspec)
+from .axes import (MeshRules, MULTI_POD_RULES, SERVE_RULES,
+                   SINGLE_POD_RULES, rules_for_mesh, sanitize_pspec)
 from .compress import compress_decompress_roundtrip, init_error_state
-from .shard import (constrain, qtree_shardings, tree_shardings,
-                    use_mesh_rules)
+from .shard import (constrain, qtree_shardings, replicated, serve_mesh,
+                    tree_shardings, use_mesh_rules)
 
 __all__ = [
-    "MeshRules", "MULTI_POD_RULES", "SINGLE_POD_RULES", "rules_for_mesh",
+    "MeshRules", "MULTI_POD_RULES", "SERVE_RULES", "SINGLE_POD_RULES",
+    "rules_for_mesh",
     "sanitize_pspec", "compress_decompress_roundtrip", "init_error_state",
-    "constrain", "qtree_shardings", "tree_shardings", "use_mesh_rules",
+    "constrain", "qtree_shardings", "replicated", "serve_mesh",
+    "tree_shardings", "use_mesh_rules",
 ]

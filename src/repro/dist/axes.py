@@ -51,6 +51,21 @@ MULTI_POD_RULES = MeshRules({
     "expert": "model", "kv_seq": "model", "seq": "data", "layers": None,
 })
 
+# Serving: one engine = one 1-D ("model",) mesh of `tp` devices.  Only
+# TP-marked dims shard — attention heads / KV-head groups (and their
+# INT8 scale pools), FFN width, the vocab dim of embed/head, and the
+# head-split dims of StateArena cells.  Everything page- or lane-wise
+# (batch lanes, the page axis, block tables, sequence positions) stays
+# replicated: block tables live host-side and must be per-shard
+# identical, so COW/fork/trim/prefix adoption patch every shard's pools
+# the same way.  fsdp/kv_seq/seq map to None (no data axis at serve
+# time); the contraction after the O / w_down projections becomes the
+# GSPMD all-reduce.
+SERVE_RULES = MeshRules({
+    "batch": None, "fsdp": None, "tp": "model", "expert": "model",
+    "kv_seq": None, "seq": None, "layers": None,
+})
+
 
 def rules_for_mesh(mesh) -> MeshRules:
     return MULTI_POD_RULES if "pod" in mesh.axis_names else SINGLE_POD_RULES

@@ -16,9 +16,34 @@ from typing import Any, Optional, Tuple
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from .axes import MeshRules, sanitize_pspec
+from .axes import MeshRules, _axis_size, sanitize_pspec
 
 _ctx = threading.local()
+
+
+def serve_mesh(tp: int) -> Mesh:
+    """1-D ("model",) mesh over the first `tp` local devices — the mesh
+    one TP-sharded serve engine runs on.  Replicas may share the same
+    devices (data parallelism is the fleet's job, not the mesh's).
+    Raises with the host-mesh escape hatch when the platform exposes
+    fewer devices than `tp`."""
+    import numpy as np
+    devs = jax.devices()
+    if tp < 1:
+        raise ValueError(f"tp must be >= 1, got {tp}")
+    if len(devs) < tp:
+        raise ValueError(
+            f"tp={tp} needs {tp} devices but the {devs[0].platform} "
+            f"backend exposes {len(devs)}; on CPU force a host mesh "
+            f"with XLA_FLAGS=--xla_force_host_platform_device_count"
+            f"={tp}")
+    return Mesh(np.asarray(devs[:tp]), ("model",))
+
+
+def replicated(mesh: Mesh) -> NamedSharding:
+    """Fully-replicated NamedSharding (host-fed tokens/tables/lengths
+    and the gathered logits)."""
+    return NamedSharding(mesh, P())
 
 
 def _current() -> Optional[Tuple[Mesh, MeshRules]]:
@@ -64,20 +89,35 @@ def qtree_shardings(spec_tree: Any, qtree: Any, mesh: Mesh,
                     rules: MeshRules) -> Any:
     """Shardings for a (possibly quantized) param tree.
 
-    `qtree` mirrors `spec_tree` except eligible weights are QTensor nodes
-    (packed data + scales); both QTensor fields shard by the dense
-    weight's logical axes, re-sanitized against their own (packed /
-    grouped) shapes.
-    """
+    `qtree` mirrors `spec_tree` except eligible weights are QTensor
+    nodes (packed data + scales).  Both QTensor fields shard by the
+    dense weight's logical axes, but a dim is sharded only when the
+    mesh axis divides it in EVERY materialization — orig_shape, the
+    packed data (int4 halves the quant axis), and the group-scale array
+    (quant-axis dim is K/group).  Sanitizing data and scales
+    independently against the dense axes could shard the data while
+    replicating (or raggedly splitting) its scales, silently
+    misaligning the per-group dequant — so one pspec is computed across
+    all three shapes and applied to both fields."""
     from repro.models.common import is_spec
     from repro.quant.qarray import QTensor
 
     def per_leaf(spec, q):
         if isinstance(q, QTensor):
+            entries = tuple(rules.pspec(spec.axes)) + (None,) * len(
+                q.orig_shape)
+            out = []
+            for i, entry in enumerate(entries[:len(q.orig_shape)]):
+                n = _axis_size(mesh, entry)
+                if entry is not None and any(
+                        shape[i] % n != 0 for shape in
+                        (q.orig_shape, q.data.shape, q.scales.shape)):
+                    entry = None
+                out.append(entry)
+            spec_p = P(*out)
             return QTensor(
-                data=_leaf_sharding(spec.axes, q.data.shape, mesh, rules),
-                scales=_leaf_sharding(spec.axes, q.scales.shape, mesh,
-                                      rules),
+                data=NamedSharding(mesh, spec_p),
+                scales=NamedSharding(mesh, spec_p),
                 bits=q.bits, group=q.group, axis=q.axis,
                 orig_shape=q.orig_shape)
         return _leaf_sharding(spec.axes, q.shape, mesh, rules)

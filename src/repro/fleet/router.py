@@ -123,25 +123,52 @@ class FleetRouter:
         if max_pending is None:
             max_pending = serve_cfg.max_pending
         self.serve_config = serve_cfg
-        cfg0 = engines[0].model.cfg
+        self.max_pending = max_pending
         for e in engines[1:]:
-            assert (e.model.cfg.name == cfg0.name
-                    and e.model.cfg.vocab == cfg0.vocab
-                    and e.max_seq == engines[0].max_seq), \
-                "fleet replicas must serve the same model"
+            self._check_same_model(e, engines[0])
         self.replicas = [Replica(e, i, max_pending)
                          for i, e in enumerate(engines)]
         self.policy: Policy = make_policy(policy)
         self.counters: Dict[str, int] = {"dispatched": 0, "requeued": 0,
-                                         "requeue_failed": 0, "drains": 0}
+                                         "requeue_failed": 0, "drains": 0,
+                                         "adds": 0}
         self._owner: Dict[int, Replica] = {}    # id(req) -> replica
         self.tracer = get_tracer()
+
+    @staticmethod
+    def _check_same_model(engine, ref) -> None:
+        assert (engine.model.cfg.name == ref.model.cfg.name
+                and engine.model.cfg.vocab == ref.model.cfg.vocab
+                and engine.max_seq == ref.max_seq), \
+            "fleet replicas must serve the same model"
 
     # -- lifecycle ------------------------------------------------------
     def start(self) -> "FleetRouter":
         for rep in self.replicas:
             rep.driver.start()
         return self
+
+    def add_replica(self, engine) -> Replica:
+        """Scale out at runtime — the inverse of `drain()`: wrap a
+        freshly built engine (same model, typically sharing the first
+        replica's params) in a `Replica`, start its driver thread, and
+        enter it into rotation.  The next `route()` call sees it: every
+        policy reads the live candidate list per dispatch, so rr cycles
+        through it, least-loaded finds its empty queues immediately,
+        and prefix-affinity starts matching once its tap publishes a
+        fingerprint.  Replica ids are list indices and drained replicas
+        keep their slot, so the new id is always `len(replicas)` —
+        `cancel`/`/metrics` lookups stay index-stable.  Returns the new
+        replica (already live; no request in flight is disturbed)."""
+        self._check_same_model(engine, self.replicas[0].engine)
+        rep = Replica(engine, len(self.replicas), self.max_pending)
+        rep.driver.start()
+        self.replicas.append(rep)
+        self.counters["adds"] += 1
+        if self.tracer.enabled:
+            self.tracer.instant("replica_add", cat="router", replica=rep.id,
+                                n_replicas=len(self.replicas))
+        return rep
 
     def stop(self, timeout: float = 10.0) -> None:
         for rep in self.replicas:

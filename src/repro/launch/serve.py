@@ -92,6 +92,12 @@ def main():
     ap.add_argument("--replicas", type=int, default=1,
                     help="data-parallel engine replicas behind the "
                          "gateway (same model; --gateway mode only)")
+    ap.add_argument("--tp", type=int, default=1,
+                    help="tensor-parallel devices per engine (shards "
+                         "heads/FFN/vocab over a ('model',) mesh; "
+                         "composes with --replicas as replicas x tp; "
+                         "on CPU force a host mesh with XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=N)")
     ap.add_argument("--policy", default="least-loaded",
                     choices=["rr", "least-loaded", "prefix"],
                     help="fleet dispatch policy: rr cycles replicas, "
@@ -177,13 +183,17 @@ def main():
         raise SystemExit("--replicas > 1 requires --gateway (the offline "
                          "sweep runs one engine)")
 
+    if args.tp < 1:
+        raise SystemExit(f"--tp {args.tp}: need at least 1")
+
     serve_cfg = ServeConfig(
         precision=precision, kv_dtype=args.kv_dtype,
         quant_group=16 if args.smoke else 128,
         max_batch=args.batch, max_seq=args.max_seq,
         page_size=args.page_size, n_pages=args.pages or None,
         prefix_cache=prefix_cache, replicas=args.replicas,
-        policy=args.policy, max_pending=args.max_pending)
+        policy=args.policy, max_pending=args.max_pending,
+        tp=args.tp)
 
     def build_engine():
         # the engine quantizes float params itself when the config says
@@ -253,7 +263,8 @@ def main():
           f"tpot p50 {m['tpot_p50_s']*1e3:.1f} ms, "
           f"kv occupancy peak {m['kv_occupancy_peak']*100:.0f}%"
           f"{spec_msg}{prefix_msg}{state_msg} "
-          f"({jax.default_backend()} backend)")
+          f"({jax.default_backend()} backend"
+          f"{f', tp={args.tp}' if args.tp > 1 else ''})")
 
 
 if __name__ == "__main__":

@@ -394,6 +394,33 @@ class DecoderLM:
             return cfg.n_layers // cfg.zamba.shared_every
         return 0
 
+    def validate_tp(self, tp: int) -> None:
+        """Raise unless every tensor-parallel hot-path dim divides
+        evenly across `tp` shards.  `sanitize_pspec` would silently
+        replicate a non-dividing dim instead of sharding it — correct,
+        but it defeats the point of paying for tp devices, so a
+        misconfigured ServeConfig(tp=...) fails loudly here with the
+        offending dims named."""
+        if tp <= 1:
+            return
+        cfg = self.cfg
+        bad = []
+        if cfg.n_heads % tp:
+            bad.append(f"n_heads={cfg.n_heads}")
+        if cfg.attn_kind != "mla" and cfg.n_kv_heads % tp:
+            # MLA keeps one replicated latent pool; there is no sharded
+            # KV-head group dim to divide
+            bad.append(f"n_kv_heads={cfg.n_kv_heads}")
+        if cfg.d_ff % tp:
+            bad.append(f"d_ff={cfg.d_ff}")
+        if cfg.family == "moe" and cfg.moe and cfg.moe.d_ff_expert % tp:
+            bad.append(f"moe.d_ff_expert={cfg.moe.d_ff_expert}")
+        if bad:
+            raise ValueError(
+                f"tp={tp} does not divide the tensor-parallel dims of "
+                f"{cfg.name!r}: " + ", ".join(bad)
+                + " (pick a tp that divides the head and FFN widths)")
+
     def paged_step(self, params: Params, cache: Any,
                    inputs: Dict[str, jax.Array], tables: jax.Array,
                    lengths: jax.Array, n_new: jax.Array):

@@ -105,10 +105,17 @@ class EnergyMeter:
     """
 
     def __init__(self, model_cfg: Any, *, hw: Optional[HWConfig] = None,
-                 w_bits: int = 4, a_bits: int = 8):
+                 w_bits: int = 4, a_bits: int = 8, tp: int = 1):
+        """`tp` models tensor parallelism: the engine's weight/KV
+        stream is split across `tp` accelerators.  Total bytes moved
+        (hence total joules) stay what one accelerator would pay, but
+        each device streams 1/tp of them concurrently, so simulated
+        wall time divides by tp — the aggregate-bandwidth claim TP
+        exists to cash in.  tp == 1 reporting is unchanged."""
         self.hw = hw or HWConfig()
         self.w_bits = w_bits
         self.a_bits = a_bits
+        self.tp = max(int(tp), 1)
         self.spec = slm_spec_from_model_config(model_cfg)
         sim = EdgeCIMSimulator()
         lo = sim.decode_token(self.spec, self.hw, _SEQ_LO,
@@ -170,19 +177,34 @@ class EnergyMeter:
     def summary(self) -> Dict[str, float]:
         """Keys merged into the engine summary / `/metrics` payload.
         `sim_*` prefix flags every value as cost-model output, not a
-        wall-clock measurement."""
-        return {
+        wall-clock measurement.
+
+        At tp > 1 the aggregate keys stay engine-level (energy sums
+        across shards; wall time divides by the tp-way bandwidth) and
+        per-device keys carry each shard's slice, so a fleet rollup of
+        TP engines still sums joules correctly (`sim_energy_j` is in
+        `fleet.router._SUM_KEYS`; the per-device keys average)."""
+        wall_s = self.sim_s / self.tp
+        out = {
             "sim_energy_j": self.total_j,
             "sim_decode_energy_j": self.decode_j,
             "sim_prefill_energy_j": self.prefill_j,
-            "sim_time_s": self.sim_s,
+            "sim_time_s": wall_s,
             "sim_decode_tokens": float(self.decode_tokens),
             "sim_tokens_per_j": self.tokens_per_j(),
-            "sim_tokens_per_s": (self.decode_tokens / self.sim_s
-                                 if self.sim_s > 0 else 0.0),
+            "sim_tokens_per_s": (self.decode_tokens / wall_s
+                                 if wall_s > 0 else 0.0),
             # the precision the cost model was fitted at (engine sets
             # these from ServeConfig: int4 = the paper's operating
             # point, 16/16 = the fp baseline)
             "sim_w_bits": float(self.w_bits),
             "sim_a_bits": float(self.a_bits),
         }
+        if self.tp > 1:
+            out.update({
+                "sim_tp": float(self.tp),
+                "sim_energy_j_per_device": self.total_j / self.tp,
+                "sim_decode_energy_j_per_device": self.decode_j / self.tp,
+                "sim_time_s_per_device": wall_s,
+            })
+        return out

@@ -57,6 +57,12 @@ class ServeConfig:
     policy: str = "least-loaded"
     max_pending: int = 32
 
+    # tensor parallelism: devices per engine (the ("model",) mesh width;
+    # composes with `replicas` as replicas x tp).  tp must divide the
+    # model's head/KV-group/FFN dims — the engine validates against the
+    # actual architecture at build time.
+    tp: int = 1
+
     def __post_init__(self):
         if self.precision not in PRECISIONS:
             raise ValueError(
@@ -66,6 +72,8 @@ class ServeConfig:
             raise ValueError(
                 f"kv_dtype must be one of {KV_DTYPES}, got "
                 f"{self.kv_dtype!r}")
+        if self.tp < 1:
+            raise ValueError(f"tp must be >= 1, got {self.tp}")
 
     # -- resolution ------------------------------------------------------
     def quantized(self) -> bool:

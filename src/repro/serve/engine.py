@@ -162,6 +162,14 @@ class PagedServeEngine:
         prefill_chunk, eos_id = config.prefill_chunk, config.eos_id
         seed, prefix_cache = config.seed, config.prefix_cache
         kv_dtype = config.resolved_kv_dtype()
+        # tensor parallelism: a ("model",) mesh of tp devices.  Raises
+        # here — not at first step — when tp does not divide the
+        # model's head/FFN dims or the backend lacks the devices.
+        self.mesh = None
+        if config.tp > 1:
+            from repro.dist import serve_mesh
+            model.validate_tp(config.tp)
+            self.mesh = serve_mesh(config.tp)
         if config.quantized() and not any(
                 isinstance(l, QTensor) for l in jax.tree_util.tree_leaves(
                     params, is_leaf=lambda x: isinstance(x, QTensor))):
@@ -205,6 +213,9 @@ class PagedServeEngine:
             StateArena(model, max_batch, specs=state_specs["arena"])
             if model.has_recurrent_state() else None)
         self._paged_keys = tuple(self.cache.pools)
+        self._state_shardings = None
+        if self.mesh is not None:
+            self._shard_runtime_state(state_specs)
         # prefix sharing: committed prompt pages live in a radix trie and
         # are adopted by later requests with the same prefix (see
         # prefix.py); allocation pressure evicts trie-only pages LRU
@@ -226,12 +237,12 @@ class PagedServeEngine:
         # passes), fp pays 16-bit storage and pass counts
         self.energy = EnergyMeter(
             model.cfg, w_bits=config.weight_bits(),
-            a_bits=8 if config.quantized() else 16)
+            a_bits=8 if config.quantized() else 16, tp=config.tp)
         self._last_t0 = 0.0
         self._cow_seen = 0          # deltas -> cow_copy / prefix_evict
         self._evict_seen = 0        # trace instants per step
         self.lanes: List[Optional[ServeRequest]] = [None] * max_batch
-        self._step_fn = jax.jit(model.serve_step, donate_argnums=(1,))
+        self._step_fn = self._jit_step(model.serve_step)
         self._key = jax.random.PRNGKey(seed)
         self._next_eid = 0
         if spec is not None:            # SpecConfig -> speculative decode
@@ -239,8 +250,65 @@ class PagedServeEngine:
             self.spec: Optional[SpecDecoder] = SpecDecoder(
                 model, spec, max_batch=max_batch, max_seq=max_seq,
                 kv_dtype=kv_dtype)
+            if self.mesh is not None:
+                # the verify window runs the very same sharded layout
+                # as decode (the draft model stays single-device: it is
+                # deliberately small enough not to need the mesh)
+                self.spec.verify_fn = self._jit_step(
+                    model.paged_verify_step)
         else:
             self.spec = None
+
+    # -- tensor parallelism --------------------------------------------
+    def _shard_runtime_state(self, state_specs) -> None:
+        """Commit weights, KV pools, and arena slots to the serve mesh.
+
+        Weights shard by their declared TP axes (QTensor leaves keep
+        data and scales on one consistent pspec — see
+        dist.qtree_shardings); pool leaves shard on the KV-head group
+        dim (and the matching INT8 scale-pool dim), page axis
+        replicated so the host-side block tables stay per-shard
+        identical; arena leaves shard their cell head dims with the
+        lane axis replicated.  Everything host-fed (tokens, tables,
+        lengths) enters uncommitted and is replicated by GSPMD."""
+        from repro.dist import (SERVE_RULES, qtree_shardings, replicated,
+                                tree_shardings)
+        mesh = self.mesh
+        self._replicated = replicated(mesh)
+        self.params = jax.device_put(
+            self.params, qtree_shardings(self.model.param_specs(),
+                                         self.params, mesh, SERVE_RULES))
+        pool_sh = tree_shardings(state_specs["paged"], mesh, SERVE_RULES)
+        self.cache.pools = jax.device_put(self.cache.pools, pool_sh)
+        self._state_shardings = dict(pool_sh)
+        if self.arena is not None:
+            arena_sh = tree_shardings(state_specs["arena"], mesh,
+                                      SERVE_RULES)
+            self.arena.state = jax.device_put(self.arena.state, arena_sh)
+            self._state_shardings.update(arena_sh)
+
+    def _jit_step(self, fn):
+        """Jit a (params, state, inputs, tables, lengths, n_new) step.
+
+        tp == 1: plain jit, byte-for-byte the pre-TP path.  tp > 1: the
+        step traces inside `use_mesh_rules`, so the model's
+        `constrain(..)` hints become real sharding constraints, and
+        out_shardings pin logits replicated (host sampling reads one
+        gathered copy) and the returned state back onto its canonical
+        pool/arena shardings — donation then reuses the input buffers
+        shard-for-shard and the layout can never drift step to step."""
+        if self.mesh is None:
+            return jax.jit(fn, donate_argnums=(1,))
+        from repro.dist import SERVE_RULES, use_mesh_rules
+        mesh = self.mesh
+
+        def traced(params, state, inputs, tables, lengths, n_new):
+            with use_mesh_rules(mesh, SERVE_RULES):
+                return fn(params, state, inputs, tables, lengths, n_new)
+
+        return jax.jit(traced, donate_argnums=(1,),
+                       out_shardings=(self._replicated,
+                                      dict(self._state_shardings)))
 
     # ------------------------------------------------------------------
     def _event(self, kind: str, **fields: Any) -> None:
@@ -325,6 +393,12 @@ class PagedServeEngine:
         logits, state = fn(
             self.params, state, {"tokens": jnp.asarray(tokens)},
             jnp.asarray(tables), jnp.asarray(lengths), jnp.asarray(n_new))
+        if self.mesh is not None:
+            # one gathered host copy: every downstream consumer
+            # (sampling, logprobs, verify walks) runs on identical
+            # bytes regardless of tp — the byte-identity invariant
+            # lives here
+            logits = jax.device_get(logits)
         dt = time.monotonic() - t0
         self._last_t0 = t0      # span start for tracer.complete()
         if self.arena is not None:

@@ -4,6 +4,15 @@ import sys
 # repo-local imports without install
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
+# force a 2-device host mesh BEFORE jax initializes so tensor-parallel
+# tests (test_tp_serving) can build a real ("model",) mesh on the CPU
+# backend; single-device tests are unaffected — default computations
+# still land on device 0.  Respect an explicit caller override.
+_flags = os.environ.get("XLA_FLAGS", "")
+if "xla_force_host_platform_device_count" not in _flags:
+    os.environ["XLA_FLAGS"] = \
+        (_flags + " --xla_force_host_platform_device_count=2").strip()
+
 import jax  # noqa: E402
 import pytest  # noqa: E402
 

@@ -26,6 +26,52 @@ def test_sanitize_drops_nondividing_axes():
     assert out2 == P(("data", "model"), None)
 
 
+def test_qtree_shardings_one_pspec_across_packed_leaves():
+    """A QTensor's data and scales must carry the SAME pspec, computed
+    against every materialization of the weight: int4 packing halves
+    the quant axis and grouping shrinks it to K/group, so sanitizing
+    each leaf independently against the dense axes can shard the data
+    while replicating (or raggedly splitting) its scales — silently
+    misaligning the per-group dequant."""
+    from repro.dist import SERVE_RULES, qtree_shardings
+    from repro.models.common import ParamSpec
+    from repro.quant.qarray import quantize
+
+    mesh = jax.make_mesh((2,), ("model",))
+    rng = np.random.default_rng(0)
+    w = jnp.asarray(rng.normal(size=(32, 48)), jnp.float32)
+
+    # quant axis sharded, fine-grained groups: 32/2 dense rows, 16/2
+    # packed rows, 2/2 scale groups — every materialization divides,
+    # so dim 0 shards and BOTH fields carry the same spec
+    spec = {"w": ParamSpec(shape=(32, 48), axes=("tp", None))}
+    q_ok = {"w": quantize(w, bits=4, group=16, axis=0)}
+    sh = qtree_shardings(spec, q_ok, mesh, SERVE_RULES)
+    assert sh["w"].data.spec == P("model", None)
+    assert sh["w"].scales.spec == sh["w"].data.spec
+
+    # group == K: ONE scale group on the quant axis; the dense dim (32)
+    # and the packed dim (16) divide but the scales dim (1) does not —
+    # the whole dim must fall back to replicated on BOTH fields, never
+    # shard the data away from its scales
+    q_coarse = {"w": quantize(w, bits=4, group=32, axis=0)}
+    sh = qtree_shardings(spec, q_coarse, mesh, SERVE_RULES)
+    assert sh["w"].data.spec == P(None, None)
+    assert sh["w"].scales.spec == sh["w"].data.spec
+
+    # sharding the non-quantized output axis is orthogonal: dim 1 is 48
+    # in all three shapes, so it shards on both fields
+    spec_n = {"w": ParamSpec(shape=(32, 48), axes=(None, "tp"))}
+    sh = qtree_shardings(spec_n, q_ok, mesh, SERVE_RULES)
+    assert sh["w"].data.spec == P(None, "model")
+    assert sh["w"].scales.spec == sh["w"].data.spec
+
+    # dense leaves keep the plain tree_shardings path
+    spec_d = {"w": ParamSpec(shape=(32, 48), axes=("tp", None))}
+    sh = qtree_shardings(spec_d, {"w": w}, mesh, SERVE_RULES)
+    assert sh["w"].spec == P("model", None)
+
+
 def test_error_feedback_recovers_mean():
     """Quantize-with-error-feedback: accumulated updates converge to the
     true sum (the compression bias washes out)."""

@@ -287,6 +287,103 @@ def test_fleet_drain_requeues_without_loss_or_leaks(model_params):
 
 
 # ----------------------------------------------------------------------------
+# add_replica: scale OUT under load with zero loss (inverse of drain)
+# ----------------------------------------------------------------------------
+def test_fleet_add_replica_under_load_zero_loss(model_params):
+    model, params = model_params
+    prompts = [np.array([1, 2, 3], np.int32),
+               np.array([5, 6, 7, 8], np.int32),
+               np.array([9, 10, 11], np.int32),
+               np.array([13, 14], np.int32)]
+
+    offline = _engine(model, params)
+    ref_reqs = [ServeRequest(prompt=p.copy(), max_new_tokens=8, rid=i)
+                for i, p in enumerate(prompts)]
+    offline.run(ref_reqs)
+    ref = [r.out_tokens for r in ref_reqs]
+
+    async def run():
+        # one single-lane replica, saturated: first group runs, second
+        # pins its scheduler queue — the fleet is under load when the
+        # new replica joins
+        router = FleetRouter([_engine(model, params, max_batch=1)],
+                             policy="least-loaded", max_pending=8).start()
+        rep0 = router.replicas[0]
+        done, done_evt = [], threading.Event()
+
+        def on_done(req):           # driver thread
+            done.append(req)
+            router.release(req)
+            if len(done) == len(prompts):
+                done_evt.set()
+
+        try:
+            reqs = [ServeRequest(prompt=p.copy(), max_new_tokens=8,
+                                 rid=i) for i, p in enumerate(prompts)]
+            for r in reqs[:2]:
+                await asyncio.wrap_future(
+                    router.dispatch(rep0, [r], on_done))
+            for _ in range(200):    # one admitted, one queued
+                state = await asyncio.wrap_future(rep0.driver.call(
+                    lambda e: (e.n_running, e.scheduler.n_queued)))
+                if state == (1, 1):
+                    break
+                await asyncio.sleep(0.01)
+            assert state == (1, 1)
+
+            # replicas share params read-only: the new engine costs a KV
+            # pool + a driver thread, not a second copy of the weights
+            rep1 = router.add_replica(_engine(model, params, max_batch=1))
+            assert rep1.id == 1 and rep1.live and rep1.driver.alive
+            assert router.route(prompts[2], 1) is rep1, \
+                "least-loaded must route fresh work to the empty newcomer"
+            for r in reqs[2:]:
+                rep = router.route(r.prompt, 1)
+                await asyncio.wrap_future(
+                    router.dispatch(rep, [r], on_done))
+            await asyncio.get_running_loop().run_in_executor(
+                None, done_evt.wait, 30)
+            audit = []
+            for rep in router.replicas:
+                audit.append(await asyncio.wrap_future(rep.driver.call(
+                    lambda e: (e.cache.n_free_or_cached(),
+                               e.cache.allocator.n_pages,
+                               e.n_running, e.scheduler.n_queued))))
+        finally:
+            router.stop()
+        return reqs, done, audit, dict(router.counters), \
+            [rep.dispatches for rep in router.replicas], \
+            [rep.pending for rep in router.replicas]
+
+    reqs, done, audit, counters, dispatches, pending = asyncio.run(run())
+    assert counters["adds"] == 1
+    assert len(done) == len(prompts), "every request finishes exactly once"
+    assert len({id(r) for r in done}) == len(prompts), \
+        "no duplicated completion"
+    assert dispatches[1] >= 1, "the added replica must absorb load"
+    for r, want in zip(reqs, ref):
+        assert not r.cancelled and not r.rejected and not r.truncated
+        assert r.out_tokens == want, \
+            "a request served through the grown fleet must decode " \
+            "exactly as offline"
+    for free_or_cached, n_pages, running, queued in audit:
+        assert (running, queued) == (0, 0)
+        assert free_or_cached == n_pages, "scale-out leaked KV pages"
+    assert pending == [0, 0], "admission ledger must return to zero"
+    # guard rail: a replica serving a DIFFERENT model is refused
+    cfg2 = ModelConfig(name="other", family="dense", n_layers=1,
+                       d_model=32, n_heads=2, n_kv_heads=2, d_ff=64,
+                       vocab=64, head_dim=16, dtype="float32",
+                       remat=False)
+    other = DecoderLM(cfg2)
+    oparams = init_params(other.param_specs(), jax.random.PRNGKey(2),
+                          dtype_override=jnp.float32)
+    router2 = FleetRouter([_engine(model, params)])
+    with pytest.raises(AssertionError, match="same model"):
+        router2.add_replica(_engine(other, oparams))
+
+
+# ----------------------------------------------------------------------------
 # replica death: evicted from rotation, partial-fleet metrics/healthz
 # ----------------------------------------------------------------------------
 def test_fleet_dead_replica_evicted_and_partial_metrics(model_params):

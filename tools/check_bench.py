@@ -35,7 +35,7 @@ from typing import Dict, List, Tuple
 # identity fields: define WHICH row we compare, never gated themselves
 IDENTITY = ("mode", "family", "mix", "workload", "drafter", "k", "batch",
             "n_requests", "prefix_len", "rate", "n", "replicas", "policy",
-            "tracing", "precision")
+            "tracing", "precision", "tp")
 
 # (substring, direction, class); first match wins.  direction "higher"
 # means bigger is better.  Metrics matching nothing are informational.
@@ -261,6 +261,57 @@ def check_quant_energy(name: str, current: List[Dict],
     return failures
 
 
+def check_tp_identity(name: str, current: List[Dict],
+                      goodput_min: float) -> List[str]:
+    """Tensor-parallel identity gate, judged WITHIN the current run:
+    rows differing only in `tp` (api_bench --tp sweep) must serve
+    byte-identical greedy streams — `greedy_digest` hashes every
+    completed request's token list against its request index, and the
+    arrival schedule is seed-deterministic, so tp=1 and tp=2 cells of
+    the same sweep hash the same traffic.  Goodput must also stay
+    within `goodput_min` x the tp=1 row: on the forced host-CPU mesh
+    the collectives serialize, so the gate is identity + no collapse,
+    not acceleration.  Skipped when either cell shed 429s (the shed
+    sets are timing-dependent, so the digests stop being comparable —
+    but a shed in the smoke cell already fails the `completed` gate)."""
+    failures: List[str] = []
+    groups: Dict[Tuple, Dict[int, Dict]] = {}
+    for r in current:
+        if "tp" not in r:
+            continue
+        key = tuple((k, r[k]) for k in IDENTITY if k in r and k != "tp")
+        groups.setdefault(key, {})[int(r["tp"])] = r
+    for key, by_tp in groups.items():
+        base = by_tp.get(1)
+        if base is None:
+            continue
+        label = name + "[" + ",".join(f"{k}={v}" for k, v in key) + "]"
+        for ntp in sorted(by_tp):
+            if ntp == 1:
+                continue
+            row = by_tp[ntp]
+            if row.get("rejected_429") or base.get("rejected_429"):
+                continue
+            bd, cd = base.get("greedy_digest"), row.get("greedy_digest")
+            if bd is None or cd is None:
+                failures.append(
+                    f"{label}: tp sweep rows carry no greedy_digest")
+                continue
+            if bd != cd:
+                failures.append(
+                    f"{label}: tp={ntp} greedy streams diverged from "
+                    f"tp=1 (digest {cd} != {bd}) — tensor parallelism "
+                    "changed served bytes")
+            bg = float(base.get("goodput_tokens_per_s", 0.0))
+            if bg and not math.isnan(bg):
+                ratio = float(row["goodput_tokens_per_s"]) / bg
+                if ratio < goodput_min - 1e-9:
+                    failures.append(
+                        f"{label}: tp={ntp} goodput only {ratio:.2f}x "
+                        f"the tp=1 run (need >= {goodput_min:g}x)")
+    return failures
+
+
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--baseline",
@@ -301,6 +352,13 @@ def main() -> int:
     ap.add_argument("--quant-energy-min", type=float, default=2.0,
                     help="minimum int4/fp sim_tokens_per_j ratio on "
                          "rows differing only in `precision`")
+    ap.add_argument("--tp-goodput-min", type=float, default=0.3,
+                    help="minimum tp>1/tp=1 goodput ratio on rows "
+                         "differing only in `tp` (judged within the "
+                         "current run; byte-identity of the greedy "
+                         "streams is always required — on a host-CPU "
+                         "forced mesh no speedup is expected, only no "
+                         "collapse)")
     ap.add_argument("--update", action="store_true",
                     help="overwrite baselines from --current")
     args = ap.parse_args()
@@ -356,6 +414,7 @@ def main() -> int:
         fails += check_quant_quality(n, current, args.quant_match_min,
                                      args.quant_mse_max)
         fails += check_quant_energy(n, current, args.quant_energy_min)
+        fails += check_tp_identity(n, current, args.tp_goodput_min)
         status = "FAIL" if fails else "ok"
         print(f"check_bench: {n}: {len(baseline)} baseline rows, "
               f"{len(fails)} regressions [{status}]")
