@@ -248,7 +248,7 @@ async def run_rate(model, params, *, rate: float, n_requests: int,
                    prompt_hi: int, replicas: int = 1,
                    policy: str = "least-loaded",
                    shared_prefix: bool = False, seed: int = 0,
-                   trace=None, precision=None, tp=None):
+                   trace=None, precision=None, tp=None, slo=None):
     """One (replicas, policy, rate) cell.  `trace` is tri-state: None
     leaves the tracer alone and omits the `tracing` identity field
     (plain sweeps stay comparable to their committed baselines);
@@ -261,8 +261,13 @@ async def run_rate(model, params, *, rate: float, n_requests: int,
     pre-TP row identity; an int shards every engine that many ways
     (`ServeConfig.tp`) and attaches a `greedy_digest` of the completed
     token streams so check_bench's tp-identity gate can assert tp>1
-    cells byte-match the tp=1 cell from the SAME run.  Returns
-    (row, chrome_trace_doc_or_None)."""
+    cells byte-match the tp=1 cell from the SAME run.  `slo` tri-state
+    too: True serves the cell under the default SLO set with
+    bench-compressed burn-rate windows (timescale 1/600) and a fast
+    evaluation poll, labels the row `slo=true`, attaches alert/drift
+    columns from the REAL `/debug/slo` endpoint, and returns its
+    payload for the `<out>.slo.json` artifact (tools/slo_report.py).
+    Returns (row, chrome_trace_doc_or_None, slo_doc_or_None)."""
     cfg = _serve_config(precision, batch=batch, max_seq=max_seq,
                         page_size=page_size, max_pending=max_pending,
                         policy=policy, replicas=replicas, tp=tp or 1)
@@ -286,7 +291,16 @@ async def run_rate(model, params, *, rate: float, n_requests: int,
     # max_pending is PER REPLICA: the fleet's admission capacity scales
     # with the fleet, which is the scaling story being measured
     router = FleetRouter(engines, policy=policy, max_pending=max_pending)
-    gw = Gateway(router)
+    gw_kwargs = {}
+    if slo:
+        from repro.obs.slo import DEFAULT_SLOS, BurnRatePolicy
+        # timescale 1/600 maps the SRE 1h page window to 6 s; the fast
+        # poll gives the short windows enough evaluation ticks inside a
+        # few-second smoke cell
+        gw_kwargs = dict(slos=list(DEFAULT_SLOS),
+                         slo_policy=BurnRatePolicy(timescale=1 / 600),
+                         slo_poll_s=0.05)
+    gw = Gateway(router, **gw_kwargs)
     host, port = await gw.start()
     rng = np.random.default_rng(seed)
 
@@ -328,12 +342,18 @@ async def run_rate(model, params, *, rate: float, n_requests: int,
         results = await _fire_wave(host, port, bodies, rate, rng)
     wall = time.monotonic() - t0
     metrics = await gw._metrics()
-    trace_doc = None
+    trace_doc = slo_doc = None
     if trace:
         status, trace_doc = await _http_get_json(host, port,
                                                  "/debug/trace")
         assert status == 200, f"/debug/trace returned {status}"
         _check_trace_correlation(trace_doc)
+    if slo:
+        # let a couple more evaluation ticks land after the wave so the
+        # drift auditor sees the final decode clock deltas
+        await asyncio.sleep(0.2)
+        status, slo_doc = await _http_get_json(host, port, "/debug/slo")
+        assert status == 200, f"/debug/slo returned {status}"
     await gw.stop()
     if tracer is not None:
         tracer.disable()
@@ -360,6 +380,7 @@ async def run_rate(model, params, *, rate: float, n_requests: int,
         **({"precision": precision} if precision is not None else {}),
         **({"tracing": bool(trace)} if trace is not None else {}),
         **({"tp": int(tp)} if tp is not None else {}),
+        **({"slo": bool(slo)} if slo is not None else {}),
         "n_requests": len(results), "n": n, "batch": batch,
         "completed": len(ok),
         "rejected_429": sum(r["status"] == 429 for r in results),
@@ -389,6 +410,32 @@ async def run_rate(model, params, *, rate: float, n_requests: int,
         row["kv_bytes_per_token"] = kv_bytes_per_token
         row["weight_full_dequants"] = float(dq["full_dequant"])
         row["weight_fused_dequants"] = float(dq["fused_dequant"])
+    if slo_doc is not None:
+        import math
+        trans = slo_doc.get("transitions") or []
+        drift = slo_doc.get("drift") or {}
+        # worst-case replica: the calibrated drift ratio farthest from
+        # 1.0 (JSON sanitize maps an uncalibrated NaN to None)
+        ratios = [d.get("sim_drift_ratio") for d in drift.values()]
+        ratios = [r for r in ratios
+                  if isinstance(r, (int, float)) and math.isfinite(r)
+                  and r > 0]
+        row.update({
+            "slo_worst": slo_doc.get("worst", "ok"),
+            "slo_page_alerts": float(sum(t.get("to") == "page"
+                                         for t in trans)),
+            "slo_warn_alerts": float(sum(t.get("to") == "warn"
+                                         for t in trans)),
+            "sim_drift_ratio": (max(ratios,
+                                    key=lambda r: abs(math.log(r)))
+                                if ratios else float("nan")),
+            "sim_drift_alarms": float(sum(
+                d.get("sim_drift_alarms") or 0.0
+                for d in drift.values())),
+            "sim_drift_ticks": float(sum(
+                d.get("sim_drift_ticks") or 0.0
+                for d in drift.values())),
+        })
     if tp is not None:
         # every cell serves greedily (temperature 0.0) and the arrival
         # schedule/prompts are seed-deterministic, so the completed
@@ -401,7 +448,7 @@ async def run_rate(model, params, *, rate: float, n_requests: int,
         row["greedy_digest"] = hashlib.sha256(
             json.dumps(streams).encode()).hexdigest()[:16]
         row["sim_tp"] = float(eng_agg.get("sim_tp", 1.0))
-    return row, trace_doc
+    return row, trace_doc, slo_doc
 
 
 def main():
@@ -447,6 +494,14 @@ def main():
                          "byte-identical to tp=1 within the run; on CPU "
                          "force a host mesh with XLA_FLAGS="
                          "--xla_force_host_platform_device_count=N")
+    ap.add_argument("--slo", action="store_true",
+                    help="serve every cell under the default SLO set "
+                         "with bench-compressed burn-rate windows; "
+                         "labels rows with a `slo` identity field plus "
+                         "alert/drift columns (gated by check_bench's "
+                         "check_slo) and saves the final /debug/slo "
+                         "payload as <out>.slo.json for "
+                         "tools/slo_report.py")
     ap.add_argument("--trace", action="store_true",
                     help="run every cell twice — tracing off then on — "
                          "label rows with a `tracing` field for "
@@ -518,7 +573,7 @@ def main():
     print("precision,tp,replicas,policy,rate_rps,tracing,completed,"
           "shed_429,goodput_tok/s,ttft_p50_ms,ttft_p99_ms,itl_p50_ms,"
           "itl_p99_ms,prefix_hit,sim_tok/J")
-    rows, trace_doc = [], None
+    rows, trace_doc, slo_doc = [], None, None
     trace_modes = [False, True] if args.trace else [None]
     for precision in precisions:
       for tp in tps:
@@ -526,7 +581,7 @@ def main():
             for policy in args.policies:
                 for rate in args.rates:
                     for tracing in trace_modes:
-                        r, doc = asyncio.run(run_rate(
+                        r, doc, sdoc = asyncio.run(run_rate(
                             model, params_by_prec[precision], rate=rate,
                             n_requests=args.requests,
                             tokens=args.tokens, n=args.n,
@@ -537,7 +592,8 @@ def main():
                             prompt_hi=args.prompt_hi,
                             replicas=replicas, policy=policy,
                             shared_prefix=args.shared_prefix,
-                            trace=tracing, precision=precision, tp=tp))
+                            trace=tracing, precision=precision, tp=tp,
+                            slo=True if args.slo else None))
                         if precision in quality_by_prec:
                             r.update(quality_by_prec[precision])
                             r["kv_lanes_ratio_vs_fp32"] = (
@@ -545,6 +601,8 @@ def main():
                         rows.append(r)
                         if doc is not None:
                             trace_doc = doc   # keep the last traced cell
+                        if sdoc is not None:
+                            slo_doc = sdoc    # keep the last SLO cell
                         hit = r["prefix_hit_rate"]
                         print(
                             f"{precision or '-'},{tp or '-'},"
@@ -570,6 +628,15 @@ def main():
             json.dump(trace_doc, f)
         print(f"chrome trace ({len(trace_doc['traceEvents'])} events) "
               f"-> {path}")
+    if slo_doc is not None:
+        from common import RESULTS_DIR
+        path = os.path.join(RESULTS_DIR, args.out + ".slo.json")
+        os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+        with open(path, "w") as f:
+            json.dump(slo_doc, f, indent=1)
+        print(f"slo payload ({len(slo_doc.get('states', []))} alert "
+              f"states) -> {path}  (report: PYTHONPATH=src python "
+              f"tools/slo_report.py {path})")
 
 
 if __name__ == "__main__":

@@ -29,7 +29,16 @@ Endpoints:
                          histograms + per-replica breakdown + gateway
                          counters, strict JSON.
   GET  /healthz          liveness: 200 while >= 1 replica serves, 503
-                         only when the whole fleet is down.
+                         only when the whole fleet is down.  With SLOs
+                         configured, `degraded: true` while any alert
+                         state machine sits at `page` — orchestrators
+                         distinguish "up" from "meeting objectives"
+                         without killing a serving replica.
+  GET  /debug/slo        SLO objectives + burn-rate alert states +
+                         recent transitions + per-replica drift audit
+                         (obs/slo.py, obs/drift.py).  The gateway runs
+                         the evaluation loop (`FleetRouter.poll_slo`)
+                         as a background task while serving.
 
 Overload: admission is fleet-level load shedding — a request is 429'd
 (honest Retry-After from the least-loaded replica's measured decode
@@ -66,8 +75,11 @@ _SSE_HEADERS = (b"HTTP/1.1 200 OK\r\n"
 # bumped whenever the /metrics JSON payload changes shape, so
 # check_bench.py and external scrapers can detect format drift instead
 # of misreading renamed keys.  v2: added schema_version itself, the
-# sim_* energy metrics, and the fleet aggregation of both.
-METRICS_SCHEMA_VERSION = 2
+# sim_* energy metrics, and the fleet aggregation of both.  v3: fleet
+# percentiles recomputed from merged quantile sketches (empty metrics
+# now ABSENT instead of NaN), per-replica `drift` audit blocks, and the
+# optional top-level `slo` section.
+METRICS_SCHEMA_VERSION = 3
 
 
 def _finish_reason(req, eos_id: Optional[int]) -> str:
@@ -89,7 +101,12 @@ class Gateway:
     on any replica while the gateway is running."""
 
     def __init__(self, engine_or_router, *, max_pending: Optional[int] = None,
-                 max_n: int = 8, access_log=None):
+                 max_n: int = 8, access_log=None, slos=None,
+                 slo_policy=None, slo_poll_s: float = 0.25):
+        """`slos`: optional SLO spec strings / `SLOSpec`s (obs/slo.py)
+        installed on the router; the gateway then runs the burn-rate +
+        drift evaluation loop every `slo_poll_s` while serving.
+        `slo_policy` overrides the `BurnRatePolicy` (timescale!)."""
         assert (max_pending is None or max_pending >= 0) and max_n >= 1
         # deferred: repro.fleet pulls in repro.api.driver, whose package
         # __init__ imports this module — a top-level import would cycle
@@ -110,6 +127,10 @@ class Gateway:
             "bad_requests": 0, "disconnects": 0, "completed_samples": 0}
         self._server: Optional[asyncio.AbstractServer] = None
         self.tracer = get_tracer()
+        self.slo_poll_s = slo_poll_s
+        self._slo_task: Optional[asyncio.Task] = None
+        if slos:
+            self.router.set_slos(slos, policy=slo_policy)
         # structured access log: one JSON line per /v1/completions
         # request (path string or an open file-like); None = silent
         self._access_log = None
@@ -157,10 +178,30 @@ class Gateway:
         self.router.start()
         self._server = await asyncio.start_server(self._handle, host,
                                                   port)
+        # evaluation heartbeat: drift audit always, burn-rate alerting
+        # when SLOs are configured.  A poll reads only lock-free
+        # published snapshots, so this costs microseconds per tick.
+        self._slo_task = asyncio.get_running_loop().create_task(
+            self._slo_loop())
         sock = self._server.sockets[0].getsockname()
         return sock[0], sock[1]
 
+    async def _slo_loop(self) -> None:
+        while True:
+            await asyncio.sleep(self.slo_poll_s)
+            try:
+                self.router.poll_slo()
+            except Exception:
+                # observability must never take down serving; the next
+                # tick retries
+                pass
+
     async def stop(self) -> None:
+        if self._slo_task is not None:
+            self._slo_task.cancel()
+            with contextlib.suppress(asyncio.CancelledError):
+                await self._slo_task
+            self._slo_task = None
         if self._server is not None:
             self._server.close()
             await self._server.wait_closed()
@@ -227,6 +268,13 @@ class Gateway:
                 else:
                     writer.write(json_response(
                         200, "OK", chrome_trace(self.tracer)))
+            elif method == "GET" and route == "/debug/slo":
+                # objectives, burn rates, alert states, transitions,
+                # per-replica drift audit — always 200: with no SLOs
+                # configured the body says so (worst "ok", empty specs)
+                # rather than 404ing a legitimate health question
+                writer.write(json_response(
+                    200, "OK", self.router.slo_payload()))
             elif method == "GET" and path == "/healthz":
                 # fleet liveness: 200 while any replica serves (a probe
                 # must not kill a gateway that is degraded, not down);
@@ -236,7 +284,14 @@ class Gateway:
                 errors = {str(rep.id): repr(rep.error)
                           for rep in self.router.replicas
                           if rep.error is not None}
+                # degraded: serving, but some SLO state machine sits at
+                # `page` — still 200 (a liveness probe must not kill a
+                # slow-but-serving fleet); orchestrators that care read
+                # the flag or /debug/slo
+                worst = self.router.worst_alert_level()
                 body = {"ok": alive,
+                        "degraded": bool(alive and worst == "page"),
+                        "slo_worst": worst,
                         "n_live": self.router.n_live,
                         "n_replicas": len(self.router.replicas),
                         "error": errors or None}

@@ -28,6 +28,7 @@ from __future__ import annotations
 from typing import Dict, Optional
 
 from repro.api.driver import EngineDriver
+from repro.obs.drift import DriftAuditor
 
 
 class Replica:
@@ -48,6 +49,14 @@ class Replica:
         self.dispatches = 0         # request groups routed here
         self._fp_version = -1
         self.fingerprint: frozenset = frozenset()
+        self._digest_version = -1
+        # serialized quantile sketches (Telemetry.digests()), published
+        # by the tap like the snapshot: the router's SLO poll and fleet
+        # percentile merges read these lock-free
+        self.digests: Dict[str, Dict] = {}
+        # digital-twin audit: predicted vs measured decode clock,
+        # ticked by FleetRouter.poll_slo from the published snapshot
+        self.drift = DriftAuditor()
         self.snapshot: Dict[str, float] = {
             "n_running": 0.0, "n_queued": 0.0, "kv_occupancy": 0.0,
             "kv_pages_free": float(engine.cache.allocator.n_pages)}
@@ -81,11 +90,21 @@ class Replica:
         snap["n_queued"] = float(engine.scheduler.n_queued)
         snap["kv_pages_free"] = float(engine.cache.allocator.n_free)
         snap["kv_occupancy"] = engine.cache.occupancy()
+        energy = getattr(engine, "energy", None)
+        if energy is not None:
+            # the drift audit's predicted decode clock, tp-scaled like
+            # sim_time_s (a tp=2 engine streams each step in half the
+            # modeled single-device time)
+            snap["sim_decode_s"] = energy.decode_sim_s / energy.tp
         if engine.prefix is not None:
             version = engine.prefix.version
             if version != self._fp_version:
                 self._fp_version = version
                 _, self.fingerprint = engine.prefix.fingerprint()
+        dv = engine.telemetry.digest_version
+        if dv != self._digest_version:
+            self._digest_version = dv
+            self.digests = engine.telemetry.digests()
         self.snapshot = snap
 
     # -- load metric ----------------------------------------------------
@@ -107,4 +126,5 @@ class Replica:
                 "draining": self.draining, "pending": self.pending,
                 "dispatches": self.dispatches,
                 "error": repr(self.error) if self.error else None,
-                "snapshot": dict(self.snapshot)}
+                "snapshot": dict(self.snapshot),
+                "drift": self.drift.summary()}

@@ -31,10 +31,13 @@ Lifecycle:
 from __future__ import annotations
 
 import asyncio
+import time
 from typing import Callable, Dict, List, Optional, Sequence
 
 import numpy as np
 
+from repro.obs.digest import PERCENTILE_KEYS, merge_digest_dicts
+from repro.obs.slo import BurnRatePolicy, SLOMonitor
 from repro.obs.trace import get_tracer
 
 from .policy import Policy, PrefixAffinityPolicy, make_policy
@@ -42,9 +45,12 @@ from .replica import Replica
 
 
 # summary keys that SUM across replicas (counters and parallel rates);
-# *_peak keys take the max; everything else (percentiles, means) is
-# nan-averaged — approximate for a fleet, exact for one replica, and
-# the per-replica breakdown always carries the honest numbers
+# *_peak keys take the max; percentile keys are recomputed from merged
+# quantile sketches when the caller provides them (the only correct
+# fleet percentile — obs/digest.py) and dropped otherwise; everything
+# else (means) is nan-averaged — approximate for a fleet, exact for one
+# replica, and the per-replica breakdown always carries the honest
+# numbers
 _SUM_KEYS = frozenset({
     "requests", "requests_total", "tokens", "decode_tokens",
     "prefill_tokens", "steps", "decode_steps", "spec_drafted",
@@ -54,7 +60,7 @@ _SUM_KEYS = frozenset({
     "prefix_pages_evicted", "state_bytes", "tokens_per_s",
     "decode_tokens_per_s", "decode_s",
     "sim_energy_j", "sim_decode_energy_j", "sim_prefill_energy_j",
-    "sim_time_s", "sim_decode_tokens",
+    "sim_time_s", "sim_decode_time_s", "sim_decode_tokens",
 })
 
 
@@ -62,15 +68,27 @@ def _nanagg(vals: np.ndarray, fn) -> float:
     return float(fn(vals)) if not np.all(np.isnan(vals)) else float("nan")
 
 
-def aggregate_summaries(summaries: Sequence[Dict]) -> Optional[Dict]:
+def aggregate_summaries(summaries: Sequence[Dict],
+                        digests: Optional[Sequence[Dict]] = None
+                        ) -> Optional[Dict]:
     """Fleet rollup of per-engine `summary()` dicts: counters sum,
-    peaks max, latency stats average; ratio metrics are recomputed from
-    the summed numerators (a mean of per-replica hit rates is not the
-    fleet hit rate)."""
+    peaks max; ratio metrics are recomputed from the summed numerators
+    (a mean of per-replica hit rates is not the fleet hit rate).
+
+    `digests`: per-replica `Telemetry.digests()` payloads.  When given,
+    every percentile key is RECOMPUTED from the merged sketches —
+    bucket-wise addition, so the fleet p95 is the p95 of the pooled
+    samples (within the sketch's relative-error bound), not an average
+    of per-replica p95s (which is not a percentile of anything).
+    Without digests the old nan-averaging stands as a last resort for
+    direct callers that only hold summaries."""
     if not summaries:
         return None
+    have_digests = digests is not None
     out: Dict[str, float] = {}
     for k in sorted(set().union(*map(set, summaries))):
+        if have_digests and k in PERCENTILE_KEYS:
+            continue            # recomputed from merged sketches below
         vals = np.asarray([float(s[k]) for s in summaries if k in s],
                           np.float64)
         if k in _SUM_KEYS or k.startswith("lane_steps_"):
@@ -79,6 +97,12 @@ def aggregate_summaries(summaries: Sequence[Dict]) -> Optional[Dict]:
             out[k] = _nanagg(vals, np.nanmax)
         else:
             out[k] = _nanagg(vals, np.nanmean)
+    if have_digests:
+        merged = merge_digests(digests)
+        for key, (metric, p) in PERCENTILE_KEYS.items():
+            dig = merged.get(metric)
+            if dig is not None and dig.count:
+                out[key] = dig.quantile(p)
     if out.get("prefix_lookups"):
         out["prefix_hit_rate"] = out["prefix_hits"] / out["prefix_lookups"]
     if out.get("spec_drafted"):
@@ -91,6 +115,18 @@ def aggregate_summaries(summaries: Sequence[Dict]) -> Optional[Dict]:
         out["sim_tokens_per_s"] = (out.get("sim_decode_tokens", 0.0)
                                    / out["sim_time_s"])
     return out
+
+
+def merge_digests(digests: Sequence[Dict]) -> Dict:
+    """Merge per-replica `Telemetry.digests()` payloads into one
+    `QuantileDigest` per metric (skipping replicas that lack one)."""
+    merged = {}
+    for metric in sorted(set().union(*map(set, digests)) if digests
+                         else ()):
+        dig = merge_digest_dicts(d.get(metric) for d in digests)
+        if dig is not None:
+            merged[metric] = dig
+    return merged
 
 
 def aggregate_histograms(hists: Sequence[Dict]) -> Optional[Dict]:
@@ -134,6 +170,99 @@ class FleetRouter:
                                          "adds": 0}
         self._owner: Dict[int, Replica] = {}    # id(req) -> replica
         self.tracer = get_tracer()
+        # SLO layer (obs/slo.py): None until set_slos(); the drift
+        # audit (per-replica, obs/drift.py) runs unconditionally on
+        # every poll_slo tick — it needs no configuration
+        self.slo: Optional[SLOMonitor] = None
+        self._alert_subs: List[Callable[[Dict], None]] = []
+
+    # -- SLOs / drift ----------------------------------------------------
+    def set_slos(self, slos, *,
+                 policy: Optional[BurnRatePolicy] = None) -> None:
+        """Install declarative objectives (spec strings or `SLOSpec`s)
+        evaluated per replica AND fleet-wide on every `poll_slo` tick."""
+        self.slo = SLOMonitor(slos, policy=policy)
+
+    def on_alert(self, cb: Callable[[Dict], None]) -> None:
+        """Subscribe to alert events: SLO level transitions
+        (kind="slo_alert") and drift alarms (kind="drift_alarm") — the
+        hook a future autoscaler/drain controller consumes.  Callbacks
+        run on whatever thread/loop calls `poll_slo`; exceptions are
+        swallowed (a broken subscriber must not stop evaluation)."""
+        self._alert_subs.append(cb)
+
+    def poll_slo(self, now: Optional[float] = None) -> List[Dict]:
+        """One evaluation tick, thread-free: reads only the lock-free
+        snapshots/digests the driver taps publish.  Per live replica it
+        advances the drift auditor over the measured-vs-simulated
+        decode clocks; with SLOs configured it ingests every replica
+        scope plus a synthetic "fleet" scope (summed counters + merged
+        sketches) and re-evaluates burn rates.  Alert events are
+        recorded into the scoped replica's flight recorder (fleet-scope
+        events into every live replica's — a postmortem dump of any
+        survivor explains the page) and delivered to `on_alert`
+        subscribers.  Returns the events this tick produced."""
+        now = time.monotonic() if now is None else now
+        events: List[Dict] = []
+        live = [rep for rep in self.replicas if rep.alive]
+        for rep in live:
+            snap = rep.snapshot
+            if "sim_decode_s" in snap:
+                ev = rep.drift.observe(now, snap.get("decode_s", 0.0),
+                                       snap["sim_decode_s"])
+                if ev is not None:
+                    ev = {**ev, "scope": f"replica-{rep.id}"}
+                    rep.engine.recorder.record(
+                        "drift_alarm",
+                        **{k: v for k, v in ev.items() if k != "kind"})
+                    events.append(ev)
+            if self.slo is not None:
+                self.slo.ingest(f"replica-{rep.id}", digests=rep.digests,
+                                counters=snap, now=now)
+        if self.slo is not None and live:
+            fleet_counters: Dict[str, float] = {}
+            for rep in live:
+                for k, v in rep.snapshot.items():
+                    fleet_counters[k] = fleet_counters.get(k, 0.0) \
+                        + float(v)
+            fleet_digests = {m: d.to_dict() for m, d in
+                            merge_digests([rep.digests
+                                           for rep in live]).items()}
+            self.slo.ingest("fleet", digests=fleet_digests,
+                            counters=fleet_counters, now=now)
+            for ev in self.slo.evaluate(now):
+                scope = ev.get("scope", "")
+                # the event dict already carries "kind" — strip it, the
+                # recorder takes kind positionally
+                fields = {k: v for k, v in ev.items() if k != "kind"}
+                for rep in live:
+                    if scope == "fleet" or scope == f"replica-{rep.id}":
+                        rep.engine.recorder.record("slo_alert", **fields)
+                events.append(ev)
+        for ev in events:
+            for cb in self._alert_subs:
+                try:
+                    cb(ev)
+                except Exception:
+                    pass
+        return events
+
+    def worst_alert_level(self) -> str:
+        """Highest active SLO alert level across every scope ("ok"
+        when no SLOs are configured) — /healthz's `degraded` flag."""
+        return self.slo.worst_level() if self.slo is not None else "ok"
+
+    def slo_payload(self) -> Dict:
+        """JSON body for GET /debug/slo: objectives + policy + alert
+        states + recent transitions, plus the per-replica drift audit."""
+        payload = (self.slo.payload() if self.slo is not None
+                   else {"slos": [], "states": [], "worst": "ok",
+                         "transitions": []})
+        payload["drift"] = {
+            str(rep.id): {**rep.drift.summary(),
+                          "events": list(rep.drift.events)}
+            for rep in self.replicas}
+        return payload
 
     @staticmethod
     def _check_same_model(engine, ref) -> None:
@@ -345,7 +474,7 @@ class FleetRouter:
         snapshot) instead of a KeyError; the aggregate covers live
         replicas only."""
         per: Dict[str, Dict] = {}
-        summaries, hists = [], []
+        summaries, hists, digests = [], [], []
         n_running = n_queued = kv_free = 0
         for rep in self.replicas:
             entry = rep.describe()
@@ -355,9 +484,13 @@ class FleetRouter:
                         lambda eng: {
                             "engine": eng.summary(),
                             "histograms": eng.telemetry.histograms(),
+                            "digests": eng.telemetry.digests(),
                             "n_running": eng.n_running,
                             "n_queued": eng.scheduler.n_queued,
                             "kv_pages_free": eng.cache.allocator.n_free}))
+                    # sketches feed the fleet merge only — per-replica
+                    # bucket maps would bloat every /metrics scrape
+                    digests.append(snap.pop("digests"))
                     entry.update(snap)
                     summaries.append(snap["engine"])
                     hists.append(snap["histograms"])
@@ -370,7 +503,7 @@ class FleetRouter:
                         "engine driver not running"
             per[str(rep.id)] = entry
         payload = {
-            "engine": aggregate_summaries(summaries),
+            "engine": aggregate_summaries(summaries, digests),
             "histograms": aggregate_histograms(hists),
             # the RESOLVED serving config (precision, kv dtype, pool
             # geometry): what the fleet is actually serving at, not
@@ -384,6 +517,8 @@ class FleetRouter:
                       "counters": dict(self.counters),
                       **self.policy_stats(),
                       "replicas": per}}
+        if self.slo is not None:
+            payload["slo"] = self.slo.payload()
         if not summaries:
             payload["error"] = "no live replica"
         return payload

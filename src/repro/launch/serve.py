@@ -109,6 +109,16 @@ def main():
                          "tracer; dump a Perfetto-loadable Chrome trace "
                          "from GET /debug/trace (equivalent to "
                          "REPRO_TRACE=1)")
+    ap.add_argument("--slo", default=None, nargs="*", metavar="SPEC",
+                    help="enable the SLO engine (--gateway mode): pass "
+                         "spec strings like 'ttft_p95_s < 0.5' "
+                         "'error_rate < 0.01', or no specs for the "
+                         "defaults; burn-rate alerts + per-replica "
+                         "drift audit served at GET /debug/slo")
+    ap.add_argument("--slo-timescale", type=float, default=1.0,
+                    help="compress the SRE burn-rate windows by this "
+                         "factor (1/600 maps the 1h page window to "
+                         "6 s — bench/smoke timescales)")
     ap.add_argument("--access-log", default=None, metavar="PATH",
                     help="append one structured JSON line per gateway "
                          "request (rid, replica, policy, status, ttft, "
@@ -182,6 +192,9 @@ def main():
     if args.replicas > 1 and not args.gateway:
         raise SystemExit("--replicas > 1 requires --gateway (the offline "
                          "sweep runs one engine)")
+    if args.slo is not None and not args.gateway:
+        raise SystemExit("--slo requires --gateway (burn-rate alerting "
+                         "evaluates the live serving loop)")
 
     if args.tp < 1:
         raise SystemExit(f"--tp {args.tp}: need at least 1")
@@ -222,7 +235,15 @@ def main():
         import sys
         access_log = (sys.stderr if args.access_log == "-"
                       else args.access_log)
-        gw = Gateway(router, access_log=access_log)
+        slos = slo_policy = None
+        if args.slo is not None:
+            from repro.obs.slo import DEFAULT_SLOS, BurnRatePolicy
+            slos = list(args.slo) or list(DEFAULT_SLOS)
+            slo_policy = BurnRatePolicy(timescale=args.slo_timescale)
+            print(f"[serve] SLOs: {', '.join(slos)} "
+                  f"(timescale {args.slo_timescale:g}, GET /debug/slo)")
+        gw = Gateway(router, access_log=access_log, slos=slos,
+                     slo_policy=slo_policy)
         try:
             asyncio.run(gw.serve_forever(args.host, args.port))
         except KeyboardInterrupt:

@@ -1,21 +1,32 @@
-"""Observability layer: span tracing, exporters, flight recorder, energy.
+"""Observability layer: tracing, exporters, flight recorder, energy, SLOs.
 
-Stdlib-only (numpy/jax enter only indirectly via the CIM cost model in
-`obs.energy`).  See serve/README.md "Observability" for the span
-taxonomy and usage.
+Stdlib + numpy only (jax enters only indirectly via the CIM cost model
+in `obs.energy`).  See serve/README.md "Observability" for the span
+taxonomy, and its "SLOs & drift" subsection for the quantile-sketch /
+burn-rate / drift-audit layer (`obs.digest`, `obs.slo`, `obs.drift`).
 """
+from .digest import QuantileDigest, merge_digest_dicts
+from .drift import DriftAuditor
 from .energy import EnergyMeter, slm_spec_from_model_config
 from .export import chrome_trace, prometheus_text
 from .recorder import FlightRecorder
+from .slo import BurnRatePolicy, SLOMonitor, SLOSpec, parse_slos
 from .trace import NULL_SPAN, Tracer, get_tracer
 
 __all__ = [
+    "BurnRatePolicy",
+    "DriftAuditor",
     "EnergyMeter",
     "FlightRecorder",
     "NULL_SPAN",
+    "QuantileDigest",
+    "SLOMonitor",
+    "SLOSpec",
     "Tracer",
     "chrome_trace",
     "get_tracer",
+    "merge_digest_dicts",
+    "parse_slos",
     "prometheus_text",
     "slm_spec_from_model_config",
 ]

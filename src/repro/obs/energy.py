@@ -135,6 +135,9 @@ class EnergyMeter:
         self.decode_j = 0.0
         self.prefill_j = 0.0
         self.sim_s = 0.0
+        self.decode_sim_s = 0.0     # decode-only modeled time: the
+        # predicted clock the drift auditor (obs/drift.py) holds
+        # against Telemetry.decode_s — prefill must not blur it
         self.decode_tokens = 0
         self.prefill_tokens = 0
 
@@ -143,6 +146,7 @@ class EnergyMeter:
         warmup resets this alongside Telemetry so reported tokens/J
         covers only the measured window."""
         self.decode_j = self.prefill_j = self.sim_s = 0.0
+        self.decode_sim_s = 0.0
         self.decode_tokens = self.prefill_tokens = 0
 
     # -- accounting -----------------------------------------------------
@@ -156,7 +160,9 @@ class EnergyMeter:
         if n_tokens <= 0:
             return
         self.decode_j += n_tokens * (self._e0_j + self._de_j * mean_seq)
-        self.sim_s += n_tokens * (self._s0_s + self._ds_s * mean_seq)
+        sim_s = n_tokens * (self._s0_s + self._ds_s * mean_seq)
+        self.sim_s += sim_s
+        self.decode_sim_s += sim_s
         self.decode_tokens += n_tokens
 
     def charge_prefill(self, n_tokens: int) -> None:
@@ -190,6 +196,9 @@ class EnergyMeter:
             "sim_decode_energy_j": self.decode_j,
             "sim_prefill_energy_j": self.prefill_j,
             "sim_time_s": wall_s,
+            # decode-only modeled wall time (tp-scaled like sim_time_s):
+            # the drift audit's predicted clock
+            "sim_decode_time_s": self.decode_sim_s / self.tp,
             "sim_decode_tokens": float(self.decode_tokens),
             "sim_tokens_per_j": self.tokens_per_j(),
             "sim_tokens_per_s": (self.decode_tokens / wall_s

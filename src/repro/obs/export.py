@@ -21,6 +21,7 @@ import math
 import re
 from typing import Any, Dict, List, Optional
 
+from .slo import LEVEL_VALUE
 from .trace import Tracer
 
 TRACE_CATEGORIES = ("gateway", "router", "driver", "engine", "sched")
@@ -86,10 +87,12 @@ def _fmt_value(v: Any) -> Optional[str]:
     if not isinstance(v, (int, float)):
         return None
     f = float(v)
-    if math.isnan(f):
-        return "NaN"
-    if math.isinf(f):
-        return "+Inf" if f > 0 else "-Inf"
+    if not math.isfinite(f):
+        # "no data yet" is an ABSENT series in Prometheus, not a NaN
+        # sample: a NaN line poisons every recording rule / aggregation
+        # that touches it, and +/-Inf never describes a real scrape.
+        # Skipping the line is the exposition-format idiom for absence.
+        return None
     return repr(f) if isinstance(v, float) else str(v)
 
 
@@ -194,6 +197,37 @@ def prometheus_text(payload: Dict[str, Any],
             if key in snap:
                 _line(out, _mname(prefix, "replica", key), snap[key],
                       labels, mtype="gauge", typed=typed)
+        # digital-twin drift audit (obs/drift.py): NaN ratio before
+        # calibration renders as an absent series, so dashboards show
+        # drift only once it is a meaningful number
+        drift = rep.get("drift") or {}
+        for key in ("sim_drift_ratio", "sim_drift_alarm",
+                    "sim_drift_cusum", "sim_measured_ratio"):
+            if key in drift:
+                _line(out, _mname(prefix, "replica", key), drift[key],
+                      labels, mtype="gauge", typed=typed)
+        if "sim_drift_alarms" in drift:
+            _line(out, _mname(prefix, "replica_sim_drift_alarms_total"),
+                  drift["sim_drift_alarms"], labels, mtype="counter",
+                  typed=typed)
+
+    # SLO alert state machines (obs/slo.py): level as an enum gauge
+    # (0=ok 1=warn 2=page) plus the page-window burn rates behind it
+    slo = payload.get("slo") or {}
+    for st in slo.get("states") or []:
+        labels = {"scope": str(st.get("scope")),
+                  "slo": str(st.get("slo"))}
+        lvl = LEVEL_VALUE.get(st.get("level"), 0)
+        _line(out, _mname(prefix, "slo_alert_level"), lvl, labels,
+              mtype="gauge", typed=typed)
+        burn = st.get("burn") or {}
+        for bkey in ("page_long", "page_short"):
+            if bkey in burn:
+                _line(out, _mname(prefix, "slo_burn", bkey),
+                      burn[bkey], labels, mtype="gauge", typed=typed)
+        _line(out, _mname(prefix, "slo_transitions_total"),
+              st.get("transitions"), labels, mtype="counter",
+              typed=typed)
 
     for hname, hist in sorted((payload.get("histograms") or {}).items()):
         _hist_lines(out, _mname(prefix, hname.removesuffix("_s"),

@@ -21,6 +21,8 @@ from typing import Dict, List, Optional
 
 import numpy as np
 
+from ..obs.digest import QuantileDigest
+
 
 @dataclass
 class RequestTrace:
@@ -96,12 +98,6 @@ class _Window:
         return float(self.array().max()) if self._vals else default
 
 
-def _pct(vals, q: float) -> float:
-    arr = vals.array() if isinstance(vals, _Window) \
-        else np.asarray(vals, np.float64)
-    return float(np.percentile(arr, q)) if arr.size else float("nan")
-
-
 # log-spaced latency buckets: 100 us .. 10 s plus an overflow bin — wide
 # enough for a jitted CPU smoke run and a loaded TPU server alike
 _HIST_EDGES = np.logspace(-4, 1, 11)
@@ -144,6 +140,20 @@ class Telemetry:
         self._ttft = _Window(MAX_DONE_TRACES)
         self._tpot = _Window(MAX_DONE_TRACES)
         self._queue = _Window(MAX_DONE_TRACES)
+        # mergeable quantile sketches behind every reported percentile:
+        # cumulative (never pruned — bounded by construction), appended
+        # at the same lifecycle events as the windows above.  Windows
+        # stay for means + fixed-bucket histograms; rank statistics come
+        # from the sketches so fleet rollups can MERGE instead of
+        # averaging percentiles (obs/digest.py).
+        self._digests: Dict[str, QuantileDigest] = {
+            "ttft_s": QuantileDigest(), "tpot_s": QuantileDigest(),
+            "itl_s": QuantileDigest(), "queue_s": QuantileDigest(),
+        }
+        # bumped on every digest append so publishers (the replica tap)
+        # can skip re-serializing an unchanged sketch, like the prefix
+        # fingerprint's version gate
+        self.digest_version = 0
         self.decode_s = 0.0
         self.prefill_s = 0.0
         self.steps = 0
@@ -180,6 +190,8 @@ class Telemetry:
         tr = self.traces.get(rid)
         if tr is not None and tr.tpot_s is not None:
             self._tpot.append(tr.tpot_s)
+            self._digests["tpot_s"].add(tr.tpot_s)
+            self.digest_version += 1
         self._done_order.append(rid)
         while len(self._done_order) > MAX_DONE_TRACES:
             self.traces.pop(self._done_order.pop(0), None)
@@ -188,6 +200,8 @@ class Telemetry:
         tr = self.traces[rid]
         tr.t_admit = now
         self._queue.append(tr.queue_s)
+        self._digests["queue_s"].add(tr.queue_s)
+        self.digest_version += 1
 
     def token(self, rid: int, now: float, decode: bool = True):
         """decode=False marks a token emitted by the prefill graph (each
@@ -196,11 +210,16 @@ class Telemetry:
         if tr.t_first_token is None:
             tr.t_first_token = now
             self._ttft.append(tr.ttft_s)
+            self._digests["ttft_s"].add(tr.ttft_s)
+            self.digest_version += 1
         elif tr.t_last_token is not None:
             # measured gap between consecutive emissions of one request
             # (the streaming client's experience, unlike tpot's
             # first-to-done mean)
-            self.itl_samples.append(max(now - tr.t_last_token, 0.0))
+            gap = max(now - tr.t_last_token, 0.0)
+            self.itl_samples.append(gap)
+            self._digests["itl_s"].add(gap)
+            self.digest_version += 1
         tr.t_last_token = now
         tr.n_tokens += 1
         self.tokens += 1
@@ -304,9 +323,17 @@ class Telemetry:
 
     # -- rollup ---------------------------------------------------------
     def summary(self) -> Dict[str, float]:
-        # latency windows are maintained incrementally at their
-        # lifecycle events (see __init__) — no trace scan per scrape
-        ttft, tpot, queue = self._ttft, self._tpot, self._queue
+        # latency percentiles come from the cumulative sketches; a
+        # metric with no samples yet is ABSENT from the rollup (not
+        # NaN) — exporters render nothing, fleet merges skip it, and
+        # check_bench never diffs a number that does not exist
+        ttft = self._ttft
+        pct: Dict[str, float] = {}
+        for name, dig in self._digests.items():
+            if dig.count == 0:
+                continue
+            for p in (50, 95, 99):
+                pct[f"{name[:-2]}_p{p}_s"] = dig.quantile(p)
         wall = ((self.t_end - self.t_start)
                 if self.t_start is not None and self.t_end is not None
                 and self.t_end > self.t_start else 0.0)
@@ -334,15 +361,7 @@ class Telemetry:
             "fork_admissions": float(self.fork_admissions),
             "cancelled": float(self.cancelled),
             "ttft_mean_s": ttft.mean(),
-            "ttft_p50_s": _pct(ttft, 50), "ttft_p95_s": _pct(ttft, 95),
-            "ttft_p99_s": _pct(ttft, 99),
-            "tpot_p50_s": _pct(tpot, 50), "tpot_p95_s": _pct(tpot, 95),
-            "tpot_p99_s": _pct(tpot, 99),
-            "itl_p50_s": _pct(self.itl_samples, 50),
-            "itl_p95_s": _pct(self.itl_samples, 95),
-            "itl_p99_s": _pct(self.itl_samples, 99),
-            "queue_p50_s": _pct(queue, 50), "queue_p95_s": _pct(queue, 95),
-            "queue_p99_s": _pct(queue, 99),
+            **pct,
             "kv_occupancy_mean": self.occupancy_samples.mean(0.0),
             "kv_occupancy_peak": self.occupancy_samples.peak(0.0),
             "state_slot_occupancy_mean":
@@ -354,6 +373,14 @@ class Telemetry:
                 float(self.decode_lane_steps)}
                if self.decode_family is not None else {}),
         }
+
+    def digests(self) -> Dict[str, Dict]:
+        """Serialized quantile sketches keyed by metric — the mergeable
+        form of every percentile in `summary()`.  The replica tap
+        publishes these (version-gated on `digest_version`); the fleet
+        router merges them for mathematically correct fleet p95/p99."""
+        return {name: dig.to_dict()
+                for name, dig in self._digests.items()}
 
     def histograms(self) -> Dict[str, Dict[str, List]]:
         """Latency distributions as fixed log-spaced buckets (the

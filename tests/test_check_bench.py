@@ -81,6 +81,18 @@ def test_nan_baseline_and_unknown_metrics_ignored():
 
 
 @pytest.mark.bench
+def test_nan_baseline_tolerates_absent_current_metric():
+    """A baseline that never measured a metric (NaN) must accept a
+    current run that omits it entirely — absent-not-NaN is the
+    exporters' encoding for "no data", so the row JSON may simply drop
+    the key.  A metric the baseline DID measure still fails when it
+    vanishes (covered by test_missing_row_and_metric_fail)."""
+    base = [_row(acceptance_rate=float("nan"), ttft_p50_s=0.1)]
+    cur = [_row(ttft_p50_s=0.1)]          # acceptance_rate absent
+    assert check_bench.check_file("b", base, cur, TOLS) == []
+
+
+@pytest.mark.bench
 def test_metric_degrading_to_nan_fails():
     """A measurable baseline turning NaN (e.g. acceptance rate with
     zero drafts) is a regression, not a skip."""
@@ -189,3 +201,43 @@ def test_bool_quality_metric_gates():
     cur = [_row(outputs_byte_identical=False)]
     fails = check_bench.check_file("b", base, cur, TOLS)
     assert len(fails) == 1 and "outputs_byte_identical" in fails[0]
+
+
+@pytest.mark.bench
+def test_slo_gate_pages_and_drift_band():
+    """api_bench --slo rows: a page-level alert in the smoke cell or a
+    worst-replica drift ratio outside [1/drift_max, drift_max] fails —
+    judged on the current run alone (no baseline ratios: a twin whose
+    baseline drifted too would sail through a relative check)."""
+    ok = [_row(rate=20.0, replicas=2, slo=True, slo_worst="ok",
+               slo_page_alerts=0, slo_warn_alerts=0,
+               sim_drift_ratio=1.2, sim_drift_alarms=0)]
+    assert check_bench.check_slo("b", ok, 3.0) == []
+    paged = [dict(ok[0], slo_page_alerts=2, slo_worst="page")]
+    fails = check_bench.check_slo("b", paged, 3.0)
+    assert len(fails) == 1 and "page-level" in fails[0]
+    # the band is symmetric: 4x in either direction fails at 3x max
+    slow = [dict(ok[0], sim_drift_ratio=0.25)]
+    fast = [dict(ok[0], sim_drift_ratio=4.0)]
+    for bad in (slow, fast):
+        fails = check_bench.check_slo("b", bad, 3.0)
+        assert len(fails) == 1 and "sim_drift_ratio" in fails[0]
+    assert check_bench.check_slo("b", slow, 5.0) == [], \
+        "--drift-max widens the band"
+    # NaN ratio = no replica calibrated: skipped, not failed
+    uncal = [dict(ok[0], sim_drift_ratio=float("nan"))]
+    assert check_bench.check_slo("b", uncal, 3.0) == []
+    # rows not labeled slo (or labeled False) gate nothing
+    off = [_row(rate=20.0, replicas=2, slo=False, sim_drift_ratio=9.0),
+           _row(rate=20.0, goodput_tokens_per_s=50.0)]
+    assert check_bench.check_slo("b", off, 3.0) == []
+
+
+@pytest.mark.bench
+def test_slo_is_identity_not_a_metric():
+    """An `slo` mismatch means a DIFFERENT row; slo'd and plain cells
+    of the same sweep never cross-compare."""
+    base = [_row(slo=True, ttft_p50_s=0.5), _row(ttft_p50_s=0.1)]
+    assert check_bench.check_file("b", base, base, TOLS) == []
+    fails = check_bench.check_file("b", base, [base[1]], TOLS)
+    assert len(fails) == 1 and "slo=True" in fails[0]

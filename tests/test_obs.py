@@ -326,8 +326,10 @@ def test_prometheus_text_grammar_and_agreement():
     assert buckets['le="1.0"}'] == 5.0
     assert buckets['le="+Inf"}'] == 6.0
     assert samples["repro_ttft_seconds_count"][""] == 6.0
-    # NaN survives exposition (it IS the honest value here)
-    assert "repro_engine_spec_acceptance_rate NaN" in text
+    # "no data yet" is an ABSENT series, never a NaN sample: a NaN line
+    # poisons every Prometheus recording rule that aggregates over it
+    assert "repro_engine_spec_acceptance_rate" not in text
+    assert "NaN" not in text
 
 
 # ----------------------------------------------------------------------------
@@ -419,8 +421,8 @@ def test_gateway_trace_prometheus_and_access_log(model_params, tracing,
     assert b"text/plain; version=0.0.4" in prom_raw
     samples = _parse_prom(_body(prom_raw).decode())
     payload = json.loads(_body(json_raw))
-    assert payload["schema_version"] == 2
-    assert samples["repro_metrics_schema_version"][""] == 2.0
+    assert payload["schema_version"] == 3
+    assert samples["repro_metrics_schema_version"][""] == 3.0
     # scraped AFTER the json view, but the server was idle in between:
     # token counters must agree exactly
     assert samples["repro_engine_tokens_total"][""] == \

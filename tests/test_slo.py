@@ -1,0 +1,583 @@
+"""SLO layer: mergeable quantile sketches (rank error, merge algebra,
+bounded memory, serialization), burn-rate alerting over synthetic
+schedules, fleet percentile merging vs pooled samples, sim-vs-measured
+drift audit, and 2-replica gateway e2e (induced page -> /healthz
+degraded; induced decode slowdown -> CUSUM drift alarm)."""
+import asyncio
+import json
+import math
+import re
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import Gateway
+from repro.fleet import FleetRouter, aggregate_summaries
+from repro.models import DecoderLM, ModelConfig, init_params
+from repro.obs import (BurnRatePolicy, DriftAuditor, QuantileDigest,
+                       SLOMonitor, merge_digest_dicts, parse_slos)
+from repro.obs.slo import DEFAULT_SLOS, SLOSpec
+from repro.serve import PagedServeEngine
+
+
+# ----------------------------------------------------------------------------
+# sketch accuracy: relative value error vs np.percentile on adversarial
+# distributions (DDSketch's guarantee is value-relative, not rank)
+# ----------------------------------------------------------------------------
+def _distributions(rng):
+    lo = rng.lognormal(mean=-3.0, sigma=1.5, size=20_000)
+    bimodal = np.concatenate([rng.normal(1e-3, 1e-4, size=6_000),
+                              rng.normal(150.0, 5.0, size=14_000)])
+    tiny = rng.uniform(2e-6, 5e-5, size=5_000)
+    heavy = rng.pareto(1.5, size=20_000) + 1e-4
+    return {"lognormal": np.abs(lo), "bimodal": np.abs(bimodal),
+            "tiny": tiny, "pareto": heavy,
+            "constant": np.full(1_000, 0.0375)}
+
+
+@pytest.mark.parametrize("seed", [0, 7, 1234])
+def test_digest_rank_error_vs_numpy(seed):
+    rng = np.random.default_rng(seed)
+    for name, samples in _distributions(rng).items():
+        dig = QuantileDigest()
+        dig.extend(samples)
+        assert dig.count == len(samples)
+        # p50 of the 30/70 bimodal sits in the upper mode, nowhere near
+        # the inter-mode gap, so value-relative accuracy applies at
+        # every tested percentile
+        for p in (10.0, 50.0, 95.0, 99.0, 99.9):
+            est = dig.quantile(p)
+            true = float(np.percentile(samples, p))
+            assert est is not None
+            assert abs(est - true) / true < 0.025, \
+                f"{name} p{p}: {est} vs {true}"
+
+
+def test_digest_empty_and_edge_values():
+    dig = QuantileDigest()
+    assert dig.quantile(50) is None
+    assert dig.count == 0
+    assert math.isnan(dig.mean())
+    # zero / sub-resolution values land in the zero bucket and come
+    # back as 0.0, never negative or NaN
+    dig.add(0.0)
+    dig.add(1e-9)
+    dig.add(2.0)
+    assert dig.count == 3
+    assert dig.quantile(0) == 0.0
+    assert abs(dig.quantile(100) - 2.0) / 2.0 < 0.011
+    assert dig.count_above(1.0) == 1
+    # sub-resolution values sit in the zero bucket: "above 0" within
+    # the sketch's resolution excludes them, negative thresholds don't
+    assert dig.count_above(0.0) == 1
+    assert dig.count_above(-1.0) == 3
+
+
+def test_digest_merge_commutative_associative_and_linear():
+    rng = np.random.default_rng(3)
+    parts = [rng.lognormal(-2, 1, 4000), rng.uniform(0.5, 5, 3000),
+             rng.pareto(2, 5000) + 1e-3]
+    digs = []
+    for part in parts:
+        d = QuantileDigest()
+        d.extend(part)
+        digs.append(d)
+    a, b, c = digs
+    ab_c = a.copy().merge(b).merge(c)
+    a_bc = a.copy().merge(b.copy().merge(c))
+    cba = c.copy().merge(b).merge(a)
+
+    def norm(d):
+        # the running `sum` is float addition, so merge order moves it
+        # by ulps; buckets/counts/extrema must be EXACTLY equal
+        out = dict(d.to_dict())
+        return out, out.pop("sum")
+
+    d1, s1 = norm(ab_c)
+    d2, s2 = norm(a_bc)
+    d3, s3 = norm(cba)
+    # merge is bucket-wise addition: any order yields the identical
+    # sketch, not merely a similar one
+    assert d1 == d2 == d3
+    assert s1 == pytest.approx(s2) == pytest.approx(s3)
+    # and it equals the sketch of the pooled stream (linearity)
+    pooled = QuantileDigest()
+    pooled.extend(np.concatenate(parts))
+    dp, sp = norm(pooled)
+    assert dp == d1 and sp == pytest.approx(s1)
+
+
+def test_digest_merge_alpha_mismatch_rejected():
+    a, b = QuantileDigest(alpha=0.01), QuantileDigest(alpha=0.02)
+    a.add(1.0)
+    b.add(1.0)
+    with pytest.raises(ValueError):
+        a.merge(b)
+
+
+def test_digest_bounded_memory_at_1e6_inserts():
+    rng = np.random.default_rng(11)
+    dig = QuantileDigest()
+    n = 1_000_000
+    # 8 decades of dynamic range in 100k-sample slabs
+    for _ in range(10):
+        dig.extend(np.exp(rng.uniform(np.log(1e-5), np.log(1e3),
+                                      size=n // 10)))
+    assert dig.count == n
+    assert dig.n_buckets <= 2048
+    est, lo, hi = dig.quantile(50), 1e-5, 1e3
+    assert lo <= est <= hi
+
+
+def test_digest_serialization_roundtrip_and_dict_merge():
+    rng = np.random.default_rng(5)
+    dicts = []
+    pooled = []
+    for _ in range(3):
+        s = rng.lognormal(-1, 1, 2000)
+        pooled.append(s)
+        d = QuantileDigest()
+        d.extend(s)
+        dicts.append(d.to_dict())
+        # JSON round-trip (bucket keys become strings on the wire)
+        wire = json.loads(json.dumps(d.to_dict()))
+        back = QuantileDigest.from_dict(wire)
+        assert back.to_dict() == d.to_dict()
+        assert back.quantile(95) == d.quantile(95)
+    merged = merge_digest_dicts(dicts + [None])   # absent replica ok
+    true = float(np.percentile(np.concatenate(pooled), 95))
+    assert abs(merged.quantile(95) - true) / true < 0.025
+    assert merge_digest_dicts([None, None]) is None
+
+
+# ----------------------------------------------------------------------------
+# spec parsing
+# ----------------------------------------------------------------------------
+def test_slo_spec_parsing():
+    s = SLOSpec.parse("ttft_p95_s < 0.5")
+    assert (s.kind, s.metric, s.threshold) == ("latency", "ttft_s", 0.5)
+    assert abs(s.budget - 0.05) < 1e-12
+    e = SLOSpec.parse("error_rate < 0.01")
+    assert (e.kind, e.budget) == ("error_rate", 0.01)
+    g = SLOSpec.parse("goodput_tokens_per_s > 10")
+    assert (g.kind, g.threshold) == ("goodput", 10.0)
+    with pytest.raises(ValueError):
+        SLOSpec.parse("ttft_p95_s > 0.5")     # latency must be '<'
+    with pytest.raises(ValueError):
+        SLOSpec.parse("nonsense_metric < 1")
+    with pytest.raises(ValueError):
+        parse_slos(["ttft_p95_s < 1", "ttft_p95_s < 2"])  # dup name
+
+
+# ----------------------------------------------------------------------------
+# burn-rate window math over synthetic schedules (manual clock)
+# ----------------------------------------------------------------------------
+def _latency_digest_dict(good, bad):
+    """Serialized ttft sketch with `good` fast and `bad` slow samples
+    (threshold in the tests sits between 0.01 and 10)."""
+    d = QuantileDigest()
+    d.extend([0.01] * good + [10.0] * bad if good + bad else [])
+    return d.to_dict()
+
+
+def test_burn_rate_pages_on_fast_burn_and_recovers():
+    pol = BurnRatePolicy(timescale=1 / 600)   # page: 6s long, 0.5s short
+    mon = SLOMonitor(["ttft_p95_s < 1.0"], policy=pol)
+    seen = []
+    mon.on_transition(seen.append)
+    # all-bad stream, 10 ticks/s: burn = (1/1)/0.05 = 20 >= 14.4
+    good, bad, t = 0, 0, 0.0
+    for i in range(70):
+        t = i * 0.1
+        bad += 5
+        mon.ingest("r0", digests={"ttft_s": _latency_digest_dict(good,
+                                                                 bad)},
+                   now=t)
+        mon.evaluate(t)
+    assert mon.worst_level() == "page"
+    assert [ev["to"] for ev in seen] == ["page"], \
+        "one clean ok->page transition, no flapping"
+    assert seen[0]["scope"] == "r0" and seen[0]["kind"] == "slo_alert"
+    # recovery: all-good stream until the 6s long window drains
+    for i in range(70, 220):
+        t = i * 0.1
+        good += 5
+        mon.ingest("r0", digests={"ttft_s": _latency_digest_dict(good,
+                                                                 bad)},
+                   now=t)
+        mon.evaluate(t)
+    assert mon.worst_level() == "ok"
+    assert [ev["to"] for ev in seen][-1] == "ok"
+    # de-escalation steps down through warn (warn windows are longer,
+    # so they drain after page does), never jumps levels upward
+    levels = [ev["to"] for ev in seen]
+    assert levels[0] == "page" and levels[-1] == "ok"
+
+
+def test_burn_rate_short_window_vetoes_stale_badness():
+    """Long-window burn stays high after a historical bad burst, but the
+    page rule requires BOTH windows burning — once the short window is
+    clean again, no page fires."""
+    pol = BurnRatePolicy(timescale=1 / 600)
+    mon = SLOMonitor(["error_rate < 0.05"], policy=pol)
+    total = bad = 0
+    # 1s of pure errors (would page if sustained)...
+    for i in range(10):
+        t = i * 0.1
+        total += 10
+        bad += 10
+        mon.ingest("r0", counters={"requests_total": total,
+                                   "cancelled": bad}, now=t)
+    # ...but evaluation only starts after 1s of light clean traffic
+    # has flushed the 0.5s short window (light, so the long-window
+    # fraction stays page-level: ~90 bad of ~100 total)
+    for i in range(10, 20):
+        t = i * 0.1
+        total += 1
+        mon.ingest("r0", counters={"requests_total": total,
+                                   "cancelled": bad}, now=t)
+    fired = mon.evaluate(2.0)
+    st = mon.states[("r0", "error_rate")]
+    assert st.burn["page_long"] >= 14.4, "long window still burning"
+    assert st.burn["page_short"] < 14.4, "short window clean"
+    # the page tier is vetoed; the slower warn tier (3s short window
+    # still covering the burst) correctly holds the lower level
+    assert mon.worst_level() == "warn"
+    assert [ev["to"] for ev in fired] == ["warn"]
+
+
+def test_burn_rate_goodput_floor_counts_slow_ticks():
+    pol = BurnRatePolicy(timescale=1 / 600)
+    mon = SLOMonitor(["goodput_tokens_per_s > 100"], policy=pol)
+    tok = busy = 0.0
+    for i in range(70):
+        t = i * 0.1
+        tok += 2.0          # 2 tokens per 0.1s of busy time = 20 tok/s
+        busy += 0.1
+        mon.ingest("r0", counters={"decode_tokens": tok,
+                                   "decode_s": busy}, now=t)
+        mon.evaluate(t)
+    assert mon.worst_level() == "page"
+    # idle ticks don't vote: a monitor fed a frozen counter never
+    # accumulates events, so it stays ok rather than paging on silence
+    mon2 = SLOMonitor(["goodput_tokens_per_s > 100"], policy=pol)
+    for i in range(70):
+        t = i * 0.1
+        mon2.ingest("r0", counters={"decode_tokens": 5.0,
+                                    "decode_s": 1.0}, now=t)
+        mon2.evaluate(t)
+    assert mon2.worst_level() == "ok"
+
+
+def test_burn_policy_timescale_compresses_windows():
+    pol = BurnRatePolicy(timescale=1 / 600)
+    w = pol.windows()
+    assert w["page"] == (6.0, 0.5, 14.4)
+    assert w["warn"] == (36.0, 3.0, 6.0)
+    assert pol.max_window_s == 36.0
+
+
+# ----------------------------------------------------------------------------
+# fleet percentile merge (the satellite-1 regression): merged-sketch
+# p95 tracks the pooled-sample p95; averaging per-replica p95s does not
+# ----------------------------------------------------------------------------
+def test_fleet_merged_p95_matches_pooled_samples():
+    rng = np.random.default_rng(21)
+    # replica 0 fast with 97% of traffic, replica 1 an order of
+    # magnitude slower with 3% — the regime where mean-of-p95s is
+    # maximally wrong (pooled p95 sits in the fast tail; the naive
+    # average is dragged toward the nearly-idle slow replica)
+    fast = rng.lognormal(-4, 0.3, 9700)
+    slow = rng.lognormal(-1.2, 0.3, 300)
+    summaries, digests = [], []
+    for samples in (fast, slow):
+        d = QuantileDigest()
+        d.extend(samples)
+        p95 = float(np.percentile(samples, 95))
+        summaries.append({"requests_total": float(len(samples)),
+                          "ttft_p95_s": p95, "ttft_p50_s": p95 / 2})
+        digests.append({"ttft_s": d.to_dict()})
+    agg = aggregate_summaries(summaries, digests)
+    pooled = np.concatenate([fast, slow])
+    for p in (50, 95, 99):
+        true = float(np.percentile(pooled, p))
+        got = agg[f"ttft_p{p}_s"]
+        assert abs(got - true) / true < 0.03, f"p{p}: {got} vs {true}"
+    naive = float(np.mean([s["ttft_p95_s"] for s in summaries]))
+    true95 = float(np.percentile(pooled, 95))
+    assert abs(naive - true95) / true95 > 0.5, \
+        "the fixture must be one where averaging is badly wrong"
+    # replicas with NO samples for a metric neither poison nor appear
+    agg2 = aggregate_summaries(summaries + [{"requests_total": 0.0}],
+                               digests + [{}])
+    assert abs(agg2["ttft_p95_s"] - agg["ttft_p95_s"]) < 1e-12
+
+
+# ----------------------------------------------------------------------------
+# drift auditor units: calibration, alarm direction, healthy quiet
+# ----------------------------------------------------------------------------
+def test_drift_auditor_alarms_on_slowdown_quiet_when_healthy():
+    aud = DriftAuditor()
+    rng = np.random.default_rng(9)
+    meas = sim = 0.0
+    events = []
+    # calibration + healthy tracking at a fixed sim/measured factor
+    # with ±5% noise: ratio pins near 1.0 (the absolute factor cancels)
+    for i in range(30):
+        meas += 0.010 * (1 + 0.05 * rng.standard_normal())
+        sim += 0.004
+        ev = aud.observe(float(i), meas, sim)
+        assert ev is None
+    assert aud.calibrated
+    assert abs(aud.drift_ratio - 1.0) < 0.15
+    assert aud.summary()["sim_drift_alarm"] == 0.0
+    # measured decode degrades 3x -> two-sided CUSUM trips exactly once
+    for i in range(30, 60):
+        meas += 0.030
+        sim += 0.004
+        ev = aud.observe(float(i), meas, sim)
+        if ev is not None:
+            events.append(ev)
+    assert len(events) == 1, "rising-edge alarm, not one per tick"
+    assert events[0]["kind"] == "drift_alarm"
+    assert events[0]["direction"] == "measured_degraded"
+    s = aud.summary()
+    assert s["sim_drift_alarm"] == 1.0 and s["sim_drift_alarms"] == 1.0
+    assert s["sim_drift_ratio"] < 0.6
+
+
+def test_drift_auditor_uncalibrated_is_nan_and_idle_ticks_skip():
+    aud = DriftAuditor(calib_ticks=5)
+    assert math.isnan(aud.drift_ratio)
+    meas = sim = 0.0
+    for i in range(3):
+        meas += 0.01
+        sim += 0.01
+        aud.observe(float(i), meas, sim)
+    # idle ticks (no decode progress) don't advance calibration
+    for i in range(3, 20):
+        aud.observe(float(i), meas, sim)
+    assert not aud.calibrated and math.isnan(aud.drift_ratio)
+    assert math.isnan(aud.summary()["sim_drift_ratio"])
+
+
+# ----------------------------------------------------------------------------
+# 2-replica gateway e2e
+# ----------------------------------------------------------------------------
+def _model():
+    cfg = ModelConfig(name="s", family="dense", n_layers=2, d_model=32,
+                      n_heads=2, n_kv_heads=2, d_ff=64, vocab=64,
+                      head_dim=16, dtype="float32", remat=False)
+    model = DecoderLM(cfg)
+    params = init_params(model.param_specs(), jax.random.PRNGKey(0),
+                        dtype_override=jnp.float32)
+    return model, params
+
+
+@pytest.fixture(scope="module")
+def model_params():
+    return _model()
+
+
+def _engine(model, params, **kw):
+    kw.setdefault("max_batch", 4)
+    kw.setdefault("max_seq", 64)
+    kw.setdefault("page_size", 8)
+    return PagedServeEngine(model, params, **kw)
+
+
+async def _raw(host, port, method, path, body=None):
+    reader, writer = await asyncio.open_connection(host, port)
+    payload = json.dumps(body).encode() if body is not None else b""
+    head = f"{method} {path} HTTP/1.1\r\nHost: t\r\n"
+    if payload:
+        head += f"Content-Length: {len(payload)}\r\n"
+    writer.write(head.encode() + b"\r\n" + payload)
+    await writer.drain()
+    data = await reader.read()
+    writer.close()
+    status = int(data.split(b"\r\n", 1)[0].split()[1])
+    return status, data.partition(b"\r\n\r\n")[2]
+
+
+def test_gateway_slo_page_healthz_degraded_and_recorder(model_params):
+    """An unmeetable latency objective under a compressed timescale
+    must page within seconds: /debug/slo reports worst=page, /healthz
+    stays 200 but flips `degraded`, Prometheus exports the level, the
+    on_alert hook and every replica's flight recorder see the
+    fleet-scope transition."""
+    model, params = model_params
+    alerts = []
+
+    async def run():
+        router = FleetRouter([_engine(model, params) for _ in range(2)],
+                             policy="least-loaded", max_pending=16)
+        router.on_alert(alerts.append)
+        gw = Gateway(router, slos=["ttft_p95_s < 0.000000001"],
+                     slo_policy=BurnRatePolicy(timescale=1 / 600),
+                     slo_poll_s=0.02)
+        host, port = await gw.start()
+        try:
+            # traffic: every request's ttft violates a 1ns objective
+            for i in range(6):
+                st, _ = await _raw(host, port, "POST", "/v1/completions",
+                                   {"prompt": [1 + i, 2, 3],
+                                    "max_tokens": 4})
+                assert st == 200
+            doc = None
+            for _ in range(400):            # page long window is 6s
+                st, body = await _raw(host, port, "GET", "/debug/slo")
+                assert st == 200
+                doc = json.loads(body)
+                if doc["worst"] == "page":
+                    break
+                await asyncio.sleep(0.025)
+            st_h, body_h = await _raw(host, port, "GET", "/healthz")
+            st_m, body_m = await _raw(host, port, "GET", "/metrics")
+            _, prom = await _raw(host, port, "GET",
+                                 "/metrics?format=prometheus")
+            recs = [rep.engine.recorder.snapshot()
+                    for rep in router.replicas]
+        finally:
+            await gw.stop()
+        return doc, st_h, json.loads(body_h), json.loads(body_m), \
+            prom.decode(), recs
+
+    doc, st_h, health, metrics, prom, recs = asyncio.run(run())
+    assert doc["worst"] == "page"
+    paged = [s for s in doc["states"] if s["level"] == "page"]
+    assert any(s["scope"] == "fleet" for s in paged)
+    assert any(ev["to"] == "page" for ev in doc["transitions"])
+    # burn rates in the paged state clear the canonical 14.4 factor
+    assert all(s["burn"]["page_long"] >= 14.4 for s in paged)
+    # /healthz: alive (engines still serve) but degraded
+    assert st_h == 200
+    assert health["ok"] is True and health["degraded"] is True
+    assert health["slo_worst"] == "page"
+    # /metrics JSON carries the slo section; Prometheus exports the
+    # level gauge at 2 with scope/slo labels and no NaN anywhere
+    assert metrics["slo"]["worst"] == "page"
+    assert re.search(
+        r'repro_slo_alert_level\{scope="fleet",slo="[^"]+"\} 2\b', prom)
+    assert "NaN" not in prom
+    # the hook fired and every replica's flight recorder can explain
+    # the page post-mortem (fleet-scope events fan out to all rings)
+    assert any(ev["kind"] == "slo_alert" and ev["to"] == "page"
+               for ev in alerts)
+    for snap in recs:
+        assert any(ev["kind"] == "slo_alert" for ev in snap)
+
+
+def test_gateway_drift_alarm_on_induced_decode_slowdown(model_params):
+    """Digital-twin audit e2e: after calibrating on honest decode
+    timings, inflating the measured decode clock 8x trips the CUSUM on
+    every replica; the alarm reaches /debug/slo, Prometheus, on_alert,
+    and the flight recorder."""
+    model, params = model_params
+    alerts = []
+
+    async def run():
+        router = FleetRouter([_engine(model, params) for _ in range(2)],
+                             policy="rr", max_pending=16)
+        router.on_alert(alerts.append)
+        # drift needs no SLO config: the auditor runs whenever the
+        # gateway poll loop does
+        gw = Gateway(router, slo_poll_s=0.02)
+        host, port = await gw.start()
+        try:
+            async def traffic(n, tokens):
+                for i in range(n):
+                    st, _ = await _raw(host, port, "POST",
+                                       "/v1/completions",
+                                       {"prompt": [1 + i % 7, 2, 3],
+                                        "max_tokens": tokens})
+                    assert st == 200
+
+            # phase 1: calibrate on honest timings
+            for _ in range(200):
+                await traffic(2, 8)
+                if all(rep.drift.calibrated for rep in router.replicas):
+                    break
+            assert all(rep.drift.calibrated for rep in router.replicas)
+            # phase 2: degrade the measured decode clock 8x (the sim
+            # prediction is unchanged, so the twin must notice)
+            for rep in router.replicas:
+                orig = rep.engine._decode_phase
+
+                def slow(orig=orig):
+                    d, lanes = orig()
+                    return d * 8.0, lanes
+
+                rep.engine._decode_phase = slow
+            doc = None
+            for _ in range(300):
+                await traffic(2, 8)
+                st, body = await _raw(host, port, "GET", "/debug/slo")
+                doc = json.loads(body)
+                drift = doc["drift"]
+                if all(d["sim_drift_alarm"] for d in drift.values()):
+                    break
+            _, prom = await _raw(host, port, "GET",
+                                 "/metrics?format=prometheus")
+            recs = [rep.engine.recorder.snapshot()
+                    for rep in router.replicas]
+        finally:
+            await gw.stop()
+        return doc, prom.decode(), recs
+
+    doc, prom, recs = asyncio.run(run())
+    drift = doc["drift"]
+    assert len(drift) == 2
+    for rid, d in drift.items():
+        assert d["sim_drift_alarm"] == 1.0, f"replica {rid} quiet"
+        assert d["sim_drift_ratio"] < 0.6, \
+            "8x-slower measured decode must push the ratio well under 1"
+        assert any(ev["direction"] == "measured_degraded"
+                   for ev in d["events"])
+    assert 'repro_replica_sim_drift_alarm{replica="0"} 1.0' in prom
+    assert "repro_replica_sim_drift_alarms_total" in prom
+    assert any(ev["kind"] == "drift_alarm" for ev in alerts)
+    for snap in recs:
+        assert any(ev["kind"] == "drift_alarm" for ev in snap)
+
+
+def test_gateway_healthy_run_stays_ok_no_nan(model_params):
+    """Under the shipped default SLOs at real timescale, a short healthy
+    run never alerts, /healthz is not degraded, merged percentiles are
+    finite, and absent metrics stay absent (no NaN) end to end."""
+    model, params = model_params
+
+    async def run():
+        router = FleetRouter([_engine(model, params) for _ in range(2)],
+                             policy="least-loaded", max_pending=16)
+        gw = Gateway(router, slos=list(DEFAULT_SLOS), slo_poll_s=0.02)
+        host, port = await gw.start()
+        try:
+            for i in range(4):
+                st, _ = await _raw(host, port, "POST", "/v1/completions",
+                                   {"prompt": [1 + i, 2, 3],
+                                    "max_tokens": 4})
+                assert st == 200
+            await asyncio.sleep(0.1)
+            _, body = await _raw(host, port, "GET", "/debug/slo")
+            _, body_h = await _raw(host, port, "GET", "/healthz")
+            _, body_m = await _raw(host, port, "GET", "/metrics")
+            _, prom = await _raw(host, port, "GET",
+                                 "/metrics?format=prometheus")
+        finally:
+            await gw.stop()
+        return (json.loads(body), json.loads(body_h),
+                json.loads(body_m), prom.decode())
+
+    doc, health, metrics, prom = asyncio.run(run())
+    assert doc["worst"] == "ok" and doc["transitions"] == []
+    assert health["degraded"] is False
+    # aggregated percentiles come from merged sketches and are finite
+    eng = metrics["engine"]
+    assert eng["ttft_p95_s"] > 0
+    assert eng["requests"] == 4.0       # counted once per request
+    assert "NaN" not in prom
+    # spec decoding is off, so its rate is ABSENT, not NaN
+    assert "repro_engine_spec_acceptance_rate" not in prom

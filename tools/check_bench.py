@@ -35,7 +35,7 @@ from typing import Dict, List, Tuple
 # identity fields: define WHICH row we compare, never gated themselves
 IDENTITY = ("mode", "family", "mix", "workload", "drafter", "k", "batch",
             "n_requests", "prefix_len", "rate", "n", "replicas", "policy",
-            "tracing", "precision", "tp")
+            "tracing", "precision", "tp", "slo")
 
 # (substring, direction, class); first match wins.  direction "higher"
 # means bigger is better.  Metrics matching nothing are informational.
@@ -100,13 +100,17 @@ def check_file(name: str, baseline: List[Dict], current: List[Dict],
             if rule is None or not isinstance(bval, (int, float, bool)):
                 continue
             direction, klass = rule
+            if (isinstance(bval, float) and math.isnan(bval)):
+                # baseline never measured this metric; an absent current
+                # value is the expected encoding (exporters drop
+                # unmeasured series rather than emit NaN), not a
+                # disappearance
+                continue
             cval = crow.get(metric)
             if cval is None:
                 failures.append(f"{label}.{metric}: metric disappeared")
                 continue
             b, c = float(bval), float(cval)
-            if math.isnan(b):
-                continue
             if math.isnan(c):
                 # a metric that WAS measurable degrading to NaN (e.g.
                 # acceptance rate with zero drafts) is a regression,
@@ -312,6 +316,39 @@ def check_tp_identity(name: str, current: List[Dict],
     return failures
 
 
+def check_slo(name: str, current: List[Dict],
+              drift_max: float) -> List[str]:
+    """SLO/drift gate, judged WITHIN the current run on rows labeled
+    `slo` (api_bench --slo): the smoke cell runs under the default SLOs
+    at a compressed burn-rate timescale, so a healthy engine must
+    finish with no page-level alert fired, and the digital-twin audit's
+    worst-replica `sim_drift_ratio` must stay inside
+    [1/drift_max, drift_max] — a cost-model regression (simulator
+    predictions walking away from measured decode time) or a latency
+    collapse severe enough to page can no longer merge silently.  A NaN
+    drift ratio means no replica calibrated (too few decode ticks) and
+    is skipped, not failed: the page gate still covers that cell."""
+    failures: List[str] = []
+    for r in current:
+        if not r.get("slo"):
+            continue
+        label = name + "[" + ",".join(
+            f"{k}={v}" for k, v in row_key(r)) + "]"
+        pages = int(r.get("slo_page_alerts", 0) or 0)
+        if pages > 0:
+            failures.append(
+                f"{label}: {pages} page-level SLO alert(s) fired in the "
+                f"smoke cell (worst level: {r.get('slo_worst', '?')})")
+        ratio = float(r.get("sim_drift_ratio", float("nan")))
+        if not math.isnan(ratio) and not (
+                1.0 / drift_max - 1e-9 <= ratio <= drift_max + 1e-9):
+            failures.append(
+                f"{label}: sim_drift_ratio {fmt(ratio)} outside "
+                f"[{fmt(1.0 / drift_max)}, {fmt(drift_max)}] — simulator "
+                "predictions drifted from measured decode time")
+    return failures
+
+
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--baseline",
@@ -359,6 +396,11 @@ def main() -> int:
                          "streams is always required — on a host-CPU "
                          "forced mesh no speedup is expected, only no "
                          "collapse)")
+    ap.add_argument("--drift-max", type=float, default=3.0,
+                    help="sim-vs-measured drift band on api_bench --slo "
+                         "rows: worst-replica sim_drift_ratio must stay "
+                         "within [1/drift-max, drift-max] (judged within "
+                         "the current run; NaN = uncalibrated, skipped)")
     ap.add_argument("--update", action="store_true",
                     help="overwrite baselines from --current")
     args = ap.parse_args()
@@ -415,6 +457,7 @@ def main() -> int:
                                      args.quant_mse_max)
         fails += check_quant_energy(n, current, args.quant_energy_min)
         fails += check_tp_identity(n, current, args.tp_goodput_min)
+        fails += check_slo(n, current, args.drift_max)
         status = "FAIL" if fails else "ok"
         print(f"check_bench: {n}: {len(baseline)} baseline rows, "
               f"{len(fails)} regressions [{status}]")

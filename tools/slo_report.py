@@ -1,0 +1,166 @@
+#!/usr/bin/env python
+"""Offline SLO/drift report for `/debug/slo` dumps.
+
+`/metrics` answers "what is the alert level right now"; this answers
+the two questions you ask during (or after) an incident:
+
+  * which SLO burned, in which scope, and how the page/warn levels
+    evolved over the run (the transition timeline with burn rates), and
+  * is the digital twin still honest — per replica, how far simulator-
+    predicted decode time drifted from measured, and when the CUSUM
+    tripped.
+
+Usage:
+    python tools/slo_report.py results/benchmarks/api_bench_slo.slo.json
+    curl -s localhost:8151/debug/slo | python tools/slo_report.py -
+
+Works on the exact JSON the gateway serves at GET /debug/slo (or
+api_bench --slo saves as `<out>.slo.json`).  Exit code is 0 whenever
+the document parses; pass --strict to exit 1 if any scope sits at
+`page` or any replica's drift alarm is latched — handy as a cheap gate
+outside the full check_bench run.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import sys
+from typing import Dict, List
+
+
+def load(path: str) -> Dict:
+    fh = sys.stdin if path == "-" else open(path)
+    try:
+        return json.load(fh)
+    finally:
+        if fh is not sys.stdin:
+            fh.close()
+
+
+def _num(v, fmt: str = "{:.3f}") -> str:
+    if v is None:
+        return "-"
+    try:
+        f = float(v)
+    except (TypeError, ValueError):
+        return str(v)
+    if math.isnan(f):
+        return "-"
+    return fmt.format(f)
+
+
+def print_slos(doc: Dict) -> None:
+    slos = doc.get("slos") or []
+    pol = doc.get("policy") or {}
+    print(f"== {len(slos)} SLO(s), timescale "
+          f"{_num(pol.get('timescale'), '{:g}')} ==")
+    for s in slos:
+        print(f"  {s['name']:<16} {s.get('kind', '?'):<10} "
+              f"spec: {s.get('spec', '?')}   "
+              f"budget {_num(s.get('budget'), '{:.4g}')}")
+    wins = (pol.get("windows") or {})
+    for lvl in ("page", "warn"):
+        w = wins.get(lvl)
+        if w:
+            print(f"  {lvl}: burn >= {_num(w.get('burn'), '{:g}')} over "
+                  f"{_num(w.get('long_s'), '{:g}')}s AND "
+                  f"{_num(w.get('short_s'), '{:g}')}s windows")
+
+
+def print_states(doc: Dict) -> None:
+    states = doc.get("states") or []
+    print(f"\n== alert states (worst: {doc.get('worst', '?')}) ==")
+    if not states:
+        print("  (no scopes ingested yet)")
+        return
+    print(f"  {'scope':<14}{'slo':<16}{'level':<7}"
+          f"{'burn_pg_long':>13}{'burn_pg_short':>14}"
+          f"{'bad/events':>16}")
+    order = {"page": 0, "warn": 1, "ok": 2}
+    for st in sorted(states, key=lambda s: (order.get(s.get("level"), 3),
+                                            s.get("scope", ""),
+                                            s.get("slo", ""))):
+        burn = st.get("burn") or {}
+        print(f"  {st.get('scope', '?'):<14}{st.get('slo', '?'):<16}"
+              f"{st.get('level', '?'):<7}"
+              f"{_num(burn.get('page_long')):>13}"
+              f"{_num(burn.get('page_short')):>14}"
+              f"{_num(st.get('bad_total'), '{:g}'):>9}/"
+              f"{_num(st.get('events_total'), '{:g}')}")
+
+
+def print_transitions(doc: Dict, top: int) -> None:
+    trans = doc.get("transitions") or []
+    print(f"\n== {len(trans)} alert transition(s)"
+          + (f" (last {top})" if len(trans) > top else "") + " ==")
+    for ev in trans[-top:]:
+        print(f"  t={_num(ev.get('t_s'), '{:.2f}')}s  "
+              f"{ev.get('scope', '?')}/{ev.get('slo', '?')}: "
+              f"{ev.get('from', '?')} -> {ev.get('to', '?')}  "
+              f"(burn long {_num(ev.get('burn_long'))}, "
+              f"short {_num(ev.get('burn_short'))})")
+
+
+def print_drift(doc: Dict, top: int) -> List[str]:
+    """Per-replica twin-audit verdicts; returns replica ids whose alarm
+    is latched."""
+    drift = doc.get("drift") or {}
+    alarmed: List[str] = []
+    print(f"\n== sim-vs-measured drift ({len(drift)} replica(s)) ==")
+    if not drift:
+        print("  (no replicas reporting)")
+        return alarmed
+    for rid in sorted(drift):
+        d = drift[rid]
+        ratio = d.get("sim_drift_ratio")
+        alarm = bool(d.get("sim_drift_alarm"))
+        if alarm:
+            alarmed.append(rid)
+        try:
+            calibrated = ratio is not None and not math.isnan(float(ratio))
+        except (TypeError, ValueError):
+            calibrated = False
+        verdict = ("ALARM" if alarm
+                   else "ok" if calibrated else "uncalibrated")
+        print(f"  replica {rid}: {verdict:<13}"
+              f"ratio {_num(ratio):<8}"
+              f"cusum {_num(d.get('sim_drift_cusum')):<8}"
+              f"alarms {_num(d.get('sim_drift_alarms'), '{:g}'):<4}"
+              f"ticks {_num(d.get('sim_drift_ticks'), '{:g}')}")
+        for ev in (d.get("events") or [])[-top:]:
+            print(f"    t={_num(ev.get('t_s'), '{:.2f}')}s  "
+                  f"{ev.get('direction', '?')}  "
+                  f"ratio {_num(ev.get('ratio'))}  "
+                  f"cusum {_num(ev.get('cusum'))}")
+    return alarmed
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("payload",
+                    help="/debug/slo JSON path (api_bench --slo writes "
+                         "<out>.slo.json), or - for stdin")
+    ap.add_argument("--top", type=int, default=20,
+                    help="transitions / drift events to list (default 20)")
+    ap.add_argument("--strict", action="store_true",
+                    help="exit 1 if any scope is at page level or any "
+                         "replica's drift alarm is latched")
+    args = ap.parse_args(argv)
+
+    doc = load(args.payload)
+    print_slos(doc)
+    print_states(doc)
+    print_transitions(doc, args.top)
+    alarmed = print_drift(doc, args.top)
+
+    paged = doc.get("worst") == "page"
+    print(f"\nverdict: worst alert level {doc.get('worst', '?')}, "
+          f"{len(alarmed)} replica(s) with latched drift alarm")
+    if args.strict and (paged or alarmed):
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
